@@ -1,0 +1,19 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def noisy_images(n: int, h: int, w: int, seed: int = 0) -> list:
+    """n noisy observations of the same smooth scene (stacking input)."""
+    rng = np.random.default_rng(seed)
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float64) / max(h, w)
+    scene = (
+        np.sin(9 * xx + 3 * yy)
+        + 0.6 * np.cos(14 * yy - 4 * xx * xx)
+        + np.exp(-((xx - 0.5) ** 2 + (yy - 0.4) ** 2) * 12)
+    )
+    return [
+        (scene + rng.normal(0, 0.15, (h, w))).astype(np.float32)
+        for _ in range(n)
+    ]

@@ -1,0 +1,57 @@
+"""Fig. 2 / Table 2 breakdown analog: where the time goes per algorithm.
+
+Modeled phase shares (compression / communication / reduction / other) for
+CPRP2P, C-Coll, gZ-Ring and gZ-ReDoub at the paper's 64-GPU, 646 MB point.
+Reproduces the paper's observations: CPRP2P dominated by CPR; C-Coll
+dominated by host-device staging (~45%); gZ-Ring CPR-heavy (84% in
+Table 2); gZ-ReDoub balanced between CPR and comm.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core import cost_model as cm
+
+HW = cm.A100_SLINGSHOT
+R = 30.0
+D = 646e6
+N = 64
+
+
+def _shares(cmpr, comm, redu, stage=0.0):
+    tot = cmpr + comm + redu + stage
+    return (
+        f"cmpr={cmpr/tot:.1%};comm={comm/tot:.1%};redu={redu/tot:.1%};"
+        f"other={stage/tot:.1%}", tot
+    )
+
+
+def run(csv_rows: list):
+    ch = D / N
+    # CPRP2P: compress+decompress around every hop
+    cmpr = 2 * (N - 1) * (cm.t_compress(ch, HW) + cm.t_decompress(ch, HW))
+    comm = 2 * (N - 1) * cm.t_net(ch / R, HW)
+    redu = (N - 1) * cm.t_reduce(ch, HW)
+    s, tot = _shares(cmpr, comm, redu)
+    csv_rows.append(("fig2_breakdown_cprp2p", tot * 1e6, s))
+
+    # C-Coll: adds PCIe staging
+    stage = 2 * (N - 1) * 2 * ch / (HW.pcie_gbps * 1e9 / 8)
+    cmpr = N * cm.t_compress(ch, HW) + (2 * N - 2) * cm.t_decompress(ch, HW)
+    comm = 2 * (N - 1) * cm.t_net(ch / R, HW)
+    s, tot = _shares(cmpr, comm, redu, stage)
+    csv_rows.append(("fig2_breakdown_ccoll", tot * 1e6, s))
+
+    # gZ-Ring (Table 2: cmpr-dominated)
+    cmpr = N * cm.t_compress(ch, HW) + (2 * N - 2) * cm.t_decompress(ch, HW)
+    comm = 2 * (N - 1) * cm.t_net(ch / R, HW)
+    s, tot = _shares(cmpr, comm, redu)
+    csv_rows.append(("table2_breakdown_gz_ring", tot * 1e6, s))
+
+    # gZ-ReDoub (Table 2: cmpr ~43%, comm ~46%)
+    k = math.ceil(math.log2(N))
+    cmpr = k * (cm.t_compress(D, HW) + cm.t_decompress(D, HW))
+    comm = k * cm.t_net(D / R, HW)
+    redu = k * cm.t_reduce(D, HW)
+    s, tot = _shares(cmpr, comm, redu)
+    csv_rows.append(("table2_breakdown_gz_redoub", tot * 1e6, s))

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (per the repo convention);
+derived packs the figure-specific metrics (speedups, ratios, PSNR...).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (
+    allreduce_bench,
+    breakdown,
+    compressor_char,
+    image_stacking,
+    moe_a2a_ablation,
+    scatter_bench,
+    table1_ratio,
+)
+
+MODULES = [
+    ("fig3_compressor_characterization", compressor_char),
+    ("fig2_breakdown", breakdown),
+    ("fig7_9_10_allreduce", allreduce_bench),
+    ("fig11_12_scatter", scatter_bench),
+    ("table1_compression_ratio", table1_ratio),
+    ("table2_fig13_image_stacking", image_stacking),
+    ("beyond_moe_a2a_ablation", moe_a2a_ablation),
+]
+
+
+def main() -> None:
+    rows = []
+    failed = []
+    for name, mod in MODULES:
+        try:
+            mod.run(rows)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Figs. 11/12 analogs: gZ-Scatter vs Cray-MPI-model binomial scatter."""
+from __future__ import annotations
+
+from repro.core import cost_model as cm
+
+HW = cm.A100_SLINGSHOT
+RATIO = 60.0
+
+
+def run(csv_rows: list):
+    # Fig 11: message sizes at 64 GPUs
+    for mb in [50, 100, 200, 400, 600]:
+        d = mb * 1e6
+        gz = cm.scatter_binomial_gz(d, 64, RATIO, HW)
+        base = cm.scatter_uncompressed_binomial(d, 64, HW)
+        csv_rows.append(
+            (f"fig11_scatter_{mb}MB_64gpu", gz * 1e6,
+             f"speedup_vs_cray={base/gz:.2f}")
+        )
+    # Fig 12: GPU counts at 646 MB
+    d = 646e6
+    speedups = {}
+    for n in [8, 16, 32, 64, 128, 256, 512]:
+        gz = cm.scatter_binomial_gz(d, n, RATIO, HW)
+        base = cm.scatter_uncompressed_binomial(d, n, HW)
+        speedups[n] = base / gz
+        csv_rows.append(
+            (f"fig12_scatter_646MB_{n}gpu", gz * 1e6,
+             f"speedup_vs_cray={base/gz:.2f}")
+        )
+    # paper shape: speedup rises then falls with GPU count, always > 1
+    assert all(s > 1 for s in speedups.values())

@@ -1,0 +1,55 @@
+"""gZ-Scatter as the data plane: the root rank holds a global float batch
+(e.g. precomputed embeddings / science fields) and distributes per-rank
+shards through the compressed binomial tree (paper §3.3.4, Fig. 5).
+
+    PYTHONPATH=src python examples/data_scatter.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if os.environ.get("XLA_FLAGS", "").find("device_count") < 0:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.collectives import GZConfig, gz_scatter
+from repro.core.shmap import shard_map
+
+N = 8
+CHUNK = 64 * 1024
+
+
+def main():
+    mesh = jax.make_mesh((N,), ("x",))
+    rng = np.random.default_rng(0)
+    full = np.cumsum(rng.normal(0, 0.01, N * CHUNK)).astype(np.float32)
+    xin = np.zeros((N, N * CHUNK), np.float32)
+    xin[0] = full  # only the root's row is significant
+
+    cfg = GZConfig(eb=1e-4, capacity_factor=0.6)
+
+    def body(x):
+        out, ovf = gz_scatter(x[0], "x", cfg, return_info=True)
+        return out, ovf[None]
+
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("x", None),),
+                          out_specs=(P("x"), P("x"))))
+    out, ovf = f(xin)
+    out = np.asarray(out).reshape(N, CHUNK)
+    assert not np.asarray(ovf).any(), "capacity overflow"
+    err = np.abs(out - full.reshape(N, CHUNK)).max()
+    print(f"scattered {full.nbytes/1e6:.1f} MB to {N} ranks, "
+          f"max err {err:.2e} (eb=1e-4)")
+    assert err <= 1e-4 + np.abs(full).max() * 2e-7
+    print("every rank received its chunk through ONE lossy hop")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""Splice generated tables (dry-run, roofline, perf) into EXPERIMENTS.md."""
+from __future__ import annotations
+
+import io
+import json
+import os
+import sys
+from contextlib import redirect_stdout
+
+sys.path.insert(0, "scripts")
+import roofline_table  # noqa: E402
+
+
+def dryrun_tables() -> str:
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        sys.argv = ["roofline_table.py", "results/dryrun"]
+        roofline_table.main()
+    return buf.getvalue()
+
+
+def _load(tag):
+    p = f"results/dryrun/{tag}.json"
+    return json.load(open(p)) if os.path.exists(p) else None
+
+
+def perf_log() -> str:
+    rows = []
+
+    def add(title, base_tag, steps):
+        base = _load(base_tag)
+        out = [f"\n### {title}\n"]
+        if base is None:
+            return "\n(missing baseline)\n"
+        b = base["roofline"]
+        out.append(
+            f"Baseline `{base_tag}`: compute {b['compute_s']:.4f}s, "
+            f"memory {b['memory_s']:.4f}s, collective {b['collective_s']:.4f}s "
+            f"— dominant **{b['dominant']}**, useful-FLOPs "
+            f"{base['useful_flops_frac']:.4f}.\n"
+        )
+        prev = base
+        for hyp, tag, verdict_hint in steps:
+            r = _load(tag)
+            if r is None:
+                out.append(f"* `{tag}`: MISSING\n")
+                continue
+            ro, po = r["roofline"], prev["roofline"]
+            out.append(
+                f"* **hypothesis:** {hyp}\n"
+                f"  **change:** `{tag.split('_single_')[-1]}` → "
+                f"compute {po['compute_s']:.4f}→{ro['compute_s']:.4f}s, "
+                f"memory {po['memory_s']:.4f}→{ro['memory_s']:.4f}s, "
+                f"collective {po['collective_s']:.4f}→{ro['collective_s']:.4f}s, "
+                f"useful-FLOPs {prev['useful_flops_frac']:.4f}→"
+                f"{r['useful_flops_frac']:.4f}.\n"
+                f"  **verdict:** {verdict_hint}\n"
+            )
+            prev = r
+        return "".join(out)
+
+    s = ""
+    s += add(
+        "H1 — deepseek-67b / long_500k (most collective-bound)",
+        "deepseek-67b_long_500k_single",
+        [
+            (
+                "the 0.457 s collective term is per-token FSDP weight "
+                "gathers (95 layers × all-gather over data for ONE token); "
+                "serving should keep weights resident (params fit: 67B bf16 "
+                "/ 16 TP = 8.4 GB/chip)",
+                "deepseek-67b_long_500k_single_h1-nofsdp",
+                "CONFIRMED — collective 0.457s→0.0001s (~4000x); dominant "
+                "term flips to memory; end-to-end roofline bound 0.457s→"
+                "0.125s (3.7x).",
+            ),
+            (
+                "remaining memory term includes KV reads; bf16 cache should "
+                "halve cache traffic",
+                "deepseek-67b_long_500k_single_h1-nofsdp-bf16cache",
+                "REFUTED — memory 0.1246s→0.1244s (<1%): with an 8192-token "
+                "sliding window the cache is tiny next to the per-token "
+                "weight reads; weight traffic dominates. (Lesson: quantize "
+                "weights, not the cache, for long-context decode.)",
+            ),
+        ],
+    )
+    s += add(
+        "H2 — minicpm3-4b / prefill_32k (worst useful-FLOPs fraction)",
+        "minicpm3-4b_prefill_32k_single",
+        [
+            (
+                "dense MLA materializes (B,H,32768,32768) scores; "
+                "flash-chunking the latent attention (napkin: scores are "
+                "~86 GB f32 per layer vs ~0.4 GB/chunk) should collapse the "
+                "memory term and the remat-recompute flops",
+                "minicpm3-4b_prefill_32k_single_h2-chunked",
+                "CONFIRMED — memory 97.6s→25.3s (3.9x), compute 9.97s→1.36s "
+                "(7.4x — the dense scores were recomputed under remat), "
+                "useful-FLOPs 0.063→0.465.",
+            ),
+            (
+                "with the attention now O(S) memory, full remat is pure "
+                "overhead: dropping it removes the recompute AND the "
+                "re-gathers of FSDP weights in the bwd pass",
+                "minicpm3-4b_prefill_32k_single_h2-chunked-noremat",
+                "CONFIRMED — compute 1.36s→1.05s, collective 4.23s→3.40s "
+                "(bwd re-gathers gone), memory 25.3s→24.6s; useful-FLOPs "
+                "0.60.  Next candidate (not yet applied): sequence-chunked "
+                "vocab-parallel loss — the (B,S,V_local) f32 logits are the "
+                "largest remaining single tensor.",
+            ),
+        ],
+    )
+    base3 = _load("deepseek-67b_train_4k_single")
+    s += add(
+        "H3 — deepseek-67b / train_4k (the paper's technique on the "
+        "gradient path)",
+        "deepseek-67b_train_4k_single",
+        [
+            (
+                "PAPER-FAITHFUL: route FSDP grad reduce-scatter + param "
+                "allgather and small-leaf grad allreduce through gZ "
+                "(ReDoub for allreduce, ring for gather/scatter, eb 1e-4, "
+                "capacity 0.6); wire bytes should scale with the capacity "
+                "factor (0.6x f32 = 2.4 B/elem vs 2 B/elem bf16 psum — "
+                "napkin says roughly break-even on wire, the win is "
+                "compression headroom)",
+                "deepseek-67b_train_4k_single_gz-redoub_fsdpgz_h3-paper-redoub",
+                "see numbers — static capacity provisioning means XLA moves "
+                "capacity bytes; the TRUE compressed payload (nwords) is "
+                "what a ragged transport moves (DESIGN.md §2.1).",
+            ),
+            (
+                "PAPER-FAITHFUL (Ring): same but ring allreduce for grads",
+                "deepseek-67b_train_4k_single_gz-ring_fsdpgz_h3-paper-ring",
+                "ring vs redoub wire comparison on the collective term.",
+            ),
+            (
+                "BEYOND-PAPER: intring (single quantization, bitwise "
+                "rank-consistent) + capacity 0.25 (4 bits/weight-grad "
+                "effective) — should cut the collective term vs baseline "
+                "while FIXING the paper's rank-divergence",
+                "deepseek-67b_train_4k_single_gz-intring_fsdpgz_h3-beyond-intring",
+                "PARTIALLY REFUTED — collective 20.99s→20.53s (2.2%): HLO "
+                "inspection showed TP *activation* psums are ~93% of the "
+                "collective term on this mesh; the weight-gather/grad bytes "
+                "the paper's technique compresses are the remaining ~7%. "
+                "Lesson: at tp=16 with per-layer FSDP gathers inside the "
+                "scan, gradient compression is not where train-step "
+                "collective time lives — which redirects the next "
+                "hypothesis at the activations themselves.",
+            ),
+            (
+                "BEYOND-PAPER (structural, from the refuted hypothesis): "
+                "PaLM-style parallel attention+MLP blocks sum both partials "
+                "before ONE shared TP psum per layer — napkin: halves "
+                "activation-psum bytes fwd and bwd",
+                "deepseek-67b_train_4k_single_h3b-parallelblock",
+                "CONFIRMED — collective 20.99s→8.75s (2.4x: bwd transposes "
+                "halve too), memory 43.4s→36.8s, useful-FLOPs 0.575→0.586. "
+                "Note this changes the function (recorded as an opt-in "
+                "`parallel_block` variant, off for the faithful configs).",
+            ),
+        ],
+    )
+    return s
+
+
+def main():
+    md = open("EXPERIMENTS.md").read()
+    md = md.replace("<!-- DRYRUN_TABLES -->", dryrun_tables())
+    md = md.replace("<!-- PERF_LOG -->", perf_log())
+    open("EXPERIMENTS.md", "w").write(md)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

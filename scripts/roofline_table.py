@@ -1,0 +1,95 @@
+"""Render the §Dry-run / §Roofline tables from results/dryrun/*.json.
+
+    python scripts/roofline_table.py [results/dryrun] > table.md
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ARCH_ORDER = [
+    "seamless-m4t-medium", "llama4-scout-17b-a16e", "zamba2-2.7b",
+    "minitron-8b", "minicpm3-4b", "mamba2-780m", "internlm2-20b",
+    "deepseek-67b", "phi3.5-moe-42b-a6.6b", "internvl2-26b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def fmt_b(x):
+    for unit, div in [("GB", 1e9), ("MB", 1e6), ("KB", 1e3)]:
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    rows = {}
+    for fn in os.listdir(d):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(d, fn)) as f:
+            r = json.load(f)
+        key = (r["arch"], r["shape"], r["mesh"],
+               r.get("grad_gz"), r.get("fsdp_gz"), fn)
+        rows[key] = r
+
+    print("### Single-pod (16x16) roofline baselines\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "HLO flops/dev | HBM/dev | coll B/dev | useful frac | "
+          "peak temp | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = next(
+                (v for k, v in rows.items()
+                 if k[0] == arch and k[1] == shape and k[2] == "16x16"
+                 and k[3] is None and not k[4]),
+                None,
+            )
+            if r is None:
+                print(f"| {arch} | {shape} | MISSING | | | | | | | | | |")
+                continue
+            ro = r["roofline"]
+            uf = r.get("useful_flops_frac")
+            temp = r.get("memory_analysis", {}).get("temp_size_in_bytes", 0)
+            print(
+                f"| {arch} | {shape} | {fmt_s(ro['compute_s'])} | "
+                f"{fmt_s(ro['memory_s'])} | {fmt_s(ro['collective_s'])} | "
+                f"**{ro['dominant']}** | {r['corrected']['flops']:.2e} | "
+                f"{fmt_b(r['corrected']['hbm'])} | "
+                f"{fmt_b(r['corrected']['coll'])} | "
+                f"{uf:.3f} | {fmt_b(temp)} | {r['compile_s']:.0f} |"
+            )
+
+    print("\n### Multi-pod (2x16x16) lowering proof\n")
+    print("| arch | shape | compiled | collective kinds (counted-once) | compile s |")
+    print("|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = next(
+                (v for k, v in rows.items()
+                 if k[0] == arch and k[1] == shape and k[2] == "2x16x16"),
+                None,
+            )
+            if r is None:
+                print(f"| {arch} | {shape} | MISSING | | |")
+                continue
+            kinds = ", ".join(
+                f"{k}x{v}" for k, v in sorted(
+                    r.get("collective_counts_once", {}).items())
+            )
+            print(f"| {arch} | {shape} | yes | {kinds} | {r['compile_s']:.0f} |")
+
+
+if __name__ == "__main__":
+    main()

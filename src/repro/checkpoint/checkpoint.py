@@ -1,0 +1,67 @@
+"""Minimal sharded-pytree checkpointing (local filesystem, npz-per-leaf).
+
+Saves each leaf as a .npy under a directory keyed by its tree path, plus a
+manifest.  Works for params + optimizer state + step counters.  Restore
+validates shapes/dtypes against the live tree.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step"]
+
+
+def _key(path) -> str:
+    s = jax.tree_util.keystr(path)
+    return re.sub(r"[^A-Za-z0-9_.-]+", "_", s).strip("_")
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    manifest = {}
+    for path, leaf in leaves:
+        k = _key(path)
+        arr = np.asarray(leaf)
+        dtype = str(arr.dtype)
+        if dtype == "bfloat16":  # numpy can't round-trip ml_dtypes natively
+            arr = arr.view(np.uint16)
+        np.save(os.path.join(d, k + ".npy"), arr)
+        manifest[k] = {"shape": list(arr.shape), "dtype": dtype}
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": manifest}, f, indent=1)
+    return d
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(n.split("_")[1]) for n in os.listdir(ckpt_dir) if n.startswith("step_")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like):
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)["leaves"]
+    import ml_dtypes
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, leaf in paths:
+        k = _key(path)
+        arr = np.load(os.path.join(d, k + ".npy"))
+        if manifest[k]["dtype"] == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        want = tuple(np.shape(leaf))
+        assert tuple(arr.shape) == want, f"{k}: ckpt {arr.shape} != live {want}"
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)

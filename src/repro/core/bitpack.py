@@ -1,0 +1,109 @@
+"""Dense variable-bitwidth bit packing/unpacking (vectorized jnp).
+
+This is the wire-format half of the cuSZp-adapted compressor: each block of
+``B`` zigzag-encoded uint32 codes is packed at its own per-block bitwidth
+``b_i`` into a single dense uint32 word stream.  Block *i*'s element *j*
+occupies bits ``[off_i + j*b_i, off_i + (j+1)*b_i)`` where
+``off_i = sum_{k<i} B*b_k``.
+
+The pack target is a *statically provisioned* capacity buffer (see
+DESIGN.md §2.1): XLA SPMD cannot move ragged payloads, so the true
+compressed size travels alongside as ``nwords`` and overflow is detected,
+never silent.
+
+All routines are shape-polymorphic pure functions of jnp arrays and are
+used both by the Pallas ``ops`` wrappers and by the pure-jnp reference
+oracle, so they are themselves oracle-tested against a python loop in
+``tests/test_bitpack.py``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["pack", "unpack", "packed_words"]
+
+
+def _u32(x):
+    return x.astype(jnp.uint32)
+
+
+def packed_words(bitwidth: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Total uint32 words needed for dense packing (int32 scalar)."""
+    total_bits = jnp.sum(bitwidth.astype(jnp.int32)) * block
+    return ((total_bits + 31) // 32).astype(jnp.int32)
+
+
+# Bit positions are int32: a single pack() call is limited to 2**31 bits of
+# packed stream (== 64M fully-incompressible f32 elements, 256 MiB).  The
+# collective layer always chunks payloads far below this (grad_sync chunks
+# at <= 4M elements); asserted in ``pack``.
+def _positions(bitwidth: jnp.ndarray, block: int):
+    """Per-element absolute bit position, word index and intra-word shift.
+
+    Returns (word, shift, bw) each of shape (n_blocks, block), where ``bw``
+    is the per-element copy of its block bitwidth.
+    """
+    bits_per_block = bitwidth.astype(jnp.int32) * block
+    block_off = jnp.cumsum(bits_per_block) - bits_per_block  # exclusive
+    j = jnp.arange(block, dtype=jnp.int32)
+    bitpos = block_off[:, None] + j[None, :] * bitwidth.astype(jnp.int32)[:, None]
+    word = (bitpos >> 5).astype(jnp.int32)
+    shift = (bitpos & 31).astype(jnp.uint32)
+    bw = jnp.broadcast_to(bitwidth[:, None], bitpos.shape).astype(jnp.uint32)
+    return word, shift, bw
+
+
+def pack(codes: jnp.ndarray, bitwidth: jnp.ndarray, capacity_words: int):
+    """Pack per-block-bitwidth codes densely into a uint32 buffer.
+
+    Args:
+      codes: uint32 (n_blocks, block), each value < 2**bitwidth[i].
+      bitwidth: int32 (n_blocks,), in [0, 32].
+      capacity_words: static capacity of the output buffer.
+
+    Returns:
+      (packed uint32[capacity_words], nwords int32 scalar).  If
+      ``nwords > capacity_words`` the overflowing words are dropped (callers
+      must check the returned size; see ``Compressed.overflowed``).
+    """
+    n_blocks, block = codes.shape
+    assert n_blocks * block <= (1 << 26), (
+        "single pack() call limited to 64M elements; chunk the payload"
+    )
+    word, shift, bw = _positions(bitwidth, block)
+    mask = jnp.where(
+        bw == 0,
+        jnp.uint32(0),
+        jnp.uint32(0xFFFFFFFF) >> jnp.minimum(32 - bw, jnp.uint32(31)),
+    )
+    u = _u32(codes) & mask  # defensive: stray high bits would corrupt neighbours
+    # A value of width b at intra-word shift s straddles at most two words
+    # (b <= 32): low part u<<s, high part u>>(32-s) (only when s>0).
+    lo = u << shift
+    safe = jnp.minimum(32 - shift, jnp.uint32(31))
+    hi = jnp.where(shift == 0, jnp.uint32(0), u >> safe)
+    packed = jnp.zeros((capacity_words,), jnp.uint32)
+    flat_word = word.reshape(-1)
+    # Disjoint bit-ranges ==> OR == ADD; scatter-add is a single XLA op.
+    packed = packed.at[flat_word].add(lo.reshape(-1), mode="drop")
+    packed = packed.at[flat_word + 1].add(hi.reshape(-1), mode="drop")
+    return packed, packed_words(bitwidth, block)
+
+
+def unpack(packed: jnp.ndarray, bitwidth: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Inverse of :func:`pack`.  Returns uint32 (n_blocks, block)."""
+    n_words = packed.shape[0]
+    word, shift, bw = _positions(bitwidth, block)
+    w0 = jnp.clip(word, 0, n_words - 1)
+    w1 = jnp.clip(word + 1, 0, n_words - 1)
+    lo = packed[w0] >> shift
+    safe = jnp.minimum(32 - shift, jnp.uint32(31))
+    hi = jnp.where(shift == 0, jnp.uint32(0), packed[w1] << safe)
+    mask = jnp.where(
+        bw == 0,
+        jnp.uint32(0),
+        jnp.uint32(0xFFFFFFFF) >> jnp.minimum(32 - bw, jnp.uint32(31)),
+    )
+    # bw==32 -> full mask; the >> above yields 0xFFFFFFFF for bw==32 already
+    # (32-bw==0). bw==0 handled explicitly.
+    return (lo | hi) & mask

@@ -1,0 +1,596 @@
+"""gZCCL compressed collectives as shard_map-level JAX primitives.
+
+Every collective here is written *rank-centric*: it is per-device code that
+runs inside a ``jax.shard_map`` body over a named mesh axis, moving
+``Compressed`` pytrees with ``jax.lax.ppermute``.  This is the TPU-native
+translation of the paper's MPI send/recv patterns (DESIGN.md §2):
+
+  gz_allreduce  algo="redoub"   recursive doubling — log2(N) full-message
+                                 compressions (paper's headline gZ-Allreduce)
+                algo="ring"      ring reduce-scatter + ring allgather —
+                                 (N-1)+1 chunk compressions (paper's
+                                 gZ-Allreduce (Ring))
+                algo="intring"   BEYOND-PAPER: quantize once, ring-allreduce
+                                 the integer codes losslessly — single lossy
+                                 hop, bitwise rank-consistent, error <= eb
+                                 per addend
+                algo="auto"      cost-model selection (core/selector.py)
+  gz_reduce_scatter / gz_allgather   the two ring stages standalone
+  gz_scatter    binomial tree, per-chunk compression (paper's gZ-Scatter;
+                the batched quantize over all chunks is the multi-stream
+                analog — one pallas_call covers what N CUDA streams did)
+  gz_broadcast  binomial tree, compress once at root
+
+Axis sizes must be powers of two (the production meshes are 16/16/2); the
+paper's non-power-of-two remainder stage is not needed on pod-shaped
+meshes and is not implemented.
+
+Consistency note (recorded in DESIGN.md): like the paper's gZ-Allreduce,
+"redoub" and "ring" produce rank-wise results that agree only within the
+accumulated error bound (each rank adds *its partner's* requantized data).
+"intring" is exact-sum-of-quantized, hence bitwise identical on every rank
+— that property is why it exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import bitpack, error_budget
+from repro.core.compressed import Compressed, capacity_words_for
+from repro.core.compressor import DEFAULT, ErrorBoundedLorenzo
+from repro.kernels import ops
+from repro.kernels.ref import bitwidth_of as _ref_bitwidth
+
+__all__ = [
+    "GZConfig",
+    "gz_allreduce",
+    "gz_reduce_scatter",
+    "gz_allgather",
+    "gz_scatter",
+    "gz_broadcast",
+    "gz_all_to_all",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class GZConfig:
+    """Knobs for the compressed-collective layer.
+
+    eb is the *end-to-end* absolute error bound; per-stage budgets are
+    derived via core.error_budget (accuracy-aware design, paper §3.3.3).
+    """
+
+    eb: float = 1e-4
+    capacity_factor: float = 0.6
+    algo: str = "auto"  # auto | redoub | ring | intring
+    worst_case_budget: bool = True
+
+    def compressor(self) -> ErrorBoundedLorenzo:
+        return ErrorBoundedLorenzo(capacity_factor=self.capacity_factor)
+
+
+def _axis_size(axis_name) -> int:
+    return lax.axis_size(axis_name)
+
+
+def _ppermute(tree, axis_name, perm):
+    return jax.tree.map(lambda a: lax.ppermute(a, axis_name, perm), tree)
+
+
+def _ring_perm(n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def _is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+# ---------------------------------------------------------------------------
+# Allreduce — collective computation (paper §3.3.3 / Fig. 4)
+# ---------------------------------------------------------------------------
+
+
+def _allreduce_redoub(x, axis_name, cfg: GZConfig):
+    """Recursive-doubling gZ-Allreduce: log2(N) full-message compressions.
+
+    Per step: compress local running sum, exchange with the XOR partner,
+    fused decompress+reduce into the local sum.  Full-message compression
+    keeps the compressor saturated — the paper's core scalability insight.
+    """
+    n = _axis_size(axis_name)
+    comp = cfg.compressor()
+    eb_stage = error_budget.allocate(
+        cfg.eb, "allreduce_redoub", n, worst_case=cfg.worst_case_budget
+    )
+    steps = int(math.log2(n))
+    acc = x
+    overflow = jnp.zeros((), jnp.bool_)
+    for k in range(steps):
+        dist = 1 << k
+        perm = [(i, i ^ dist) for i in range(n)]
+        c = comp.compress(acc, eb_stage)
+        overflow |= c.overflowed()
+        c_recv = _ppermute(c, axis_name, perm)
+        acc = comp.decompress_reduce(c_recv, acc)
+    return acc, overflow
+
+
+def _chunk(x, idx, chunk_n):
+    return lax.dynamic_slice(x, (idx * chunk_n,), (chunk_n,))
+
+
+def _set_chunk(x, val, idx, chunk_n):
+    return lax.dynamic_update_slice(x, val, (idx * chunk_n,))
+
+
+def _pad_to_chunks(x, n):
+    total = -(-x.shape[0] // n) * n
+    return jnp.zeros((total,), x.dtype).at[: x.shape[0]].set(x), total // n
+
+
+def _reduce_scatter_ring(x, axis_name, cfg: GZConfig, eb_stage, *, owner_offset=0):
+    """Ring reduce-scatter with per-hop compression of the running chunk sum.
+
+    Returns (acc, chunk_n, overflow): rank r's fully-reduced chunk is at
+    index (r + 1 + owner_offset) % N of its local acc.  (N-1) compressions
+    of size D/N each — the regime where the paper shows compressor
+    under-utilization.
+    """
+    n = _axis_size(axis_name)
+    comp = cfg.compressor()
+    r = lax.axis_index(axis_name)
+    acc, chunk_n = _pad_to_chunks(x, n)
+    perm = _ring_perm(n)
+    overflow = jnp.zeros((), jnp.bool_)
+    t = owner_offset
+
+    def body(s, carry):
+        acc, overflow = carry
+        send_idx = (r - s + t) % n
+        recv_idx = (r - s - 1 + t) % n
+        c = comp.compress(_chunk(acc, send_idx, chunk_n), eb_stage)
+        overflow |= c.overflowed()
+        c_recv = _ppermute(c, axis_name, perm)
+        updated = comp.decompress_reduce(c_recv, _chunk(acc, recv_idx, chunk_n))
+        return _set_chunk(acc, updated, recv_idx, chunk_n), overflow
+
+    acc, overflow = lax.fori_loop(0, n - 1, body, (acc, overflow))
+    return acc, chunk_n, overflow
+
+
+def _allreduce_ring(x, axis_name, cfg: GZConfig):
+    """Ring gZ-Allreduce: reduce-scatter stage + allgather-forwarding stage.
+
+    The allgather stage compresses exactly once (owner) and forwards the
+    *compressed* payload N-1 times (no recompression — the paper's
+    data-movement framework), so it adds exactly one lossy hop.
+    """
+    n = _axis_size(axis_name)
+    comp = cfg.compressor()
+    hops = error_budget.lossy_hops("allreduce_ring", n)
+    eb_stage = cfg.eb / hops if cfg.worst_case_budget else cfg.eb / math.sqrt(hops)
+    r = lax.axis_index(axis_name)
+
+    acc, chunk_n, overflow = _reduce_scatter_ring(x, axis_name, cfg, eb_stage)
+    own_idx = (r + 1) % n
+
+    # Allgather stage: compress own reduced chunk once; every rank (owner
+    # included) uses the decompressed version so all ranks see the same
+    # values for this chunk.
+    c_own = comp.compress(_chunk(acc, own_idx, chunk_n), eb_stage)
+    overflow |= c_own.overflowed()
+    acc = _set_chunk(acc, comp.decompress(c_own), own_idx, chunk_n)
+    perm = _ring_perm(n)
+
+    def body(s, carry):
+        acc, c_cur = carry
+        c_new = _ppermute(c_cur, axis_name, perm)
+        recv_idx = (r - s) % n  # chunk owned by rank (r - 1 - s)
+        acc_new = _set_chunk(acc, comp.decompress(c_new), recv_idx, chunk_n)
+        return acc_new, c_new
+
+    acc, _ = lax.fori_loop(0, n - 1, body, (acc, c_own))
+    return acc[: x.shape[0]], overflow
+
+
+def _allreduce_intring(x, axis_name, cfg: GZConfig):
+    """BEYOND-PAPER integer-domain ring allreduce.
+
+    Quantize once (the only lossy step), then ring-reduce-scatter +
+    ring-allgather the *integer Lorenzo-delta codes* with lossless
+    repacking.  Lorenzo deltas are linear (delta(a+b) = delta(a)+delta(b))
+    and anchors add, so summation happens entirely in the delta domain and
+    reconstruction (anchor + cumsum) is done once at the end.  Properties
+    the paper's algorithms lack:
+
+      * bitwise-identical result on every rank (int sums are exact), and
+      * a single quantization grid — error vs the true sum is the sum of N
+        independent initial quantization errors (<= N*eb worst case,
+        ~sqrt(N)*eb statistically) with NO stacked requantization noise.
+
+    Wire width grows by at most log2(step) bits per block over the ring.
+    """
+    n = _axis_size(axis_name)
+    r = lax.axis_index(axis_name)
+    eb = jnp.float32(cfg.eb)
+    n_orig = x.shape[0]
+    B = ops.BLOCK
+    # Pad so each of the n chunks is a whole number of kernel row-tiles.
+    rows_per_chunk = ops.n_blocks_for(-(-n_orig // n))
+    chunk_n = rows_per_chunk * B
+    xf = jnp.zeros((n * chunk_n,), jnp.float32).at[:n_orig].set(x)
+    # One lossy step: quantize everything (batched over all chunks).
+    zig, _, anchor = ops.quantize(xf.reshape(-1, B), eb)
+    d = (zig >> 1).astype(jnp.int32) ^ (-(zig & 1).astype(jnp.int32))
+    state = (d, anchor)  # delta codes (nrows, B) + anchors (nrows,)
+
+    cap = capacity_words_for(chunk_n, cfg.capacity_factor, B)
+    perm = _ring_perm(n)
+
+    def getc(t, idx):
+        d, a = t
+        return (
+            lax.dynamic_slice(d, (idx * rows_per_chunk, 0), (rows_per_chunk, B)),
+            lax.dynamic_slice(a, (idx * rows_per_chunk,), (rows_per_chunk,)),
+        )
+
+    def setc(t, val, idx):
+        d, a = t
+        dv, av = val
+        return (
+            lax.dynamic_update_slice(d, dv, (idx * rows_per_chunk, 0)),
+            lax.dynamic_update_slice(a, av, (idx * rows_per_chunk,)),
+        )
+
+    def addc(a, b):
+        return (a[0] + b[0], a[1] + b[1])
+
+    def pack_codes(dc):
+        dd, aa = dc
+        z = ((dd << 1) ^ (dd >> 31)).astype(jnp.uint32)
+        bw = _ref_bitwidth(jnp.max(z, axis=1))
+        packed, nwords = bitpack.pack(z, bw, cap)
+        return (packed, bw, aa), nwords
+
+    def unpack_codes(w):
+        packed, bw, aa = w
+        u = bitpack.unpack(packed, bw, B)
+        return ((u >> 1).astype(jnp.int32) ^ (-(u & 1).astype(jnp.int32)), aa)
+
+    overflow = jnp.zeros((), jnp.bool_)
+
+    def rs_body(s, carry):
+        state, overflow = carry
+        send_idx = (r - s) % n
+        recv_idx = (r - s - 1) % n
+        wire, nwords = pack_codes(getc(state, send_idx))
+        overflow |= nwords > cap
+        wire = _ppermute(wire, axis_name, perm)
+        state = setc(state, addc(getc(state, recv_idx), unpack_codes(wire)), recv_idx)
+        return state, overflow
+
+    state, overflow = lax.fori_loop(0, n - 1, rs_body, (state, overflow))
+    own_idx = (r + 1) % n
+    wire, nwords = pack_codes(getc(state, own_idx))
+    overflow |= nwords > cap
+
+    def ag_body(s, carry):
+        state, cur = carry
+        nxt = _ppermute(cur, axis_name, perm)
+        recv_idx = (r - s) % n
+        state = setc(state, unpack_codes(nxt), recv_idx)
+        return state, nxt
+
+    state, _ = lax.fori_loop(0, n - 1, ag_body, (state, wire))
+    d, anchor = state
+    q = anchor[:, None] + jnp.cumsum(d, axis=1)
+    out = (q.astype(jnp.float32) * (2.0 * eb)).reshape(-1)
+    return out[:n_orig], overflow
+
+
+def gz_allreduce(
+    x: jnp.ndarray,
+    axis_name,
+    cfg: GZConfig = GZConfig(),
+    *,
+    return_info: bool = False,
+):
+    """Compression-accelerated allreduce (sum) over a mesh axis.
+
+    Call inside a shard_map body.  ``x`` may have any shape/float dtype;
+    compression runs on the f32 flat view and the result is cast back.
+    """
+    n = _axis_size(axis_name)
+    if n == 1:
+        return (x, jnp.zeros((), jnp.bool_)) if return_info else x
+    assert _is_pow2(n), f"axis {axis_name!r} size {n} must be a power of two"
+    algo = cfg.algo
+    if algo == "auto":
+        from repro.core.selector import select_allreduce
+
+        algo = select_allreduce(x.size * 4, n)
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    if algo == "redoub":
+        out, ovf = _allreduce_redoub(flat, axis_name, cfg)
+    elif algo == "ring":
+        out, ovf = _allreduce_ring(flat, axis_name, cfg)
+    elif algo == "intring":
+        out, ovf = _allreduce_intring(flat, axis_name, cfg)
+    else:
+        raise ValueError(f"unknown allreduce algo {algo!r}")
+    out = out.reshape(shape).astype(dtype)
+    return (out, ovf) if return_info else out
+
+
+# ---------------------------------------------------------------------------
+# Reduce_scatter / Allgather — the ring stages standalone
+# ---------------------------------------------------------------------------
+
+
+def gz_reduce_scatter(
+    x: jnp.ndarray, axis_name, cfg: GZConfig = GZConfig(), *, return_info: bool = False
+):
+    """Ring reduce-scatter: rank r returns the summed chunk r (flat view).
+
+    x: (n*chunk,) per rank (same on-wire layout as lax.psum_scatter with
+    tiled=True over a flat array).
+    """
+    n = _axis_size(axis_name)
+    if n == 1:
+        return (x, jnp.zeros((), jnp.bool_)) if return_info else x
+    assert _is_pow2(n)
+    assert x.ndim == 1 and x.shape[0] % n == 0
+    eb_stage = error_budget.allocate(
+        cfg.eb, "reduce_scatter_ring", n, worst_case=cfg.worst_case_budget
+    )
+    r = lax.axis_index(axis_name)
+    flat = x.astype(jnp.float32)
+    # owner_offset=-1 makes rank r end owning chunk r (see derivation in
+    # _reduce_scatter_ring docstring).
+    acc, chunk_n, ovf = _reduce_scatter_ring(
+        flat, axis_name, cfg, eb_stage, owner_offset=-1
+    )
+    out = _chunk(acc, r % n, chunk_n).astype(x.dtype)
+    return (out, ovf) if return_info else out
+
+
+def gz_allgather(
+    x: jnp.ndarray, axis_name, cfg: GZConfig = GZConfig(), *, return_info: bool = False
+):
+    """Ring allgather: compress once, forward compressed N-1 times.
+
+    x: (chunk,) per rank -> returns (n*chunk,) with rank j's data at slot j.
+    Exactly one lossy hop end-to-end (data-movement framework): the returned
+    slot j holds decompress(compress(x_j)) on *every* rank including j.
+    """
+    n = _axis_size(axis_name)
+    if n == 1:
+        return (x, jnp.zeros((), jnp.bool_)) if return_info else x
+    assert _is_pow2(n)
+    comp = cfg.compressor()
+    r = lax.axis_index(axis_name)
+    dtype = x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    chunk_n = flat.shape[0]
+    out = jnp.zeros((n * chunk_n,), jnp.float32)
+    c_own = comp.compress(flat, cfg.eb)
+    ovf = c_own.overflowed()
+    out = _set_chunk(out, comp.decompress(c_own), r, chunk_n)
+    perm = _ring_perm(n)
+
+    def body(s, carry):
+        out, c_cur = carry
+        c_new = _ppermute(c_cur, axis_name, perm)
+        src = (r - s - 1) % n
+        out = _set_chunk(out, comp.decompress(c_new), src, chunk_n)
+        return out, c_new
+
+    out, _ = lax.fori_loop(0, n - 1, body, (out, c_own))
+    out = out.reshape((n * x.shape[0],) + x.shape[1:]) if x.ndim else out
+    return (out.astype(dtype), ovf) if return_info else out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Scatter / Broadcast — collective data movement (paper §3.3.4 / Fig. 5)
+# ---------------------------------------------------------------------------
+
+
+def gz_scatter(
+    x_full: jnp.ndarray,
+    axis_name,
+    cfg: GZConfig = GZConfig(),
+    *,
+    root: int = 0,
+    return_info: bool = False,
+):
+    """Binomial-tree compressed scatter (gZ-Scatter).
+
+    ``x_full``: (n*chunk,) — significant on the root rank only.  Each of the
+    N chunks is compressed *individually* (compressed streams are not
+    splittable — paper §3.3.4), in ONE batched quantize call: the
+    multi-stream analog.  Blocks travel compressed through the tree and are
+    decompressed exactly once by their final owner.
+    """
+    n = _axis_size(axis_name)
+    if n == 1:
+        return (x_full, jnp.zeros((), jnp.bool_)) if return_info else x_full
+    assert _is_pow2(n) and root == 0, "power-of-two axis, root 0"
+    assert x_full.shape[0] % n == 0
+    comp = cfg.compressor()
+    r = lax.axis_index(axis_name)
+    dtype = x_full.dtype
+    chunk_n = x_full.shape[0] // n
+
+    # Batched per-chunk compression: each chunk padded to whole row-tiles so
+    # chunk boundaries align with block boundaries, then ONE quantize call
+    # over all chunks (the multi-stream analog: what N CUDA streams did in
+    # the paper, one grid does here).
+    rows = ops.n_blocks_for(chunk_n)
+    B = ops.BLOCK
+    chunks = x_full.astype(jnp.float32).reshape(n, chunk_n)
+    x2d = (
+        jnp.zeros((n, rows * B), jnp.float32).at[:, :chunk_n].set(chunks)
+    ).reshape(n * rows, B)
+    codes, bw, anchor = ops.quantize(x2d, cfg.eb)
+    cap = capacity_words_for(chunk_n, cfg.capacity_factor, B)
+    ovf = jnp.zeros((), jnp.bool_)
+    pk_list = []
+    for i in range(n):
+        pk, nw = bitpack.pack(
+            codes[i * rows : (i + 1) * rows], bw[i * rows : (i + 1) * rows], cap
+        )
+        pk_list.append(pk)
+        ovf |= nw > cap
+    held_packed = jnp.stack(pk_list)  # (n, cap)
+    held_bw = bw.reshape(n, rows)
+    held_anchor = anchor.reshape(n, rows)
+
+    # Binomial tree: round k (from top) ships 2**k chunks from each sender
+    # i (i % 2**(k+1) == 0) to i + 2**k.  Payload shrinks by half each
+    # round — each round is its own static ppermute shape.
+    steps = int(math.log2(n))
+    for k in reversed(range(steps)):
+        span = 1 << k
+        perm = [(i, i + span) for i in range(n) if i % (span * 2) == 0]
+        start = (r + span) % n  # sender's outgoing slab start (own rank + span)
+        slab = jax.tree.map(
+            lambda h: lax.dynamic_slice(h, (start,) + (0,) * (h.ndim - 1), (span,) + h.shape[1:]),
+            (held_packed, held_bw, held_anchor),
+        )
+        recv = _ppermute(slab, axis_name, perm)
+        # Receivers (r % 2**(k+1) == span) install the slab at their own rank
+        # index; everyone else keeps their buffer.
+        is_recv = (r % (span * 2)) == span
+        installed = jax.tree.map(
+            lambda h, rv: lax.dynamic_update_slice(h, rv, (r,) + (0,) * (h.ndim - 1)),
+            (held_packed, held_bw, held_anchor),
+            recv,
+        )
+        held_packed, held_bw, held_anchor = jax.tree.map(
+            lambda new, old: jnp.where(is_recv, new, old),
+            installed,
+            (held_packed, held_bw, held_anchor),
+        )
+
+    # Decompress own chunk (the single lossy hop).
+    my_pk = jnp.take(held_packed, r, axis=0)
+    my_bw = jnp.take(held_bw, r, axis=0)
+    my_anchor = jnp.take(held_anchor, r, axis=0)
+    my_codes = bitpack.unpack(my_pk, my_bw, ops.BLOCK)
+    out = ops.from_blocks(ops.dequantize(my_codes, my_anchor, cfg.eb), chunk_n)
+    out = out.astype(dtype)
+    return (out, ovf) if return_info else out
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def gz_all_to_all(x: jnp.ndarray, axis_name, cfg: GZConfig = GZConfig()):
+    """Compressed all-to-all (beyond-paper; motivated by the MoE-dispatch
+    ablation in benchmarks/moe_a2a_ablation.py).
+
+    x: (n*chunk, ...) per rank — slot buffers grouped by destination rank
+    along the leading dim.  Each destination chunk is compressed
+    individually (ONE batched quantize — the multi-stream analog), the
+    packed buffers travel through ``lax.all_to_all``, and each rank
+    decompresses what it received.  Exactly one lossy hop per element.
+    Returns (n*chunk, ...) with the received chunks stacked in rank order.
+
+    Differentiable via custom_vjp: this rank-exchange layout is
+    self-inverse (chunk r of rank p lands at rank r, slot p), so the
+    transpose is the same exchange applied to the cotangent — compressed
+    too, straight-through the quantizer.
+    """
+    out, _ = _gz_all_to_all_impl(x, axis_name, cfg)
+    return out
+
+
+def _gz_all_to_all_impl(x, axis_name, cfg, return_info: bool = True):
+    n = _axis_size(axis_name)
+    if n == 1:
+        return x, jnp.zeros((), jnp.bool_)
+    assert x.shape[0] % n == 0
+    shape, dtype = x.shape, x.dtype
+    chunk_rows = x.shape[0] // n
+    chunk_n = chunk_rows * int(np.prod(shape[1:])) if len(shape) > 1 else chunk_rows
+    B = ops.BLOCK
+    rows = ops.n_blocks_for(chunk_n)
+    flat = x.reshape(n, chunk_n).astype(jnp.float32)
+    x2d = (
+        jnp.zeros((n, rows * B), jnp.float32).at[:, :chunk_n].set(flat)
+    ).reshape(n * rows, B)
+    codes, bw, anchor = ops.quantize(x2d, cfg.eb)
+    cap = capacity_words_for(chunk_n, cfg.capacity_factor, B)
+    ovf = jnp.zeros((), jnp.bool_)
+    pk = []
+    for i in range(n):
+        p, nw = bitpack.pack(
+            codes[i * rows : (i + 1) * rows], bw[i * rows : (i + 1) * rows], cap
+        )
+        pk.append(p)
+        ovf |= nw > cap
+    packed = jnp.stack(pk)  # (n, cap)
+    bw = bw.reshape(n, rows)
+    anchor = anchor.reshape(n, rows)
+    # ship: tiled=False removes the leading (== axis size) dim and stacks
+    # the received peers' chunks back at position 0
+    recv = jax.tree.map(
+        lambda a: lax.all_to_all(a, axis_name, split_axis=0, concat_axis=0,
+                                 tiled=False),
+        (packed, bw, anchor),
+    )
+    rp, rb, ra = recv
+    out = []
+    for i in range(n):
+        c = bitpack.unpack(rp[i], rb[i], B)
+        out.append(ops.from_blocks(ops.dequantize(c, ra[i], cfg.eb), chunk_n))
+    out = jnp.stack(out).reshape(shape).astype(dtype)
+    return out, ovf
+
+
+def _gz_a2a_fwd(x, axis_name, cfg):
+    return gz_all_to_all(x, axis_name, cfg), None
+
+
+def _gz_a2a_bwd(axis_name, cfg, _, g):
+    return (gz_all_to_all(g, axis_name, cfg),)
+
+
+gz_all_to_all.defvjp(_gz_a2a_fwd, _gz_a2a_bwd)
+
+
+def gz_broadcast(
+    x: jnp.ndarray,
+    axis_name,
+    cfg: GZConfig = GZConfig(),
+    *,
+    root: int = 0,
+    return_info: bool = False,
+):
+    """Binomial-tree compressed broadcast: compress once at root, forward
+    the compressed stream down the tree, decompress once per rank."""
+    n = _axis_size(axis_name)
+    if n == 1:
+        return (x, jnp.zeros((), jnp.bool_)) if return_info else x
+    assert _is_pow2(n) and root == 0
+    comp = cfg.compressor()
+    r = lax.axis_index(axis_name)
+    shape, dtype = x.shape, x.dtype
+    c = comp.compress(x.reshape(-1).astype(jnp.float32), cfg.eb)
+    ovf = c.overflowed()
+    steps = int(math.log2(n))
+    for k in range(steps):
+        span = n >> (k + 1)
+        perm = [(i, i + span) for i in range(n) if i % (span * 2) == 0]
+        c_recv = _ppermute(c, axis_name, perm)
+        has = (r % (span * 2)) == span
+        c = jax.tree.map(lambda new, old: jnp.where(has, new, old), c_recv, c)
+    out = comp.decompress(c).reshape(shape).astype(dtype)
+    return (out, ovf) if return_info else out

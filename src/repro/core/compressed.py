@@ -1,0 +1,79 @@
+"""Static-capacity compressed payload container.
+
+cuSZp emits an *unknown-size* byte stream; MPI can ship ragged buffers but
+XLA SPMD cannot (every ``ppermute`` operand needs a static shape).  The
+``Compressed`` pytree is the TPU-native adaptation (DESIGN.md §2.1): a
+provisioned ``packed`` capacity buffer + per-block bitwidths + the true
+size.  Error-bounded semantics are untouched; only the wire format is
+padded.
+
+The container is a pytree, so it can flow through ``lax.ppermute``,
+``lax.scan`` carries, ``jax.jit`` and ``custom_vjp`` unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Compressed:
+    """An error-bounded-compressed float payload with static wire shape.
+
+    Attributes:
+      packed: uint32[capacity_words] dense bitstream (valid prefix ``nwords``).
+      bitwidth: int32[n_blocks] per-block code width in bits (0..32).
+      anchor: int32[n_blocks] absolute quantized first element per block.
+      nwords: int32 scalar, true number of valid words in ``packed``.
+      eb: f32 scalar absolute error bound the stream was quantized at.
+      n: static original element count (pytree aux data).
+      block: static block size.
+    """
+
+    packed: jnp.ndarray
+    bitwidth: jnp.ndarray
+    anchor: jnp.ndarray
+    nwords: jnp.ndarray
+    eb: jnp.ndarray
+    n: int = dataclasses.field(metadata=dict(static=True))
+    block: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def capacity_words(self) -> int:
+        return self.packed.shape[0]
+
+    @property
+    def n_blocks(self) -> int:
+        return self.bitwidth.shape[0]
+
+    def overflowed(self) -> jnp.ndarray:
+        """True iff the stream did not fit the provisioned capacity."""
+        return self.nwords > jnp.int32(self.capacity_words)
+
+    def wire_bytes(self) -> int:
+        """Bytes XLA actually moves for this payload (static provisioning)."""
+        return int(
+            self.packed.size * 4 + self.bitwidth.size * 4 + self.anchor.size * 4 + 8
+        )
+
+    def payload_bytes(self) -> jnp.ndarray:
+        """True compressed bytes (what a ragged transport would move)."""
+        meta = self.bitwidth.size * 4 + self.anchor.size * 4 + 8
+        return self.nwords.astype(jnp.int32) * 4 + meta
+
+
+def capacity_words_for(n: int, capacity_factor: float, block: int) -> int:
+    """Provisioned uint32 words for an ``n``-element f32 payload.
+
+    ``capacity_factor`` is the fraction of the *original* f32 byte size to
+    provision (paper's user-sized buffer pool).  Always at least one word
+    per block so a pathological incompressible block cannot overflow by
+    construction when factor >= 1.0.
+    """
+    n_blocks = -(-n // block)
+    words = int(n * capacity_factor)  # n f32 == n 4-byte words
+    return max(words, n_blocks, 8)

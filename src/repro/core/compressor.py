@@ -1,0 +1,98 @@
+"""Compressor implementations.
+
+``ErrorBoundedLorenzo`` is the gZCCL compressor (cuSZp adapted to TPU —
+Pallas quantize/dequantize kernels + dense bitpack).  ``FixedRate`` is the
+[30]-style 1D fixed-rate baseline whose flaw (unbounded error under
+clamping) the paper calls out; it exists so the benchmarks can reproduce
+that comparison.  Both share the ``Compressed`` wire container so the
+collective layer is compressor-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import bitpack
+from repro.core.compressed import Compressed, capacity_words_for
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorBoundedLorenzo:
+    """Error-bounded block-Lorenzo compressor (the gZCCL default).
+
+    Guarantee: |x - decompress(compress(x, eb))| <= eb element-wise, as long
+    as |x|/(2*eb) < 2**30 (pre-quantization fits int32 — same envelope as
+    cuSZp; asserted in tests).
+    """
+
+    capacity_factor: float = 0.5
+    block: int = ops.BLOCK
+
+    def compress(self, x: jnp.ndarray, eb) -> Compressed:
+        n = int(x.size)
+        eb = jnp.asarray(eb, jnp.float32)
+        x2d = ops.to_blocks(x)
+        codes, bw, anchor = ops.quantize(x2d, eb)
+        cap = capacity_words_for(n, self.capacity_factor, self.block)
+        packed, nwords = bitpack.pack(codes, bw, cap)
+        return Compressed(
+            packed=packed, bitwidth=bw, anchor=anchor, nwords=nwords, eb=eb,
+            n=n, block=self.block,
+        )
+
+    def decompress(self, c: Compressed) -> jnp.ndarray:
+        codes = bitpack.unpack(c.packed, c.bitwidth, c.block)
+        x2d = ops.dequantize(codes, c.anchor, c.eb)
+        return ops.from_blocks(x2d, c.n)
+
+    def decompress_reduce(self, c: Compressed, acc: jnp.ndarray) -> jnp.ndarray:
+        """acc + decompress(c) without materializing the decompressed array.
+
+        ``acc`` is flat (n,); fused Pallas kernel works on the padded block
+        view.
+        """
+        codes = bitpack.unpack(c.packed, c.bitwidth, c.block)
+        acc2d = ops.to_blocks(acc)
+        out2d = ops.dequantize_reduce(codes, c.anchor, c.eb, acc2d)
+        return ops.from_blocks(out2d, c.n)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedRate:
+    """1D fixed-rate baseline (ZFP-in-[30] analog): constant bits/element.
+
+    Codes that exceed the rate are CLAMPED, so the error is unbounded —
+    exactly the failure mode the paper's accuracy-aware design avoids.  The
+    wire size is pre-known (the one advantage of fixed-rate).
+    """
+
+    rate_bits: int = 8
+    block: int = ops.BLOCK
+
+    def compress(self, x: jnp.ndarray, eb) -> Compressed:
+        n = int(x.size)
+        eb = jnp.asarray(eb, jnp.float32)
+        x2d = ops.to_blocks(x)
+        codes, _, anchor = ops.quantize(x2d, eb)
+        limit = jnp.uint32((1 << self.rate_bits) - 1)
+        codes = jnp.minimum(codes, limit)  # CLAMP -> unbounded error
+        bw = jnp.full((codes.shape[0],), self.rate_bits, jnp.int32)
+        cap = capacity_words_for(n, self.rate_bits / 32.0 + 1e-9, self.block)
+        packed, nwords = bitpack.pack(codes, bw, cap)
+        return Compressed(
+            packed=packed, bitwidth=bw, anchor=anchor, nwords=nwords, eb=eb,
+            n=n, block=self.block,
+        )
+
+    def decompress(self, c: Compressed) -> jnp.ndarray:
+        codes = bitpack.unpack(c.packed, c.bitwidth, c.block)
+        x2d = ops.dequantize(codes, c.anchor, c.eb)
+        return ops.from_blocks(x2d, c.n)
+
+    def decompress_reduce(self, c: Compressed, acc: jnp.ndarray) -> jnp.ndarray:
+        return acc + self.decompress(c)
+
+
+DEFAULT = ErrorBoundedLorenzo()

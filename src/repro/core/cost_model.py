@@ -1,0 +1,213 @@
+"""Analytic performance model for compression-enabled collectives.
+
+This is the executable form of the paper's §3.2/§3.3 analysis and the
+engine behind both the algorithm selector and the benchmark figures
+(Figs. 3, 7, 9, 10, 11, 12 analogs).  On this CPU-only container wall-clock
+GPU/TPU numbers cannot be measured, so the model is calibrated to the
+paper's published A100/Slingshot-10 data and re-parameterized for TPU v5e
+(EXPERIMENTS.md reports both parameter sets).
+
+Model pieces:
+
+  t_comp(size)  = overhead + size / (peak * util(size))        [Fig. 3]
+      util(s)   = s / (s + saturation)   — the under-utilization curve:
+                  halves at the saturation size (~5 MB for cuSZp/A100,
+                  paper §3.2.2), the root cause of ring's poor scaling.
+  t_net(bytes)  = alpha + bytes / bw     — classic alpha-beta term per hop.
+
+Collective compositions mirror the step counts in §3.2.3/§3.3.3 exactly;
+``overlap`` discounts the portion of compression hidden behind
+communication (the paper's multi-stream/async optimization), applied only
+to the gZ (optimized) variants, not to CPRP2P/C-Coll baselines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = [
+    "Hardware",
+    "A100_SLINGSHOT",
+    "TPU_V5E",
+    "t_compress",
+    "t_decompress",
+    "allreduce_ring_gz",
+    "allreduce_redoub_gz",
+    "allreduce_intring_gz",
+    "allreduce_uncompressed_ring",
+    "allreduce_cprp2p",
+    "allreduce_ccoll",
+    "scatter_binomial_gz",
+    "scatter_uncompressed_binomial",
+    "allgather_ring_gz",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    cmp_peak_gbps: float      # compressor throughput at full utilization
+    dec_peak_gbps: float
+    cmp_saturation_mb: float  # input size at which utilization = 50%
+    cmp_overhead_us: float    # per-invocation fixed cost (kernel launch /
+                              # pallas dispatch + pipeline fill)
+    net_gbps: float           # per-link network bandwidth (bytes/s * 8)
+    net_alpha_us: float       # per-hop latency
+    reduce_gbps: float        # on-device reduction bandwidth
+    pcie_gbps: float = 0.0    # host staging penalty (CPU-centric designs)
+
+
+# Calibrated to paper Fig. 3 (cuSZp on A100: ~5 MB saturation; ~100 GB/s
+# class compression at saturation) and Slingshot-10 (100 Gbps).
+A100_SLINGSHOT = Hardware(
+    name="a100-slingshot10",
+    cmp_peak_gbps=140.0 * 8,
+    dec_peak_gbps=200.0 * 8,
+    cmp_saturation_mb=5.0,
+    cmp_overhead_us=30.0,
+    net_gbps=100.0,
+    net_alpha_us=5.0,
+    reduce_gbps=1300.0 * 8,
+    pcie_gbps=64.0 * 8,
+)
+
+# TPU v5e: 819 GB/s HBM, ~50 GB/s/link ICI; Pallas dispatch overhead is
+# smaller than a CUDA launch but the pipeline-fill penalty for small grids
+# plays the same role (DESIGN.md §2.2).
+TPU_V5E = Hardware(
+    name="tpu-v5e",
+    cmp_peak_gbps=400.0 * 8,
+    dec_peak_gbps=500.0 * 8,
+    cmp_saturation_mb=2.0,
+    cmp_overhead_us=8.0,
+    net_gbps=50.0 * 8,
+    net_alpha_us=1.0,
+    reduce_gbps=819.0 * 8,
+)
+
+
+def _util(size_bytes: float, hw: Hardware) -> float:
+    s_mb = size_bytes / 1e6
+    return s_mb / (s_mb + hw.cmp_saturation_mb)
+
+
+def t_compress(size_bytes: float, hw: Hardware) -> float:
+    """Seconds for one compression call of `size_bytes` input."""
+    if size_bytes <= 0:
+        return 0.0
+    eff = hw.cmp_peak_gbps * 1e9 / 8 * _util(size_bytes, hw)
+    return hw.cmp_overhead_us * 1e-6 + size_bytes / eff
+
+
+def t_decompress(size_bytes: float, hw: Hardware) -> float:
+    if size_bytes <= 0:
+        return 0.0
+    eff = hw.dec_peak_gbps * 1e9 / 8 * _util(size_bytes, hw)
+    return hw.cmp_overhead_us * 1e-6 + size_bytes / eff
+
+
+def t_net(bytes_on_wire: float, hw: Hardware) -> float:
+    return hw.net_alpha_us * 1e-6 + bytes_on_wire / (hw.net_gbps * 1e9 / 8)
+
+
+def t_reduce(size_bytes: float, hw: Hardware) -> float:
+    return size_bytes / (hw.reduce_gbps * 1e9 / 8)
+
+
+def _overlapped(compute: float, comm: float, overlap: float) -> float:
+    """Combine a compute and a comm phase with fractional overlap."""
+    hidden = min(compute, comm) * overlap
+    return compute + comm - hidden
+
+
+# --- Allreduce variants (message D bytes, N ranks, compression ratio R) ---
+
+
+def allreduce_ring_gz(D, N, R, hw: Hardware, overlap: float = 0.7) -> float:
+    """gZ-Allreduce (Ring): (N-1) RS steps of chunk D/N + AG forwarding."""
+    ch = D / N
+    step_rs = _overlapped(
+        t_compress(ch, hw) + t_decompress(ch, hw) + t_reduce(ch, hw),
+        t_net(ch / R, hw),
+        overlap,
+    )
+    step_ag = _overlapped(t_decompress(ch, hw), t_net(ch / R, hw), overlap)
+    return (N - 1) * step_rs + t_compress(ch, hw) + (N - 1) * step_ag
+
+
+def allreduce_redoub_gz(D, N, R, hw: Hardware, overlap: float = 0.7) -> float:
+    """gZ-Allreduce (ReDoub): log2(N) full-message exchanges."""
+    steps = math.ceil(math.log2(N))
+    one = _overlapped(
+        t_compress(D, hw) + t_decompress(D, hw) + t_reduce(D, hw),
+        t_net(D / R, hw),
+        overlap,
+    )
+    return steps * one
+
+
+def allreduce_intring_gz(D, N, R, hw: Hardware, overlap: float = 0.7) -> float:
+    """Beyond-paper integer ring: one quantize + lossless int repack hops.
+
+    Repacking costs ~a decompress+compress of the (compressed-size) codes;
+    wire width grows ~log2(step)/32 per hop (modeled via a 15% inflation).
+    """
+    ch = D / N
+    wire = ch / R * 1.15
+    quant = t_compress(D, hw)  # single full-size quantize (saturated)
+    step = _overlapped(
+        t_compress(ch / R, hw) + t_decompress(ch / R, hw) + t_reduce(ch / R, hw),
+        t_net(wire, hw),
+        overlap,
+    )
+    return quant + (2 * N - 2) * step
+
+
+def allreduce_uncompressed_ring(D, N, hw: Hardware) -> float:
+    """NCCL-class baseline: 2(N-1) hops of D/N, no compression."""
+    return 2 * (N - 1) * t_net(D / N, hw)
+
+
+def allreduce_cprp2p(D, N, R, hw: Hardware) -> float:
+    """CPRP2P [30]: compress+decompress around EVERY hop, no overlap."""
+    ch = D / N
+    per_hop = t_compress(ch, hw) + t_net(ch / R, hw) + t_decompress(ch, hw) + t_reduce(ch, hw)
+    return 2 * (N - 1) * per_hop
+
+
+def allreduce_ccoll(D, N, R, hw: Hardware) -> float:
+    """C-Coll [12]: compression-optimized but CPU-centric — adds host
+    staging (PCIe both ways per hop) and no GPU-side overlap."""
+    ch = D / N
+    stage = 2 * ch / (hw.pcie_gbps * 1e9 / 8) if hw.pcie_gbps else 0.0
+    step_rs = t_compress(ch, hw) + t_net(ch / R, hw) + t_decompress(ch, hw) \
+        + t_reduce(ch, hw) + stage
+    step_ag = t_net(ch / R, hw) + t_decompress(ch, hw) + stage
+    return (N - 1) * step_rs + t_compress(ch, hw) + (N - 1) * step_ag
+
+
+# --- Data movement ---
+
+
+def allgather_ring_gz(D_chunk, N, R, hw: Hardware, overlap: float = 0.7) -> float:
+    """gZ-Allgather: 1 compression + (N-1) forward hops w/ overlapped dec."""
+    one = _overlapped(t_decompress(D_chunk, hw), t_net(D_chunk / R, hw), overlap)
+    return t_compress(D_chunk, hw) + (N - 1) * one
+
+
+def scatter_binomial_gz(D, N, R, hw: Hardware, overlap: float = 0.7) -> float:
+    """gZ-Scatter: batched root compression of N chunks (ONE saturated call
+    — the multi-stream analog) + log2(N) tree rounds of halving payloads +
+    one decompression at each leaf."""
+    rounds = math.ceil(math.log2(N))
+    total = t_compress(D, hw)  # batched: full-size utilization
+    for k in reversed(range(rounds)):
+        payload = D * (2**k) / N / R
+        total += t_net(payload, hw)
+    total += t_decompress(D / N, hw)
+    return total
+
+
+def scatter_uncompressed_binomial(D, N, hw: Hardware) -> float:
+    rounds = math.ceil(math.log2(N))
+    return sum(t_net(D * (2**k) / N, hw) for k in reversed(range(rounds)))

@@ -1,0 +1,74 @@
+"""Accuracy-aware error-budget allocation (paper §3.3.3).
+
+Every lossy hop in a compression-enabled collective re-quantizes data, so
+per-hop bounds stack.  Getting the worst case right requires tracking how
+*accumulated* error merges, not just counting compression events:
+
+  * ReDoub allreduce: each of the log2(N) rounds computes
+        acc' = acc + D(C(partner_acc)),
+    so e_{k+1} = 2*e_k + eb_stage  (the partner's accumulated error merges
+    in as well) => worst case e = (2**log2(N) - 1)*eb_stage = (N-1)*eb_stage.
+  * Ring allreduce: the reduce-scatter running chunk sum absorbs one fresh
+    quantization error per hop, (N-1) hops, plus one more lossy hop in the
+    allgather stage => N*eb_stage.
+  * Ring allgather / binomial scatter / binomial bcast: data-movement
+    collectives compress exactly once at the endpoints => 1 hop.
+
+So in the WORST case both computation algorithms stack linearly in N —
+the paper's "log N vs N-1" compares compression *events per rank* (which
+is what costs time and compressor utilization), not the adversarial error
+bound.  Statistically the story is the one the paper tells: the final
+value embeds ~N zero-mean independent quantization errors under either
+algorithm (a merge tree has N-1 internal nodes), so errors random-walk as
+sqrt(N)*eb_stage, and ReDoub's fewer sequential requantizations of any
+single element path give it the better constant (validated empirically in
+tests/test_error_budget.py and the image-stacking example).
+
+``allocate(worst_case=True)`` divides by the hard-bound hop count;
+``worst_case=False`` divides by sqrt(hops) — the paper's statistical
+argument, which is the practical choice for gradient sync.
+"""
+from __future__ import annotations
+
+import math
+
+__all__ = ["lossy_hops", "allocate"]
+
+
+def lossy_hops(algo: str, n: int) -> int:
+    """Worst-case multiplier: end-to-end error <= lossy_hops * eb_stage."""
+    if algo == "allreduce_redoub":
+        return max(n - 1, 1)  # e_{k+1} = 2 e_k + eb over log2(n) rounds
+    if algo == "allreduce_ring":
+        return max(n, 2)  # (n-1) RS requantizations + 1 AG hop
+    if algo == "reduce_scatter_ring":
+        return max(n - 1, 1)
+    if algo == "allreduce_intring":
+        return max(n, 2)  # n independent initial quantizations, single grid
+    if algo in ("allgather_ring", "scatter_binomial", "broadcast_binomial"):
+        return 1
+    raise ValueError(f"unknown algo {algo!r}")
+
+
+def compression_events(algo: str, n: int) -> int:
+    """Sequential compression invocations per rank (the paper's log-N vs
+    N-1 *performance* metric — what drives compressor utilization cost)."""
+    if algo == "allreduce_redoub":
+        return max(int(math.ceil(math.log2(max(n, 2)))), 1)
+    if algo == "allreduce_ring":
+        return max(n - 1, 1) + 1
+    if algo == "reduce_scatter_ring":
+        return max(n - 1, 1)
+    if algo == "allreduce_intring":
+        return 1  # quantize once; ring repacks are lossless
+    if algo in ("allgather_ring", "scatter_binomial", "broadcast_binomial"):
+        return 1
+    raise ValueError(f"unknown algo {algo!r}")
+
+
+def allocate(eb_total: float, algo: str, n: int, *, worst_case: bool = True) -> float:
+    """Per-stage eb such that the end-to-end error stays within eb_total."""
+    hops = lossy_hops(algo, n)
+    if worst_case:
+        return eb_total / hops
+    return eb_total / math.sqrt(hops)

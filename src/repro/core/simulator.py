@@ -1,0 +1,134 @@
+"""Global-view N-rank simulator of the gZCCL collective algorithms.
+
+Runs the *same* algorithm step structure as core/collectives.py — same
+number and order of compress/decompress operations, same ring/tree/XOR
+communication patterns — but over a python list of per-rank arrays on one
+device.  Used by tests to validate:
+
+  * numerical results vs the exact (numpy) collective,
+  * error accumulation vs the error_budget hop counts,
+  * rank-consistency properties (intring bitwise-equal; redoub/ring within
+    the accumulated bound),
+
+without needing a multi-device runtime.  The shard_map versions are
+additionally validated on 8 virtual host devices in
+tests/test_collectives_multidevice.py (subprocess).
+"""
+from __future__ import annotations
+
+import math
+from typing import List
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.collectives import GZConfig
+from repro.core import error_budget
+
+__all__ = [
+    "sim_allreduce_redoub",
+    "sim_allreduce_ring",
+    "sim_allreduce_intring",
+    "sim_allgather_ring",
+    "sim_reduce_scatter_ring",
+    "sim_scatter_binomial",
+    "sim_broadcast_binomial",
+]
+
+
+def _roundtrip(comp, x, eb):
+    return np.asarray(comp.decompress(comp.compress(jnp.asarray(x), eb)))
+
+
+def sim_allreduce_redoub(xs: List[np.ndarray], cfg: GZConfig):
+    """Recursive doubling: log2(N) exchange rounds, compress full message."""
+    n = len(xs)
+    assert n & (n - 1) == 0
+    comp = cfg.compressor()
+    eb = error_budget.allocate(cfg.eb, "allreduce_redoub", n,
+                               worst_case=cfg.worst_case_budget)
+    acc = [x.astype(np.float32).copy() for x in xs]
+    for k in range(int(math.log2(n))):
+        dist = 1 << k
+        sent = [_roundtrip(comp, acc[r], eb) for r in range(n)]
+        acc = [acc[r] + sent[r ^ dist] for r in range(n)]
+    return acc
+
+
+def sim_allreduce_ring(xs: List[np.ndarray], cfg: GZConfig):
+    """Ring RS + ring AG with identical chunk schedule to collectives.py."""
+    n = len(xs)
+    comp = cfg.compressor()
+    hops = error_budget.lossy_hops("allreduce_ring", n)
+    eb = cfg.eb / hops if cfg.worst_case_budget else cfg.eb / math.sqrt(hops)
+    d = xs[0].shape[0]
+    chunk = -(-d // n)
+    acc = [np.zeros(n * chunk, np.float32) for _ in range(n)]
+    for r in range(n):
+        acc[r][:d] = xs[r]
+    ch = lambda a, i: a[i * chunk : (i + 1) * chunk]
+    # reduce-scatter: step s, rank r sends chunk (r-s)%n to r+1
+    for s in range(n - 1):
+        sends = [_roundtrip(comp, ch(acc[r], (r - s) % n), eb) for r in range(n)]
+        for r in range(n):
+            ch(acc[r], (r - s - 1) % n)[:] += sends[(r - 1) % n]
+    # allgather: owner (r+1)%n compresses once; forward compressed
+    cur = []
+    for r in range(n):
+        own = (r + 1) % n
+        rt = _roundtrip(comp, ch(acc[r], own), eb)
+        ch(acc[r], own)[:] = rt
+        cur.append(rt)  # stands for the compressed payload being forwarded
+    for s in range(n - 1):
+        cur = [cur[(r - 1) % n] for r in range(n)]
+        for r in range(n):
+            ch(acc[r], (r - s) % n)[:] = cur[r]
+    return [a[:d] for a in acc]
+
+
+def sim_allreduce_intring(xs: List[np.ndarray], cfg: GZConfig):
+    """Integer-domain ring: quantize once, exact int sums (global view)."""
+    eb = cfg.eb
+    qs = [np.rint(x.astype(np.float64) / (2 * eb)).astype(np.int64) for x in xs]
+    qsum = np.sum(qs, axis=0)
+    out = (qsum.astype(np.float64) * 2 * eb).astype(np.float32)
+    return [out.copy() for _ in xs]
+
+
+def sim_reduce_scatter_ring(xs: List[np.ndarray], cfg: GZConfig):
+    n = len(xs)
+    comp = cfg.compressor()
+    eb = error_budget.allocate(cfg.eb, "reduce_scatter_ring", n,
+                               worst_case=cfg.worst_case_budget)
+    d = xs[0].shape[0]
+    assert d % n == 0
+    chunk = d // n
+    acc = [x.astype(np.float32).copy() for x in xs]
+    ch = lambda a, i: a[i * chunk : (i + 1) * chunk]
+    for s in range(n - 1):
+        sends = [_roundtrip(comp, ch(acc[r], (r - s - 1) % n), eb) for r in range(n)]
+        for r in range(n):
+            ch(acc[r], (r - s - 2) % n)[:] += sends[(r - 1) % n]
+    return [ch(acc[r], r).copy() for r in range(n)]
+
+
+def sim_allgather_ring(xs: List[np.ndarray], cfg: GZConfig):
+    n = len(xs)
+    comp = cfg.compressor()
+    rts = [_roundtrip(comp, x, cfg.eb) for x in xs]  # single lossy hop each
+    return [np.concatenate(rts) for _ in range(n)]
+
+
+def sim_scatter_binomial(x_full: np.ndarray, n: int, cfg: GZConfig):
+    comp = cfg.compressor()
+    chunk = x_full.shape[0] // n
+    return [
+        _roundtrip(comp, x_full[i * chunk : (i + 1) * chunk], cfg.eb)
+        for i in range(n)
+    ]
+
+
+def sim_broadcast_binomial(x: np.ndarray, n: int, cfg: GZConfig):
+    comp = cfg.compressor()
+    rt = _roundtrip(comp, x, cfg.eb)
+    return [rt.copy() for _ in range(n)]

@@ -1,0 +1,139 @@
+"""Pallas TPU flash-attention kernel (canonical revisited-output pattern).
+
+Grid: (batch*heads, q_blocks, kv_blocks), kv innermost.  The output block
+is revisited across the kv dimension; running (max, sumexp, acc) live in
+VMEM scratch that persists across the kv grid steps.  On the last kv step
+the normalized block is written out.
+
+Tiling: BQ=128 q rows x D lanes (D 64/128 aligns the MXU); BK=128 kv rows.
+VMEM per grid cell ~ (BQ*D + 2*BK*D + BQ*D + 2*BQ) f32 — ~260 KB at
+D=128, comfortably inside VMEM with double-buffered pipelines.
+
+Causal/sliding-window masks are applied from absolute block offsets; fully
+masked kv blocks still execute under interpret mode (a TPU deployment
+would skip them via the grid's index_map — noted as the next kernel-level
+optimization in EXPERIMENTS.md).
+
+Validated in interpret mode against kernels/ref.py::attention_ref
+(tests/test_flash_kernel.py sweeps shapes, dtypes, causal, window).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+BQ = 128
+BK = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, causal,
+            window, sq, sk, n_kv):
+    kv_i = pl.program_id(2)
+    q_i = pl.program_id(1)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)  # (BK, D)
+    v = v_ref[0].astype(jnp.float32)
+    d = q.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.dot(q * scale, k.T, preferred_element_type=jnp.float32)  # (BQ, BK)
+
+    q_pos = q_i * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+    k_pos = kv_i * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+    mask = (k_pos < sk) & (q_pos < sq)
+    if causal:
+        mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > (q_pos - window)
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[...]  # (BQ, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(kv_i == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "interpret")
+)
+def flash_attention_bhsd(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    interpret: bool = True,
+):
+    """q/k/v: (BH, S, D) — batch*heads flattened.  Returns (BH, Sq, D)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    nq = -(-sq // BQ)
+    nk = -(-sk // BK)
+    qp = jnp.pad(q, ((0, 0), (0, nq * BQ - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * BK - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * BK - sk), (0, 0)))
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, sq=sq, sk=sk, n_kv=nk
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, BQ, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BK, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BK, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nq * BQ, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BQ, 1), jnp.float32),
+            pltpu.VMEM((BQ, 1), jnp.float32),
+            pltpu.VMEM((BQ, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq]
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    interpret: bool = True,
+):
+    """q: (B, Sq, H, D); k/v: (B, Sk, H, D) (kv already head-repeated)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    to_bhsd = lambda x, s: x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    out = flash_attention_bhsd(
+        to_bhsd(q, sq), to_bhsd(k, sk), to_bhsd(v, sk),
+        causal=causal, window=window, interpret=interpret,
+    )
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,136 @@
+"""Pallas TPU kernels for the cuSZp-adapted block compressor.
+
+Three kernels, each tiled ``(TILE_ROWS, BLOCK)`` over a grid of block-rows:
+
+  * ``quantize``          f32 -> zigzag codes + per-block bitwidth
+  * ``dequantize``        codes -> f32 (per-block prefix-sum reconstruct)
+  * ``dequantize_reduce`` codes + accumulator -> accumulator + f32
+    (the paper's on-device reduction kernel, fused with decompression so the
+    decompressed tensor never round-trips HBM)
+
+TPU tiling notes (DESIGN.md §2): BLOCK=256 keeps each Lorenzo block two
+128-lane vregs wide; TILE_ROWS=8 gives an (8, 256) f32 tile = 8 KiB VMEM in,
+8 KiB out, well under VMEM while a multiple of the (8, 128) f32 native tile.
+The per-block cumsum is a lane-wise prefix sum on the VPU; blocks are
+independent so there is no cross-tile carry — this is what replaces cuSZp's
+per-warp layout on the MXU-less part of the chip.
+
+The scalar error bound arrives as a (1, 1) operand mapped to every grid
+cell (index_map -> (0, 0)) rather than a closure constant, so one compiled
+kernel serves every error budget the collective layer allocates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+TILE_ROWS = 8
+
+
+def _bitwidth(umax_keepdims: jnp.ndarray) -> jnp.ndarray:
+    powers = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)).astype(jnp.uint32)
+    return jnp.sum((umax_keepdims >= powers[None, :]).astype(jnp.int32), axis=-1,
+                   keepdims=True)
+
+
+def _quantize_kernel(x_ref, recip_ref, codes_ref, bw_ref, anchor_ref):
+    x = x_ref[...]
+    recip = recip_ref[0, 0]
+    q = jnp.rint(x * recip).astype(jnp.int32)
+    col = jax.lax.broadcasted_iota(jnp.int32, q.shape, 1)
+    prev = jnp.where(col == 0, q, jnp.roll(q, 1, axis=1))
+    d = q - prev  # first column is 0; absolute value goes out via anchor
+    zig = ((d << 1) ^ (d >> 31)).astype(jnp.uint32)
+    codes_ref[...] = zig
+    umax = jnp.max(zig, axis=1)  # (TILE_ROWS,)
+    bw_ref[...] = _bitwidth(umax[:, None])
+    anchor_ref[...] = q[:, :1]
+
+
+def _dequantize_kernel(codes_ref, anchor_ref, twoeb_ref, x_ref):
+    u = codes_ref[...]
+    d = (u >> 1).astype(jnp.int32) ^ (-(u & 1).astype(jnp.int32))
+    q = anchor_ref[...] + jnp.cumsum(d, axis=1)
+    x_ref[...] = q.astype(jnp.float32) * twoeb_ref[0, 0]
+
+
+def _dequantize_reduce_kernel(codes_ref, anchor_ref, twoeb_ref, acc_ref, out_ref):
+    u = codes_ref[...]
+    d = (u >> 1).astype(jnp.int32) ^ (-(u & 1).astype(jnp.int32))
+    q = anchor_ref[...] + jnp.cumsum(d, axis=1)
+    out_ref[...] = acc_ref[...] + q.astype(jnp.float32) * twoeb_ref[0, 0]
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+
+def _row_spec(width):
+    return pl.BlockSpec((TILE_ROWS, width), lambda i: (i, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize(x2d: jnp.ndarray, eb: jnp.ndarray, *, interpret: bool = True):
+    """f32 (n_blocks, BLOCK) -> (codes uint32, bitwidth int32 (n_blocks,)).
+
+    n_blocks must be a multiple of TILE_ROWS (ops.py pads).
+    """
+    n_blocks = x2d.shape[0]
+    recip = (1.0 / (2.0 * eb)).reshape(1, 1).astype(jnp.float32)
+    grid = (n_blocks // TILE_ROWS,)
+    codes, bw, anchor = pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[_row_spec(BLOCK), _scalar_spec()],
+        out_specs=[_row_spec(BLOCK), _row_spec(1), _row_spec(1)],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.uint32),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x2d, recip)
+    return codes, bw[:, 0], anchor[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize(
+    codes: jnp.ndarray, anchor: jnp.ndarray, eb: jnp.ndarray, *, interpret: bool = True
+):
+    """codes uint32 (n_blocks, BLOCK) + anchor (n_blocks,) -> f32 (n_blocks, BLOCK)."""
+    n_blocks = codes.shape[0]
+    twoeb = (2.0 * eb).reshape(1, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        _dequantize_kernel,
+        grid=(n_blocks // TILE_ROWS,),
+        in_specs=[_row_spec(BLOCK), _row_spec(1), _scalar_spec()],
+        out_specs=_row_spec(BLOCK),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.float32),
+        interpret=interpret,
+    )(codes, anchor[:, None], twoeb)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize_reduce(
+    codes: jnp.ndarray,
+    anchor: jnp.ndarray,
+    eb: jnp.ndarray,
+    acc: jnp.ndarray,
+    *,
+    interpret: bool = True,
+):
+    """Fused decompress-and-add: acc + dequantize(codes, anchor)."""
+    n_blocks = codes.shape[0]
+    twoeb = (2.0 * eb).reshape(1, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        _dequantize_reduce_kernel,
+        grid=(n_blocks // TILE_ROWS,),
+        in_specs=[_row_spec(BLOCK), _row_spec(1), _scalar_spec(), _row_spec(BLOCK)],
+        out_specs=_row_spec(BLOCK),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.float32),
+        interpret=interpret,
+    )(codes, anchor[:, None], twoeb, acc)

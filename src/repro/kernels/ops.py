@@ -1,0 +1,55 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles flattening, block padding, backend selection (interpret=True off
+TPU so the kernel *body* is what gets validated on CPU), and exposes the
+flat-array API the compressor layer consumes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import lorenzo
+
+BLOCK = lorenzo.BLOCK
+TILE_ROWS = lorenzo.TILE_ROWS
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def n_blocks_for(n: int) -> int:
+    """Number of Lorenzo blocks (padded to the kernel's row-tile multiple)."""
+    nb = -(-n // BLOCK)
+    return -(-nb // TILE_ROWS) * TILE_ROWS
+
+
+def to_blocks(x: jnp.ndarray) -> jnp.ndarray:
+    """Flatten + zero-pad an arbitrary f32 array to (n_blocks, BLOCK)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    nb = n_blocks_for(flat.shape[0])
+    padded = jnp.zeros((nb * BLOCK,), jnp.float32).at[: flat.shape[0]].set(flat)
+    return padded.reshape(nb, BLOCK)
+
+
+def from_blocks(x2d: jnp.ndarray, n: int) -> jnp.ndarray:
+    return x2d.reshape(-1)[:n]
+
+
+def quantize(x2d: jnp.ndarray, eb):
+    """-> (codes uint32 (nb, B), bitwidth int32 (nb,), anchor int32 (nb,))."""
+    eb = jnp.asarray(eb, jnp.float32)
+    return lorenzo.quantize(x2d, eb, interpret=_interpret())
+
+
+def dequantize(codes: jnp.ndarray, anchor: jnp.ndarray, eb) -> jnp.ndarray:
+    eb = jnp.asarray(eb, jnp.float32)
+    return lorenzo.dequantize(codes, anchor, eb, interpret=_interpret())
+
+
+def dequantize_reduce(
+    codes: jnp.ndarray, anchor: jnp.ndarray, eb, acc: jnp.ndarray
+) -> jnp.ndarray:
+    eb = jnp.asarray(eb, jnp.float32)
+    return lorenzo.dequantize_reduce(codes, anchor, eb, acc, interpret=_interpret())

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are allclose-tested against
+(``tests/test_kernels.py`` sweeps shapes/dtypes).  They are also what the
+single-device simulator uses, so algorithm-level tests never depend on
+Pallas at all.
+
+Compression scheme (cuSZp [14] adapted to TPU, DESIGN.md §2):
+  q      = rint(x / (2*eb))               # error-bounded pre-quantization
+  anchor = q[0]                            # per-block absolute, 32-bit raw
+  d[j]   = q[j] - q[j-1]  (d[0] := 0)      # 1D Lorenzo within each block
+  code   = zigzag(d)                       # non-negative uint32
+  bw_i   = bits(max(code in block i))      # per-block fixed width
+Reconstruction is the exact inverse; the only loss is the initial
+quantization, hence |x - x'| <= eb element-wise (integer Lorenzo+zigzag are
+lossless, up to f32 rounding of q*2eb which is relative ~1e-7·|x|).
+
+The *anchor* is the TPU twist on cuSZp: cuSZp's first-in-block element
+predicts from 0, so one large absolute value inflates the whole block's
+fixed width.  Storing the absolute quantized anchor out-of-band (4 B per
+256-element block = 1.6% overhead) keeps the packed width equal to the
+*delta* dynamic range, which is what actually compresses on smooth fields.
+Blocks stay independent, which is what makes block-parallel TPU tiling
+possible.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "quantize_ref",
+    "dequantize_ref",
+    "dequantize_reduce_ref",
+    "bitwidth_of",
+]
+
+
+def bitwidth_of(umax: jnp.ndarray) -> jnp.ndarray:
+    """Exact integer ceil(log2(u+1)) via 32 comparisons (no float log)."""
+    powers = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)).astype(jnp.uint32)
+    return jnp.sum(
+        (umax[..., None] >= powers).astype(jnp.int32), axis=-1
+    )
+
+
+def quantize_ref(x2d: jnp.ndarray, eb: jnp.ndarray):
+    """f32 (n_blocks, B) -> (codes uint32 (nb, B), bitwidth int32 (nb,), anchor int32 (nb,))."""
+    recip = 1.0 / (2.0 * eb)
+    q = jnp.rint(x2d.astype(jnp.float32) * recip).astype(jnp.int32)
+    prev = jnp.concatenate([q[:, :1], q[:, :-1]], axis=1)
+    d = q - prev  # d[:, 0] == 0 by construction
+    zig = ((d << 1) ^ (d >> 31)).astype(jnp.uint32)
+    bw = bitwidth_of(jnp.max(zig, axis=1))
+    return zig, bw, q[:, 0]
+
+
+def _unzigzag(u: jnp.ndarray) -> jnp.ndarray:
+    return (u >> 1).astype(jnp.int32) ^ (-(u & 1).astype(jnp.int32))
+
+
+def dequantize_ref(
+    codes: jnp.ndarray, anchor: jnp.ndarray, eb: jnp.ndarray
+) -> jnp.ndarray:
+    """codes uint32 (nb, B) + anchor int32 (nb,) -> f32 (nb, B)."""
+    d = _unzigzag(codes)
+    q = anchor[:, None] + jnp.cumsum(d, axis=1)
+    return q.astype(jnp.float32) * (2.0 * eb)
+
+
+def dequantize_reduce_ref(
+    codes: jnp.ndarray, anchor: jnp.ndarray, eb: jnp.ndarray, acc: jnp.ndarray
+) -> jnp.ndarray:
+    """Fused decompress + elementwise reduce (paper's on-device reduction)."""
+    return acc + dequantize_ref(codes, anchor, eb)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """Dense softmax-attention oracle for the flash kernel.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, H, D).  f32 math throughout.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / (d ** 0.5)
+    if causal:
+        qp = jnp.arange(sq)[:, None]
+        kp = jnp.arange(sk)[None, :]
+        mask = kp <= qp
+        if window:
+            mask &= kp > (qp - window)
+        s = jnp.where(mask[None, None], s, -1e30)
+    import jax
+
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum(
+        "bhqk,bkhd->bqhd", p, v.astype(jnp.float32)
+    ).astype(q.dtype)

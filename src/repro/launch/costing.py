@@ -1,0 +1,74 @@
+"""Differential scan-body costing.
+
+XLA's ``cost_analysis()`` (and the HLO text) count a ``while`` body ONCE
+regardless of trip count (verified empirically: a lax.scan over 4 and over
+8 matmul layers reports identical flops).  Roofline terms for an L-layer
+model are therefore corrected differentially:
+
+  * lower the FULL config (scan as while; body counted once per scan), and
+  * lower tiny 1- and 2-layer variants of the same config with the scans
+    fully UNROLLED (ctx.scan_unroll high -> no while in the program);
+    body_cost = cost(2 layers) - cost(1 layer), exactly — including the
+    real fwd+bwd structure, remat recompute, FSDP gathers and TP
+    collectives of a production layer;
+  * corrected = reported_full + (executed_bodies - counted_bodies) * body.
+
+Variant configs per family:
+  dense/moe/mla/vlm/audio/ssm:  n_layers in {1, 2}
+  hybrid:                        a pure-SSM variant (the scanned body IS the
+                                 ssm block; shared attn blocks are python-
+                                 unrolled and already counted in full)
+  encdec:                        vary dec and enc depths independently
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["corrections", "apply_corrections"]
+
+
+def _variants(cfg):
+    """[(key, cfg_1layer, cfg_2layer, executed, counted)] per scan family."""
+    r = dataclasses.replace
+    if cfg.family == "hybrid":
+        k = cfg.attn_every
+        n_groups = cfg.n_layers // k
+        rem = cfg.n_layers - n_groups * k
+        executed = cfg.n_layers
+        counted = n_groups + (1 if rem else 0)
+        ssm1 = r(cfg, family="ssm", attn_every=0, shared_attn=False,
+                 n_layers=1, n_heads=0, n_kv_heads=0, d_ff=0)
+        ssm2 = r(ssm1, n_layers=2)
+        return [("main", ssm1, ssm2, executed, counted)]
+    if cfg.family == "encdec":
+        base = r(cfg, n_layers=1, n_enc_layers=1)
+        dec2 = r(cfg, n_layers=2, n_enc_layers=1)
+        enc2 = r(cfg, n_layers=1, n_enc_layers=2)
+        return [
+            ("dec", base, dec2, cfg.n_layers, 1),
+            ("enc", base, enc2, cfg.n_enc_layers, 1),
+        ]
+    return [("main", r(cfg, n_layers=1), r(cfg, n_layers=2), cfg.n_layers, 1)]
+
+
+def corrections(cfg, lower_fn) -> dict:
+    """``lower_fn(cfg, unroll)`` -> {"flops","hbm","coll"} raw costs.
+
+    Returns {"flops": extra, "hbm": extra, "coll": extra, "detail": ...}.
+    """
+    extra = {"flops": 0.0, "hbm": 0.0, "coll": 0.0}
+    detail = {}
+    for key, c1, c2, executed, counted in _variants(cfg):
+        a = lower_fn(c1, 64)
+        b = lower_fn(c2, 64)
+        body = {k: max(b[k] - a[k], 0.0) for k in extra}
+        mult = executed - counted
+        for k in extra:
+            extra[k] += mult * body[k]
+        detail[key] = {"body": body, "executed": executed, "counted": counted}
+    extra["detail"] = detail
+    return extra
+
+
+def apply_corrections(reported: dict, extra: dict) -> dict:
+    return {k: reported[k] + extra[k] for k in ("flops", "hbm", "coll")}

@@ -1,0 +1,240 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes; capture memory/cost analysis + collective bytes and the
+scan-corrected §Roofline terms.
+
+MUST run as its own process (the os.environ line below executes before any
+jax initialization — smoke tests and benches must still see 1 device):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-20b \
+        --shape train_4k [--multi-pod] [--grad-gz redoub] [--fsdp-gz] \
+        [--remat full|none] [--out results/dryrun]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.core.collectives import GZConfig
+from repro.launch import costing, hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import INPUT_SHAPES, decode_specs, train_specs
+from repro.launch.training import make_serve_step, make_setup, make_train_step
+from repro.models.parallel import param_shapes
+
+
+def _opt_shapes(pshapes):
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(f32, pshapes),
+        "nu": jax.tree.map(f32, pshapes),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def lower_cost(cfg, shape, mesh, *, grad_gz=None, fsdp_gz=None, remat="full",
+               unroll: int = 1, want_mem: bool = False, fsdp: bool = True,
+               cache_dtype="float32") -> dict:
+    """Lower+compile one configuration; return raw cost terms."""
+    setup = make_setup(cfg, mesh, grad_gz=grad_gz, fsdp_gz=fsdp_gz, remat=remat,
+                       fsdp=fsdp)
+    if unroll != 1:
+        setup = dataclasses.replace(
+            setup, ctx=dataclasses.replace(setup.ctx, scan_unroll=unroll)
+        )
+        setup = dataclasses.replace(
+            setup, model=type(setup.model)(cfg, setup.ctx)
+        )
+    pshapes = param_shapes(setup.defs)
+    t0 = time.time()
+    if shape.kind == "train":
+        batch, bspecs = train_specs(cfg, shape, mesh)
+        step = make_train_step(setup, bspecs)
+        lowered = step.lower(pshapes, _opt_shapes(pshapes), batch)
+    else:
+        cache, cspecs, tokens, tspec, plan = decode_specs(
+            cfg, shape, mesh, setup.model, cache_dtype=jnp.dtype(cache_dtype))
+        step = make_serve_step(setup, cspecs, tspec, plan)
+        pos = jax.ShapeDtypeStruct((1,), jnp.int32)
+        lowered = step.lower(pshapes, cache, tokens, pos)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    coll = hlo_stats.collective_bytes(compiled.as_text())
+    out = {
+        "flops": float(cost.get("flops", 0.0)),
+        "hbm": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll.get("total", 0)),
+        "coll_by_kind": {k: v for k, v in coll.items() if k != "_counts"},
+        "coll_counts": coll.get("_counts", {}),
+        "t_lower": t_lower,
+        "t_compile": t_compile,
+    }
+    if want_mem:
+        out["mem"] = _mem_dict(compiled.memory_analysis())
+    return out
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            grad_gz: str | None = None, fsdp_gz: bool = False,
+            remat: str = "full", eb: float = 1e-4,
+            capacity_factor: float = 0.6, skip_correction: bool = False,
+            fsdp: bool = True, mla_dense: bool = False,
+            cache_dtype: str = "float32", parallel_block: bool = False,
+            loss_chunk: int = 0, moe_gz_eb: float = 0.0) -> dict:
+    cfg = registry.get(arch)
+    if mla_dense:
+        cfg = dataclasses.replace(cfg, mla_chunk=0)
+    if parallel_block:
+        cfg = dataclasses.replace(cfg, parallel_block=True)
+    if loss_chunk:
+        cfg = dataclasses.replace(cfg, loss_chunk=loss_chunk)
+    if moe_gz_eb:
+        cfg = dataclasses.replace(cfg, moe_dispatch_gz_eb=moe_gz_eb)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+
+    gz = GZConfig(eb=eb, algo=grad_gz, capacity_factor=capacity_factor) \
+        if grad_gz else None
+    fgz = GZConfig(eb=eb, algo="ring", capacity_factor=capacity_factor) \
+        if fsdp_gz else None
+    kw = dict(grad_gz=gz, fsdp_gz=fgz, remat=remat, fsdp=fsdp,
+              cache_dtype=cache_dtype)
+
+    main = lower_cost(cfg, shape, mesh, want_mem=True, **kw)
+
+    if skip_correction:
+        corrected = {k: main[k] for k in ("flops", "hbm", "coll")}
+        extra = {"detail": "skipped"}
+    else:
+        extra = costing.corrections(
+            cfg, lambda c, u: lower_cost(c, shape, mesh, unroll=u, **kw)
+        )
+        corrected = costing.apply_corrections(main, extra)
+
+    roof = hlo_stats.roofline_terms(
+        corrected["flops"], corrected["hbm"], corrected["coll"], 1
+    )
+
+    n = cfg.param_count()
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens_total = shape.global_batch * shape.seq_len
+        model_flops = 6 * n_active * tokens_total / chips
+    else:
+        model_flops = 2 * n_active * shape.global_batch / chips
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": shape.kind,
+        "grad_gz": grad_gz,
+        "fsdp_gz": fsdp_gz,
+        "fsdp": fsdp,
+        "mla_dense": mla_dense,
+        "cache_dtype": cache_dtype,
+        "parallel_block": parallel_block,
+        "loss_chunk": loss_chunk,
+        "remat": remat,
+        "lower_s": round(main["t_lower"], 2),
+        "compile_s": round(main["t_compile"], 2),
+        "reported": {k: main[k] for k in ("flops", "hbm", "coll")},
+        "scan_correction": {
+            k: v for k, v in extra.items() if k != "detail"
+        },
+        "corrected": corrected,
+        "collective_by_kind_once": main["coll_by_kind"],
+        "collective_counts_once": main["coll_counts"],
+        "memory_analysis": main.get("mem", {}),
+        "roofline": roof,
+        "params": n,
+        "active_params": n_active,
+        "model_flops_per_device": model_flops,
+        "useful_flops_frac": (
+            model_flops / corrected["flops"] if corrected["flops"] else None
+        ),
+    }
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.arch_ids())
+    ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--grad-gz", default=None,
+                    choices=["redoub", "ring", "intring"])
+    ap.add_argument("--fsdp-gz", action="store_true")
+    ap.add_argument("--remat", default="full", choices=["full", "none"])
+    ap.add_argument("--eb", type=float, default=1e-4)
+    ap.add_argument("--capacity-factor", type=float, default=0.6)
+    ap.add_argument("--skip-correction", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="replicate params over data (weights-resident serving)")
+    ap.add_argument("--mla-dense", action="store_true",
+                    help="dense (unchunked) MLA attention — §Perf H2 baseline")
+    ap.add_argument("--cache-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--parallel-block", action="store_true",
+                    help="PaLM-style parallel attn+MLP: one TP psum/layer")
+    ap.add_argument("--loss-chunk", type=int, default=0,
+                    help="sequence-chunked vocab loss (0 = one-shot)")
+    ap.add_argument("--moe-gz-eb", type=float, default=0.0,
+                    help="compress the MoE dispatch all_to_all at this eb")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    res = run_one(
+        args.arch, args.shape, multi_pod=args.multi_pod,
+        grad_gz=args.grad_gz, fsdp_gz=args.fsdp_gz, remat=args.remat,
+        eb=args.eb, capacity_factor=args.capacity_factor,
+        skip_correction=args.skip_correction, fsdp=not args.no_fsdp,
+        mla_dense=args.mla_dense, cache_dtype=args.cache_dtype,
+        parallel_block=args.parallel_block, loss_chunk=args.loss_chunk,
+        moe_gz_eb=args.moe_gz_eb,
+    )
+    os.makedirs(args.out, exist_ok=True)
+    mesh_tag = "multi" if args.multi_pod else "single"
+    gz_tag = f"_gz-{args.grad_gz}" if args.grad_gz else ""
+    fz_tag = "_fsdpgz" if args.fsdp_gz else ""
+    tag = f"_{args.tag}" if args.tag else ""
+    path = os.path.join(
+        args.out,
+        f"{args.arch}_{args.shape}_{mesh_tag}{gz_tag}{fz_tag}{tag}.json",
+    )
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    print(json.dumps({k: res[k] for k in
+                      ("arch", "shape", "mesh", "compile_s", "corrected",
+                       "roofline", "useful_flops_frac")}, indent=1))
+    print(f"\nwritten: {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Extract roofline terms from lowered/compiled XLA artifacts.
+
+``collective_bytes`` parses the optimized HLO text and sums the result
+shapes of every collective op (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, including their async -start forms).
+Result-shape accounting is recorded in EXPERIMENTS.md §Roofline: for
+all-reduce it equals the payload, for all-gather the received bytes, for
+reduce-scatter the post-reduce shard — a consistent, reproducible proxy
+for wire traffic per device.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_bytes", "roofline_terms", "HW_V5E"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%|\S+ = )?(?P<shapes>.*?)\s"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-op-kind result bytes summed over the module (per device)."""
+    out: dict = defaultdict(int)
+    counts: dict = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if "-done(" in line:
+            continue  # -done carries the same payload as -start
+        total = 0
+        for dtype, dims in _SHAPE_RE.findall(m.group("shapes")):
+            if dtype in _DTYPE_BYTES:
+                total += _shape_bytes(dtype, dims)
+        out[op] += total
+        counts[op] += 1
+    out = dict(out)
+    out["_counts"] = dict(counts)
+    out["total"] = sum(v for k, v in out.items() if not k.startswith("_") and k != "total")
+    return out
+
+
+# TPU v5e constants (per chip) — from the assignment brief.
+HW_V5E = {
+    "peak_flops": 197e12,   # bf16
+    "hbm_bw": 819e9,        # bytes/s
+    "ici_bw": 50e9,         # bytes/s/link
+}
+
+
+def roofline_terms(
+    flops: float, hbm_bytes: float, coll_bytes: float, chips: int, hw=HW_V5E
+) -> dict:
+    """The three §Roofline terms, in seconds.
+
+    ``flops``/``hbm_bytes`` are totals for the module across all chips
+    (XLA cost_analysis of the SPMD module is per-device — callers pass
+    per-device values with chips=1, or totals with the real chip count;
+    we use per-device values with chips=1 everywhere for consistency).
+    """
+    compute = flops / (chips * hw["peak_flops"])
+    memory = hbm_bytes / (chips * hw["hbm_bw"])
+    collective = coll_bytes / (chips * hw["ici_bw"])
+    dominant = max(
+        ("compute", compute), ("memory", memory), ("collective", collective),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "dominant": dominant,
+    }

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets --xla_force_host_platform_device_count=512 before
+any jax initialization; smoke tests see 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_axis_sizes", "dp_axes_of"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes_of(mesh) -> tuple:
+    return tuple(ax for ax in mesh.axis_names if ax in ("pod", "data"))

@@ -1,0 +1,149 @@
+"""Assigned input shapes + ShapeDtypeStruct input specs for the dry-run.
+
+INPUT_SHAPES are the four assigned (seq_len, global_batch) points.  Decode
+shapes lower ``serve_step`` (ONE token against a seq_len KV cache);
+long_500k additionally requires a sub-quadratic path: SSM/hybrid run their
+recurrent state, attention archs run the sliding-window variant
+(window=8192) — see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import KVCacheSpec
+from repro.models.config import ModelConfig
+
+__all__ = ["InputShape", "INPUT_SHAPES", "train_specs", "decode_plan", "decode_specs"]
+
+LONG_WINDOW = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "train"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def _batch_tree(cfg: ModelConfig, b: int, s: int):
+    s_text = s - (cfg.n_prefix if cfg.family in ("vlm", "audio") else 0)
+    tree = {
+        "tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+    }
+    if cfg.family in ("vlm", "audio") and cfg.n_prefix:
+        tree["prefix"] = jax.ShapeDtypeStruct((b, cfg.n_prefix, cfg.d_model),
+                                              jnp.float32)
+    if cfg.family == "encdec":
+        tree["enc_input"] = jax.ShapeDtypeStruct((b, cfg.n_prefix, cfg.d_model),
+                                                 jnp.float32)
+    return tree
+
+
+def train_specs(cfg: ModelConfig, shape: InputShape, mesh):
+    """(batch ShapeDtypeStructs, batch PartitionSpecs) for a train shape.
+
+    prefill_32k is lowered as the forward pass of train_step machinery
+    (prefill IS a forward pass); global batch is sharded over the dp axes.
+    """
+    dp = tuple(ax for ax in mesh.axis_names if ax in ("pod", "data"))
+    tree = _batch_tree(cfg, shape.global_batch, shape.seq_len)
+    specs = jax.tree.map(
+        lambda a: P(*((dp,) + (None,) * (len(a.shape) - 1))), tree
+    )
+    return tree, specs
+
+
+def decode_plan(cfg: ModelConfig, shape: InputShape, mesh) -> KVCacheSpec:
+    """Decide batch-sharding vs context-parallel for a decode shape."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_total = sizes.get("data", 1) * sizes.get("pod", 1)
+    window = 0
+    if shape.seq_len > 100_000 and cfg.family not in ("ssm",):
+        window = LONG_WINDOW  # sub-quadratic sliding-window variant
+    if shape.global_batch >= dp_total:
+        return KVCacheSpec(s_total=shape.seq_len, cp_axis=None, cp_size=1,
+                           window=window)
+    # batch too small to fill dp: context-parallel the cache over "data"
+    return KVCacheSpec(
+        s_total=shape.seq_len,
+        cp_axis="data",
+        cp_size=sizes.get("data", 1),
+        window=window,
+    )
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, mesh, model,
+                 cache_dtype=jnp.float32):
+    """(inputs ShapeDtypeStructs, PartitionSpecs) for serve_step.
+
+    Returns (cache_tree, cache_specs, tokens, tokens_spec, plan) with GLOBAL
+    shapes (batch un-sharded, cache context dim global).  ``cache_dtype``
+    applies to the k/v entries (bf16 halves cache HBM + flash-decode reads
+    — §Perf H1 iteration 2); latent/state entries stay f32.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = tuple(ax for ax in mesh.axis_names if ax in ("pod", "data"))
+    dp_total = 1
+    for ax in dp:
+        dp_total *= sizes[ax]
+    plan = decode_plan(cfg, shape, mesh)
+    tp = sizes.get("model", 1)
+    batch_sharded = plan.cp_axis is None
+    b_local = shape.global_batch // dp_total if batch_sharded else shape.global_batch
+    local = model.cache_defs(b_local, plan)
+
+    cache, specs = {}, {}
+    for k, shp in local.items():
+        shp = list(shp)
+        spec = [None] * len(shp)
+        if k in ("k", "v"):
+            # (L, B, S_loc, kv_local, hd)
+            if batch_sharded:
+                shp[1] *= dp_total
+                spec[1] = dp
+            else:
+                shp[2] *= plan.cp_size
+                spec[2] = "data"
+            shp[3] *= tp
+            spec[3] = "model"
+        elif k == "mla":
+            if batch_sharded:
+                shp[1] *= dp_total
+                spec[1] = dp
+        elif k in ("conv_x", "ssm"):
+            if batch_sharded:
+                shp[1] *= dp_total
+                spec[1] = dp
+            dim = 2 if k == "conv_x" else 2  # channel/head dim is TP-sharded
+            last = {"conv_x": len(shp) - 1, "ssm": 2}[k]
+            shp[last] *= tp
+            spec[last] = "model"
+        elif k == "conv_bc":
+            if batch_sharded:
+                shp[1] *= dp_total
+                spec[1] = dp
+        elif k == "enc_out":
+            if batch_sharded:
+                shp[0] *= dp_total
+                spec[0] = dp
+        dt = cache_dtype if k in ("k", "v") else jnp.float32
+        cache[k] = jax.ShapeDtypeStruct(tuple(shp), dt)
+        specs[k] = P(*spec)
+
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tokens_spec = P(dp, None) if batch_sharded else P(None, None)
+    return cache, specs, tokens, tokens_spec, plan

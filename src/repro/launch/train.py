@@ -1,0 +1,92 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch minitron-8b --smoke \
+        --steps 50 --batch 8 --seq 128 [--grad-gz redoub] [--eb 1e-4]
+
+On this CPU container it trains the reduced (smoke) configs for real —
+a few hundred steps of a ~100M-class model is examples/quickstart.py.
+On a TPU pod the same driver runs the full configs (mesh from
+make_production_mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint
+from repro.configs import registry
+from repro.core.collectives import GZConfig
+from repro.data.pipeline import SyntheticStream
+from repro.launch.shapes import InputShape, train_specs
+from repro.launch.training import make_setup, make_train_step
+from repro.models.parallel import init_params
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+
+def train(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minitron-8b", choices=registry.arch_ids())
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-gz", default=None,
+                    choices=["redoub", "ring", "intring"])
+    ap.add_argument("--eb", type=float, default=1e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = registry.get(args.arch, smoke=args.smoke)
+    n_dev = len(jax.devices())
+    # widest (data, model) factorization available on this host
+    data = 1
+    while data * 2 <= n_dev and args.batch % (data * 2) == 0 and (n_dev // (data * 2)) * (data * 2) == n_dev:
+        data *= 2
+    model_par = 1
+    mesh = jax.make_mesh((data, model_par), ("data", "model"))
+
+    gz = GZConfig(eb=args.eb, algo=args.grad_gz) if args.grad_gz else None
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 20, 1))
+    setup = make_setup(cfg, mesh, opt=opt, grad_gz=gz)
+    shape = InputShape("cli", args.seq, args.batch, "train")
+    _, bspecs = train_specs(cfg, shape, mesh)
+    step_fn = make_train_step(setup, bspecs)
+
+    params = init_params(setup.defs, jax.random.key(args.seed))
+    opt_state = adamw_init(params)
+    stream = SyntheticStream(cfg, args.batch, args.seq, seed=args.seed)
+
+    print(f"arch={cfg.arch_id} params={cfg.param_count()/1e6:.1f}M "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"grad_gz={args.grad_gz}")
+    losses = []
+    t0 = time.time()
+    for step, batch in zip(range(args.steps), stream):
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        loss = float(m["loss"])
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {loss:.4f} gnorm {float(m['gnorm']):.3f} "
+                  f"lr {float(m['lr']):.2e} ({dt:.1f}s)")
+        if args.ckpt_dir and args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            d = checkpoint.save(args.ckpt_dir, step + 1,
+                                {"params": params, "opt": opt_state})
+            print(f"  ckpt -> {d}")
+    assert np.isfinite(losses).all(), "NaN loss"
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    return losses
+
+
+if __name__ == "__main__":
+    train()

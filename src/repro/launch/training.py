@@ -1,0 +1,230 @@
+"""train_step / serve_step builders — where gZCCL meets the training loop.
+
+The returned step functions are jax.jit-able with explicit in/out
+shardings (the dry-run lowers exactly these).  Everything inside is one
+shard_map body over the production mesh:
+
+  * forward/backward with FSDP param gathers (optionally gZ-compressed
+    allgather; its custom_vjp makes the gradient reduce-scatter compressed
+    too — the [29] pattern with gZ error control),
+  * the grad-sync rule validated in tests/_mp_model_parallel_child.py:
+    psum every grad leaf over each mesh axis ABSENT from its spec; the
+    differentiated loss is pre-scaled by 1/(tp * n_dp) to cancel
+    shard_map's sum-over-ranks semantics,
+  * cross-pod / small-leaf gradient reduction through gz_allreduce (the
+    paper's headline collective) when a GZConfig is set,
+  * AdamW with sharded f32 moments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.collectives import GZConfig, gz_allreduce
+from repro.core.grad_sync import SyncConfig
+from repro.models.attention import KVCacheSpec
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.models.parallel import ParallelCtx, param_specs, param_shapes
+from repro.core.shmap import shard_map
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["TrainSetup", "make_setup", "make_train_step", "make_serve_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSetup:
+    cfg: ModelConfig
+    ctx: ParallelCtx
+    model: Model
+    mesh: object
+    defs: dict
+    specs: dict
+    opt: AdamWConfig
+    grad_gz: Optional[GZConfig]  # gz for cross-pod/small-leaf grad allreduce
+
+    def opt_specs(self):
+        return {
+            "mu": self.specs,
+            "nu": self.specs,
+            "step": P(),
+        }
+
+    def named(self, spec_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+
+def _strip_axis(spec: P, ax: str) -> P:
+    def strip(entry):
+        if entry == ax:
+            return None
+        if isinstance(entry, tuple):
+            kept = tuple(e for e in entry if e != ax)
+            return kept if kept else None
+        return entry
+
+    return P(*(strip(e) for e in tuple(spec)))
+
+
+def make_setup(
+    cfg: ModelConfig,
+    mesh,
+    *,
+    opt: AdamWConfig = AdamWConfig(),
+    fsdp_gz: Optional[GZConfig] = None,
+    grad_gz: Optional[GZConfig] = None,
+    remat: str = "full",
+    fsdp: bool = True,
+) -> TrainSetup:
+    """``fsdp=False`` replicates parameters over the data axis (no per-layer
+    gathers) — the weights-resident serving mode (§Perf hillclimb 1)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_axes = tuple(ax for ax in mesh.axis_names if ax in ("pod", "data"))
+    fsdp_sync = SyncConfig(gz=fsdp_gz, relative_eb=False) if fsdp_gz else None
+    ctx = ParallelCtx(
+        tp_axis="model",
+        fsdp_axis="data",
+        dp_axes=dp_axes,
+        tp_size=sizes.get("model", 1),
+        fsdp_size=sizes.get("data", 1) if fsdp else 1,
+        fsdp_sync=fsdp_sync,
+        remat=remat,
+    )
+    model = Model(cfg, ctx)
+    defs = model.param_defs()
+    if not fsdp:
+        defs = jax.tree.map(
+            lambda d: dataclasses.replace(d, spec=_strip_axis(d.spec, "data")),
+            defs,
+            is_leaf=lambda x: hasattr(x, "spec") and hasattr(x, "init"),
+        )
+    return TrainSetup(
+        cfg=cfg, ctx=ctx, model=model, mesh=mesh, defs=defs,
+        specs=param_specs(defs), opt=opt, grad_gz=grad_gz,
+    )
+
+
+def _axes_in_spec(spec: P) -> set:
+    return set(jax.tree.leaves(tuple(spec)))
+
+
+def _sync_grads(grads, specs, mesh_axes, grad_gz: Optional[GZConfig]):
+    """psum each leaf over every mesh axis absent from its spec.
+
+    With a GZConfig, reductions over dp axes ("pod"/"data") go through the
+    compressed gz_allreduce; the tiny "model"-axis cases stay psum.
+    """
+
+    def sync(g, s):
+        present = _axes_in_spec(s)
+        for ax in mesh_axes:
+            if ax in present:
+                continue
+            if grad_gz is not None and ax in ("pod", "data"):
+                g = gz_allreduce(g, ax, grad_gz)
+            else:
+                g = lax.psum(g, ax)
+        return g
+
+    return jax.tree.map(sync, grads, specs)
+
+
+def _global_grad_norm(grads, specs, sizes) -> jnp.ndarray:
+    """Exact global norm of the synced (logical) gradient: local sum of
+    squares per leaf / replication factor, psum'd over the whole mesh."""
+    total = jnp.float32(0.0)
+    mesh_axes = list(sizes)
+    for g, s in zip(jax.tree.leaves(grads), jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))):
+        present = _axes_in_spec(s)
+        rep = 1
+        for ax in mesh_axes:
+            if ax not in present:
+                rep *= sizes[ax]
+        total = total + jnp.sum(jnp.square(g.astype(jnp.float32))) / rep
+    for ax in mesh_axes:
+        total = lax.psum(total, ax)
+    return jnp.sqrt(total)
+
+
+def make_train_step(setup: TrainSetup, batch_specs):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    cfg, ctx, model = setup.cfg, setup.ctx, setup.model
+    sizes = dict(zip(setup.mesh.axis_names, setup.mesh.devices.shape))
+    mesh_axes = tuple(setup.mesh.axis_names)
+    n_dp = 1
+    for ax in ctx.dp_axes:
+        n_dp *= sizes[ax]
+    scale = 1.0 / (ctx.tp_size * n_dp)
+    specs = setup.specs
+
+    def body(params, opt_state, batch):
+        def scaled_loss(p):
+            return model.loss_fn(p, batch) * scale
+
+        loss, grads = jax.value_and_grad(scaled_loss)(params)
+        loss = loss / scale
+        for ax in ctx.dp_axes:
+            loss = lax.pmean(loss, ax)
+        grads = _sync_grads(grads, specs, mesh_axes, setup.grad_gz)
+        gnorm = _global_grad_norm(grads, specs, sizes)
+        params, opt_state, om = adamw_update(
+            params, grads, opt_state, setup.opt, grad_norm=gnorm
+        )
+        metrics = {"loss": loss, "gnorm": om["gnorm"], "lr": om["lr"]}
+        return params, opt_state, metrics
+
+    ospecs = setup.opt_specs()
+    mspecs = {"loss": P(), "gnorm": P(), "lr": P()}
+    step = shard_map(
+        body,
+        mesh=setup.mesh,
+        in_specs=(specs, ospecs, batch_specs),
+        out_specs=(specs, ospecs, mspecs),
+    )
+    return jax.jit(
+        step,
+        in_shardings=(setup.named(specs), setup.named(ospecs),
+                      setup.named(batch_specs)),
+        out_shardings=(setup.named(specs), setup.named(ospecs),
+                       setup.named(mspecs)),
+        donate_argnums=(0, 1),
+    )
+
+
+def make_serve_step(setup: TrainSetup, cache_specs, tokens_spec, plan: KVCacheSpec):
+    """Returns step(params, cache, tokens, pos) -> (logits, new_cache)."""
+    model = setup.model
+    specs = setup.specs
+    v = setup.cfg.padded_vocab()
+
+    def body(params, cache, tokens, pos):
+        logits, new_cache = model.decode_fn(params, cache, tokens, pos[0], plan)
+        return logits, new_cache
+
+    logits_spec = P(*(tuple(tokens_spec)[:1] + (None, None)))
+    step = shard_map(
+        body,
+        mesh=setup.mesh,
+        in_specs=(specs, cache_specs, tokens_spec, P(None)),
+        out_specs=(logits_spec, cache_specs),
+    )
+    return jax.jit(
+        step,
+        in_shardings=(
+            setup.named(specs),
+            setup.named(cache_specs),
+            NamedSharding(setup.mesh, tokens_spec),
+            NamedSharding(setup.mesh, P(None)),
+        ),
+        donate_argnums=(1,),
+    )

@@ -1,0 +1,303 @@
+"""GQA attention: training (flash-style chunked), prefill, and decode.
+
+Tensor-parallel layout (rank-centric, inside shard_map):
+  * q heads sharded over the TP axis (padded to a multiple of tp —
+    zero-init extra heads, their out-proj rows are zero).
+  * k/v projection weights replicated over TP (they are small); each rank
+    *uses* only the kv heads its q heads need (``_local_kv``), so the
+    decode KV cache IS sharded over TP (kv dim) and over the context-
+    parallel axis (sequence dim) — flash-decoding with a partial-softmax
+    psum combine.
+
+Training attention is a pure-JAX flash pattern: lax.scan over kv chunks
+with running (max, sumexp, acc) so the (S, S) score matrix never
+materializes — required for prefill_32k to fit HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rope
+from repro.models.parallel import ParallelCtx
+
+NEG = -1e30
+
+
+def _local_kv(kv: jnp.ndarray, cfg: ModelConfig, ctx: ParallelCtx) -> jnp.ndarray:
+    """Select this rank's kv heads from the full set: (..., n_kv, hd) ->
+    (..., kv_local, hd)."""
+    tp, n_kv = ctx.tp_size, cfg.n_kv_heads
+    if tp == 1:
+        return kv
+    if n_kv >= tp:
+        kv_local = n_kv // tp
+        start = ctx.tp_index() * kv_local
+        return lax.dynamic_slice_in_dim(kv, start, kv_local, axis=-2)
+    # replication groups: tp/n_kv ranks share one kv head
+    head = ctx.tp_index() // (tp // n_kv)
+    return lax.dynamic_slice_in_dim(kv, head, 1, axis=-2)
+
+
+def kv_local_heads(cfg: ModelConfig, tp: int) -> int:
+    return max(cfg.n_kv_heads // tp, 1)
+
+
+def _repeat_kv(kv: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, S, kv, hd) -> (B, S, kv*n_rep, hd)."""
+    if n_rep == 1:
+        return kv
+    b, s, k, d = kv.shape
+    return jnp.broadcast_to(kv[:, :, :, None, :], (b, s, k, n_rep, d)).reshape(
+        b, s, k * n_rep, d
+    )
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    chunk: int = 1024,
+) -> jnp.ndarray:
+    """Chunked-softmax attention, O(S) memory.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, H, D) (kv already repeated to H heads).
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill=0).
+    ``window`` > 0 applies a sliding-window causal mask.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * scale
+    chunk = min(chunk, sk)
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = kp.reshape(b, n_chunks, chunk, h, d)
+    vp = vp.reshape(b, n_chunks, chunk, h, d)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        m, s, acc = carry
+        kc, vc, c_idx = inp
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kc.astype(jnp.float32))
+        if causal:
+            mask = k_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= k_pos[None, :] > (q_pos[:, None] - window)
+        else:
+            mask = jnp.ones((sq, chunk), bool)
+        mask &= (k_pos < sk)[None, :]
+        logits = jnp.where(mask[None, None], logits, NEG)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        s_new = s * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vc.astype(jnp.float32)
+        )
+        return (m_new, s_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), NEG, jnp.float32)
+    s0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, s, acc), _ = lax.scan(
+        body,
+        (m0, s0, a0),
+        (
+            jnp.moveaxis(kp, 1, 0),
+            jnp.moveaxis(vp, 1, 0),
+            jnp.arange(n_chunks),
+        ),
+    )
+    out = acc / jnp.maximum(s, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, Sq, H, D)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnParamsShape:
+    """Helper documenting the weight layout (see blocks.py for ParamDefs)."""
+
+
+def attention_train(
+    h: jnp.ndarray,
+    w: dict,
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+    *,
+    positions: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,
+    cross_kv: jnp.ndarray | None = None,
+    reduce: bool = True,
+) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill).
+
+    w: {"wq": (d, hp*hd/tp local), "wk": (d, n_kv*hd), "wv": same,
+        "wo": (hp*hd/tp local, d)} — wq/wo are TP-sharded (local arrays),
+    wk/wv replicated; all FSDP-sharded on the d dim (gathered here).
+    ``cross_kv``: (B, S_enc, d) encoder output for cross-attention.
+    """
+    b, s, _ = h.shape
+    hd = cfg.head_dim
+    h_local = cfg.padded_heads(ctx.tp_size) // ctx.tp_size
+    wq = ctx.gather(w["wq"], dim=0)
+    wk = ctx.gather(w["wk"], dim=0)
+    wv = ctx.gather(w["wv"], dim=0)
+    wo = ctx.gather(w["wo"], dim=1)
+    q = jnp.einsum("bsd,dh->bsh", h, wq).reshape(b, s, h_local, hd)
+    kv_src = cross_kv if cross_kv is not None else h
+    sk = kv_src.shape[1]
+    k = jnp.einsum("bsd,dh->bsh", kv_src, wk).reshape(b, sk, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bsd,dh->bsh", kv_src, wv).reshape(b, sk, cfg.n_kv_heads, hd)
+    if cross_kv is None:
+        sin, cos = rope(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    k = _local_kv(k, cfg, ctx)
+    v = _local_kv(v, cfg, ctx)
+    n_rep = h_local // k.shape[-2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    if cfg.use_flash_kernel:
+        from repro.kernels import flash_attn
+
+        out = flash_attn.flash_attention(
+            q, k, v, causal=causal and cross_kv is None, window=window,
+            interpret=jax.default_backend() != "tpu",
+        )
+    else:
+        out = flash_attention(
+            q, k, v, causal=causal and cross_kv is None, window=window
+        )
+    out = out.reshape(b, s, h_local * hd)
+    out = jnp.einsum("bsh,hd->bsd", out, wo)
+    return ctx.tp_reduce(out) if reduce else out
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token) with context-parallel KV cache — flash-decoding
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCacheSpec:
+    """Decode cache layout: (B_local, S_local, kv_local, hd) per rank.
+
+    S (the cache context) is sharded over ``cp_axis`` (the "data" axis)
+    when the batch cannot occupy it (long-context, small batch); kv heads
+    are sharded over TP.  ``window`` > 0 means ring-buffer semantics.
+    """
+
+    s_total: int
+    cp_axis: str | None
+    cp_size: int
+    window: int = 0
+
+    @property
+    def s_local(self) -> int:
+        s = self.window if self.window else self.s_total
+        return s // max(self.cp_size, 1)
+
+
+def attention_decode(
+    h: jnp.ndarray,
+    w: dict,
+    cache_k: jnp.ndarray,
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+    spec: KVCacheSpec,
+):
+    """One-token attention against a (possibly context-parallel) KV cache.
+
+    h: (B, 1, d). cache_k/v: (B, S_local, kv_local, hd).  pos: scalar int32
+    — the absolute position of the incoming token.  Returns (out, new_k,
+    new_v).  Combine across the context-parallel axis is the flash-decoding
+    partial-softmax psum.
+    """
+    b = h.shape[0]
+    hd = cfg.head_dim
+    h_local = cfg.padded_heads(ctx.tp_size) // ctx.tp_size
+    wq = ctx.gather(w["wq"], dim=0)
+    wk = ctx.gather(w["wk"], dim=0)
+    wv = ctx.gather(w["wv"], dim=0)
+    wo = ctx.gather(w["wo"], dim=1)
+    q = jnp.einsum("bsd,dh->bsh", h, wq).reshape(b, 1, h_local, hd)
+    k_new = jnp.einsum("bsd,dh->bsh", h, wk).reshape(b, 1, cfg.n_kv_heads, hd)
+    v_new = jnp.einsum("bsd,dh->bsh", h, wv).reshape(b, 1, cfg.n_kv_heads, hd)
+    sin, cos = rope(pos[None], hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k_new = apply_rope(k_new, sin, cos)
+    k_new = _local_kv(k_new, cfg, ctx)
+    v_new = _local_kv(v_new, cfg, ctx)
+    kv_local = k_new.shape[-2]
+
+    # Which cache slot does this token land in, and is it mine?
+    s_local = spec.s_local
+    if spec.window:
+        slot_global = pos % spec.window
+    else:
+        slot_global = pos
+    cp_rank = (
+        lax.axis_index(spec.cp_axis) if spec.cp_axis and spec.cp_size > 1 else 0
+    )
+    my_start = cp_rank * s_local
+    slot_local = jnp.clip(slot_global - my_start, 0, s_local - 1)
+    mine = (slot_global >= my_start) & (slot_global < my_start + s_local)
+    upd_k = lax.dynamic_update_slice(
+        cache_k, k_new.astype(cache_k.dtype), (0, slot_local, 0, 0)
+    )
+    upd_v = lax.dynamic_update_slice(
+        cache_v, v_new.astype(cache_v.dtype), (0, slot_local, 0, 0)
+    )
+    new_k = jnp.where(mine, upd_k, cache_k)
+    new_v = jnp.where(mine, upd_v, cache_v)
+
+    # Validity of cache slots (global positions covered so far, incl. new).
+    slot_ids = my_start + jnp.arange(s_local)
+    if spec.window:
+        # ring buffer: slot holds position p iff p = latest p' <= pos with
+        # p' % window == slot; valid iff within the last `window` tokens.
+        cycle = (pos // spec.window) * spec.window + slot_ids
+        slot_pos = jnp.where(cycle <= pos, cycle, cycle - spec.window)
+        valid = (slot_pos >= 0) & (slot_pos > pos - spec.window)
+    else:
+        slot_pos = slot_ids
+        valid = slot_ids <= pos
+
+    n_rep = h_local // kv_local
+    kk = _repeat_kv(new_k, n_rep)  # (B, S_local, H_local, hd)
+    vv = _repeat_kv(new_v, n_rep)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", (q * scale).astype(jnp.float32), kk.astype(jnp.float32)
+    )  # (B, H, 1, S_local)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG)
+    m_l = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m_l[..., None])
+    s_l = jnp.sum(p, axis=-1)
+    o_l = jnp.einsum("bhqk,bkhd->bhqd", p, vv.astype(jnp.float32))
+    if spec.cp_axis and spec.cp_size > 1:
+        m = lax.pmax(m_l, spec.cp_axis)
+        corr = jnp.exp(m_l - m)
+        s = lax.psum(s_l * corr, spec.cp_axis)
+        o = lax.psum(o_l * corr[..., None], spec.cp_axis)
+    else:
+        m, s, o = m_l, s_l, o_l
+    out = (o / jnp.maximum(s, 1e-30)[..., None]).astype(h.dtype)
+    out = jnp.moveaxis(out, 1, 2).reshape(b, 1, h_local * hd)
+    proj = ctx.tp_reduce(jnp.einsum("bsh,hd->bsd", out, wo))
+    return proj, new_k, new_v

@@ -1,0 +1,179 @@
+"""Per-block ParamDef trees and apply functions for every family.
+
+Shapes below are GLOBAL; PartitionSpecs encode TP ("model") and FSDP
+("data") placement.  A leading L dim (stacked layers) is added by model.py
+for scanned stacks — specs gain a leading None there.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention, mla, moe, ssm
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.parallel import ParallelCtx, ParamDef
+
+__all__ = [
+    "attn_defs",
+    "mlp_defs",
+    "moe_defs",
+    "ssm_defs",
+    "mla_defs",
+    "dense_block",
+    "moe_block",
+    "ssm_block",
+    "mla_block",
+]
+
+
+def _pd(shape, spec, init="scaled", dtype="bfloat16"):
+    return ParamDef(shape=tuple(shape), spec=spec, init=init, dtype=dtype)
+
+
+def attn_defs(cfg: ModelConfig, tp: int) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    hp = cfg.padded_heads(tp)
+    return {
+        "wq": _pd((d, hp * hd), P("data", "model")),
+        "wk": _pd((d, cfg.n_kv_heads * hd), P("data", None)),
+        "wv": _pd((d, cfg.n_kv_heads * hd), P("data", None)),
+        "wo": _pd((hp * hd, d), P("model", "data")),
+    }
+
+
+def mlp_defs(cfg: ModelConfig) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "wi": _pd((d, ff), P("data", "model")),
+        "wg": _pd((d, ff), P("data", "model")),
+        "wo": _pd((ff, d), P("model", "data")),
+    }
+
+
+def moe_defs(cfg: ModelConfig) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": _pd((d, e), P("data", None)),
+        "wi": _pd((e, d, ff), P("model", "data", None)),
+        "wg": _pd((e, d, ff), P("model", "data", None)),
+        "wo": _pd((e, ff, d), P("model", None, "data")),
+    }
+
+
+def ssm_defs(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    w = s.conv_width
+    return {
+        "w_z": _pd((d, di), P("data", "model")),
+        "w_x": _pd((d, di), P("data", "model")),
+        "w_bc": _pd((d, 2 * s.d_state), P("data", None)),
+        "w_dt": _pd((d, h), P("data", "model")),
+        "conv_x": _pd((w, di), P(None, "model"), init="scaled"),
+        "conv_bc": _pd((w, 2 * s.d_state), P(None, None), init="scaled"),
+        "A_log": _pd((h,), P("model"), init="zeros", dtype="float32"),
+        "D": _pd((h,), P("model"), init="ones", dtype="float32"),
+        "dt_bias": _pd((h,), P("model"), init="zeros", dtype="float32"),
+        "norm": _pd((di,), P("model"), init="ones"),
+        "w_out": _pd((di, d), P("model", "data")),
+    }
+
+
+def mla_defs(cfg: ModelConfig, tp: int) -> dict:
+    m = cfg.mla
+    d = cfg.d_model
+    hp = cfg.padded_heads(tp)
+    return {
+        "wq_a": _pd((d, m.q_lora_rank), P("data", None)),
+        "wq_b": _pd(
+            (m.q_lora_rank, hp * (m.qk_nope_head_dim + m.qk_rope_head_dim)),
+            P(None, "model"),
+        ),
+        "wkv_a": _pd((d, m.kv_lora_rank + m.qk_rope_head_dim), P("data", None)),
+        "wkv_b": _pd(
+            (m.kv_lora_rank, hp * (m.qk_nope_head_dim + m.v_head_dim)),
+            P(None, "model"),
+        ),
+        "wo": _pd((hp * m.v_head_dim, d), P("model", "data")),
+    }
+
+
+def norm_def(cfg: ModelConfig) -> ParamDef:
+    return ParamDef(shape=(cfg.d_model,), spec=P(None), init="ones")
+
+
+def _mlp(h, w, ctx: ParallelCtx, reduce: bool = True):
+    wi = ctx.gather(w["wi"], dim=0)
+    wg = ctx.gather(w["wg"], dim=0)
+    wo = ctx.gather(w["wo"], dim=1)
+    a = jnp.einsum("bsd,df->bsf", h, wg)
+    a = a * jax.nn.sigmoid(a.astype(jnp.float32)).astype(a.dtype)
+    b = jnp.einsum("bsd,df->bsf", h, wi)
+    out = jnp.einsum("bsf,fd->bsd", a * b, wo)
+    return ctx.tp_reduce(out) if reduce else out
+
+
+def dense_block(h, w, cfg: ModelConfig, ctx: ParallelCtx, *, positions,
+                causal=True, window=0, cross_kv=None):
+    """Pre-norm attention + SwiGLU MLP block (dense / vlm / enc-dec).
+
+    With cfg.parallel_block (PaLM-style): attention and MLP partials are
+    summed BEFORE one shared TP psum — half the TP-collective bytes/layer.
+    """
+    if cfg.parallel_block and cross_kv is None:
+        a = attention.attention_train(
+            rms_norm(h, w["ln1"], cfg.norm_eps), w["attn"], cfg, ctx,
+            positions=positions, causal=causal, window=window, reduce=False,
+        )
+        m = _mlp(rms_norm(h, w["ln2"], cfg.norm_eps), w["mlp"], ctx,
+                 reduce=False)
+        return h + ctx.tp_reduce(a + m)
+    a = attention.attention_train(
+        rms_norm(h, w["ln1"], cfg.norm_eps), w["attn"], cfg, ctx,
+        positions=positions, causal=causal, window=window,
+    )
+    h = h + a
+    if cross_kv is not None:
+        c = attention.attention_train(
+            rms_norm(h, w["ln_cross"], cfg.norm_eps), w["cross"], cfg, ctx,
+            positions=positions, causal=False, cross_kv=cross_kv,
+        )
+        h = h + c
+    m = _mlp(rms_norm(h, w["ln2"], cfg.norm_eps), w["mlp"], ctx)
+    return h + m
+
+
+def moe_block(h, w, cfg: ModelConfig, ctx: ParallelCtx, *, positions,
+              causal=True, window=0):
+    a = attention.attention_train(
+        rms_norm(h, w["ln1"], cfg.norm_eps), w["attn"], cfg, ctx,
+        positions=positions, causal=causal, window=window,
+    )
+    h = h + a
+    dgz = None
+    if cfg.moe_dispatch_gz_eb:
+        from repro.core.collectives import GZConfig
+
+        dgz = GZConfig(eb=cfg.moe_dispatch_gz_eb, capacity_factor=0.8)
+    m, aux = moe.moe_ffn(rms_norm(h, w["ln2"], cfg.norm_eps), w["moe"], cfg,
+                         ctx, dispatch_gz=dgz)
+    return h + m, aux
+
+
+def ssm_block(h, w, cfg: ModelConfig, ctx: ParallelCtx):
+    y = ssm.ssm_train(rms_norm(h, w["ln1"], cfg.norm_eps), w["ssm"], cfg, ctx)
+    return h + y
+
+
+def mla_block(h, w, cfg: ModelConfig, ctx: ParallelCtx, *, positions):
+    a = mla.mla_train(
+        rms_norm(h, w["ln1"], cfg.norm_eps), w["mla"], cfg, ctx,
+        positions=positions,
+    )
+    h = h + a
+    m = _mlp(rms_norm(h, w["ln2"], cfg.norm_eps), w["mlp"], ctx)
+    return h + m

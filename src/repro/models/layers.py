@@ -1,0 +1,189 @@
+"""Shared layers: RMSNorm, RoPE, vocab-parallel embedding and loss.
+
+All functions are rank-centric shard_map body code operating on local
+shards, parameterized by ParallelCtx.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.parallel import ParallelCtx
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "apply_rope",
+    "embed_lookup",
+    "vocab_parallel_logits",
+    "vocab_parallel_xent",
+    "gather_logits",
+]
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(positions: jnp.ndarray, head_dim: int, theta: float) -> tuple:
+    """(sin, cos) tables for given positions: (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, D); sin/cos: (S, D/2) or broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :] if sin.ndim == 2 else sin
+    c = cos[..., None, :] if cos.ndim == 2 else cos
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1
+    ).astype(x.dtype)
+
+
+def _vocab_range(ctx: ParallelCtx, v_pad: int):
+    v_local = v_pad // ctx.tp_size
+    start = ctx.tp_index() * v_local
+    return start, v_local
+
+
+def embed_lookup(
+    ids: jnp.ndarray, w_embed: jnp.ndarray, ctx: ParallelCtx
+) -> jnp.ndarray:
+    """Vocab-parallel embedding: w_embed local (v_local, d_local_fsdp).
+
+    FSDP-gathers the feature dim, masks out-of-range ids, psums over TP.
+    """
+    w = ctx.gather(w_embed, dim=1)  # (v_local, d)
+    v_local = w.shape[0]
+    start = ctx.tp_index() * v_local
+    local_ids = ids - start
+    valid = (local_ids >= 0) & (local_ids < v_local)
+    emb = jnp.take(w, jnp.clip(local_ids, 0, v_local - 1), axis=0)
+    emb = jnp.where(valid[..., None], emb, 0)
+    return ctx.tp_reduce(emb)
+
+
+def vocab_parallel_logits(
+    h: jnp.ndarray, w_unembed: jnp.ndarray, ctx: ParallelCtx
+) -> jnp.ndarray:
+    """h: (..., d); w_unembed local (d_fsdp_shard, v_local) -> local logits."""
+    w = ctx.gather(w_unembed, dim=0)  # (d, v_local)
+    return jnp.einsum("...d,dv->...v", h.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def vocab_parallel_xent(
+    logits_local: jnp.ndarray,
+    labels: jnp.ndarray,
+    ctx: ParallelCtx,
+    *,
+    mask: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Cross-entropy over TP-sharded logits (Megatron vocab-parallel loss).
+
+    logits_local: (B, S, v_local) f32; labels: (B, S) global ids.
+    Returns mean NLL over (masked) positions, identical on all TP ranks.
+    """
+    v_local = logits_local.shape[-1]
+    start = ctx.tp_index() * v_local
+    # the max is only a numerical-stability shift — no grad flows through it
+    # (stop_gradient BEFORE pmax: pmax has no differentiation rule)
+    m = lax.stop_gradient(jnp.max(logits_local, axis=-1))
+    if ctx.tp_size > 1:
+        m = lax.pmax(m, ctx.tp_axis)
+    z = jnp.sum(jnp.exp(logits_local - m[..., None]), axis=-1)
+    if ctx.tp_size > 1:
+        z = lax.psum(z, ctx.tp_axis)
+    logz = jnp.log(z) + m
+    local_label = labels - start
+    valid = (local_label >= 0) & (local_label < v_local)
+    picked = jnp.take_along_axis(
+        logits_local,
+        jnp.clip(local_label, 0, v_local - 1)[..., None],
+        axis=-1,
+    )[..., 0]
+    picked = jnp.where(valid, picked, 0.0)
+    picked = ctx.tp_reduce(picked)
+    nll = logz - picked
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = jnp.float32(nll.size)
+    return jnp.sum(nll) / denom
+
+
+def chunked_vocab_xent(
+    h: jnp.ndarray,
+    w_unembed: jnp.ndarray,
+    labels: jnp.ndarray,
+    mask: jnp.ndarray,
+    ctx: ParallelCtx,
+    *,
+    chunk: int = 1024,
+) -> jnp.ndarray:
+    """Sequence-chunked vocab-parallel loss (§Perf H2 iteration 3).
+
+    The (B, S, v_local) f32 logits are the largest single activation for
+    big-vocab archs.  This computes them one seq-chunk at a time under
+    jax.checkpoint, so peak logits memory is (B, chunk, v_local); the
+    unembed weight is gathered once outside the loop.  Returns mean NLL
+    (identical math to vocab_parallel_xent).
+    """
+    b, s, _ = h.shape
+    w = ctx.gather(w_unembed, dim=0)  # (d, v_local)
+    chunk = min(chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)))
+    mp = jnp.pad(mask, ((0, 0), (0, pad)))
+
+    @jax.checkpoint
+    def body(carry, inp):
+        nll_sum, m_sum = carry
+        hc, lc, mc = inp  # (B, chunk, ...)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", hc.astype(jnp.float32), w.astype(jnp.float32)
+        )
+        v_local = logits.shape[-1]
+        start = ctx.tp_index() * v_local
+        m = lax.stop_gradient(jnp.max(logits, axis=-1))
+        if ctx.tp_size > 1:
+            m = lax.pmax(m, ctx.tp_axis)
+        z = jnp.sum(jnp.exp(logits - m[..., None]), axis=-1)
+        if ctx.tp_size > 1:
+            z = lax.psum(z, ctx.tp_axis)
+        logz = jnp.log(z) + m
+        local_label = lc - start
+        valid = (local_label >= 0) & (local_label < v_local)
+        picked = jnp.take_along_axis(
+            logits, jnp.clip(local_label, 0, v_local - 1)[..., None], axis=-1
+        )[..., 0]
+        picked = ctx.tp_reduce(jnp.where(valid, picked, 0.0))
+        nll = (logz - picked) * mc
+        return (nll_sum + jnp.sum(nll), m_sum + jnp.sum(mc)), None
+
+    xs = (
+        hp.reshape(b, n_chunks, chunk, -1).swapaxes(0, 1),
+        lp.reshape(b, n_chunks, chunk).swapaxes(0, 1),
+        mp.reshape(b, n_chunks, chunk).swapaxes(0, 1),
+    )
+    (nll_sum, m_sum), _ = lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)), xs)
+    return nll_sum / jnp.maximum(m_sum, 1.0)
+
+
+def gather_logits(logits_local: jnp.ndarray, ctx: ParallelCtx) -> jnp.ndarray:
+    """All-gather TP-sharded logits into the full vocab (decode-time only —
+    payload is (B, 1, v_local))."""
+    if ctx.tp_size == 1:
+        return logits_local
+    g = lax.all_gather(logits_local, ctx.tp_axis, axis=logits_local.ndim - 1, tiled=True)
+    return g

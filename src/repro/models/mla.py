@@ -1,0 +1,176 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 family).
+
+The KV path is compressed into a small latent (kv_lora_rank) plus a
+decoupled RoPE key; the decode cache stores ONLY (latent, k_rope) —
+(B, S, r + dr) — which is the whole point of MLA.  Heads are TP-sharded
+(padded); the latent projections are replicated over TP (they are small).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, rope
+from repro.models.parallel import ParallelCtx
+
+NEG = -1e30
+
+__all__ = ["mla_train", "mla_decode", "mla_cache_dims"]
+
+
+def mla_cache_dims(cfg: ModelConfig) -> int:
+    m = cfg.mla
+    return m.kv_lora_rank + m.qk_rope_head_dim
+
+
+def _heads_local(cfg: ModelConfig, tp: int) -> int:
+    return cfg.padded_heads(tp) // tp
+
+
+def _project(h, w, cfg: ModelConfig, ctx: ParallelCtx, positions):
+    """Common q / latent projections.
+
+    w keys: wq_a (d, q_lora) repl-TP, wq_b (q_lora, hl*(nope+rope) local-TP),
+            wkv_a (d, kv_lora + rope_dim) repl-TP,
+            wkv_b (kv_lora, hl*(nope+v) local-TP), wo (hl*v local-TP, d).
+    """
+    m = cfg.mla
+    b, s, _ = h.shape
+    hl = _heads_local(cfg, ctx.tp_size)
+    wq_a = ctx.gather(w["wq_a"], dim=0)
+    wq_b = w["wq_b"]  # replicated over the FSDP axis (small) — no gather
+    wkv_a = ctx.gather(w["wkv_a"], dim=0)
+    q_lat = jnp.einsum("bsd,dr->bsr", h, wq_a)
+    q = jnp.einsum("bsr,rh->bsh", q_lat, wq_b).reshape(
+        b, s, hl, m.qk_nope_head_dim + m.qk_rope_head_dim
+    )
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    kv_all = jnp.einsum("bsd,dr->bsr", h, wkv_a)
+    latent, k_rope = jnp.split(kv_all, [m.kv_lora_rank], axis=-1)
+    sin, cos = rope(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+    k_rope = apply_rope(k_rope[:, :, None, :], sin, cos)  # 1 shared rope head
+    return q_nope, q_rope, latent, k_rope
+
+
+def _attend(q_nope, q_rope, latent, k_rope, w, cfg, ctx, *, causal_offset=None,
+            chunk: int = 1024):
+    """Latent-space attention: scores from nope+rope parts, values from
+    the latent via wkv_b (absorbed).
+
+    Flash-style chunked over the kv/latent length so the (sq, sk) score
+    matrix never materializes — at prefill_32k the dense form was 97 s of
+    HBM traffic per step (§Perf hillclimb 2); the chunked form is O(sk)
+    memory with identical math (running max/sum-exp accumulation).
+    """
+    m = cfg.mla
+    b, sq, hl, _ = q_nope.shape
+    sk = latent.shape[1]
+    wkv_b = w["wkv_b"]  # (kv_lora, hl*(nope+v)) — replicated over FSDP
+    wkv_b = wkv_b.reshape(m.kv_lora_rank, hl, m.qk_nope_head_dim + m.v_head_dim)
+    wk_b = wkv_b[..., : m.qk_nope_head_dim]
+    wv_b = wkv_b[..., m.qk_nope_head_dim :]
+    # absorb k up-projection into q (the MLA trick): q_lat (b,sq,hl,r)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_lat = q_lat * scale
+    q_rope = q_rope.astype(jnp.float32) * scale
+    kr = k_rope[:, :, 0].astype(jnp.float32)
+    lat = latent.astype(jnp.float32)
+
+    if chunk == 0:  # dense baseline (§Perf H2 before-state), kept selectable
+        scores = (
+            jnp.einsum("bqhr,bkr->bhqk", q_lat, lat)
+            + jnp.einsum("bqhr,bkr->bhqk", q_rope, kr)
+        )
+        if causal_offset is not None:
+            qp = causal_offset + jnp.arange(sq)
+            mask = jnp.arange(sk)[None, :] <= qp[:, None]
+            scores = jnp.where(mask[None, None], scores, NEG)
+        p = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhqk,bkr->bqhr", p, lat)
+        out = jnp.einsum("bqhr,rhv->bqhv", o_lat, wv_b.astype(jnp.float32))
+        wo = ctx.gather(w["wo"], dim=1)
+        out = out.reshape(b, sq, hl * m.v_head_dim).astype(wo.dtype)
+        return ctx.tp_reduce(jnp.einsum("bsh,hd->bsd", out, wo))
+
+    chunk = min(chunk, sk)
+    n_chunks = -(-sk // chunk)
+    pad = n_chunks * chunk - sk
+    lat_p = jnp.pad(lat, ((0, 0), (0, pad), (0, 0))).reshape(
+        b, n_chunks, chunk, m.kv_lora_rank
+    )
+    kr_p = jnp.pad(kr, ((0, 0), (0, pad), (0, 0))).reshape(
+        b, n_chunks, chunk, m.qk_rope_head_dim
+    )
+    qpos = (0 if causal_offset is None else causal_offset) + jnp.arange(sq)
+
+    def body(carry, inp):
+        mx, s, acc = carry
+        lc, kc, c_idx = inp
+        kpos = c_idx * chunk + jnp.arange(chunk)
+        logits = (
+            jnp.einsum("bqhr,bkr->bhqk", q_lat, lc)
+            + jnp.einsum("bqhr,bkr->bhqk", q_rope, kc)
+        )
+        mask = (kpos < sk)[None, :]
+        if causal_offset is not None:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        logits = jnp.where(mask[None, None], logits, NEG)
+        m_new = jnp.maximum(mx, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(mx - m_new)
+        s_new = s * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bkr->bhqr", p, lc)
+        return (m_new, s_new, acc_new), None
+
+    m0 = jnp.full((b, hl, sq), NEG, jnp.float32)
+    s0 = jnp.zeros((b, hl, sq), jnp.float32)
+    a0 = jnp.zeros((b, hl, sq, m.kv_lora_rank), jnp.float32)
+    (mx, s, acc), _ = jax.lax.scan(
+        body, (m0, s0, a0),
+        (jnp.moveaxis(lat_p, 1, 0), jnp.moveaxis(kr_p, 1, 0),
+         jnp.arange(n_chunks)),
+    )
+    o_lat = jnp.moveaxis(acc / jnp.maximum(s, 1e-30)[..., None], 1, 2)
+    out = jnp.einsum("bqhr,rhv->bqhv", o_lat, wv_b.astype(jnp.float32))
+    wo = ctx.gather(w["wo"], dim=1)
+    out = out.reshape(b, sq, hl * m.v_head_dim).astype(wo.dtype)
+    return ctx.tp_reduce(jnp.einsum("bsh,hd->bsd", out, wo))
+
+
+def mla_train(h, w, cfg: ModelConfig, ctx: ParallelCtx, *, positions):
+    q_nope, q_rope, latent, k_rope = _project(h, w, cfg, ctx, positions)
+    return _attend(q_nope, q_rope, latent, k_rope, w, cfg, ctx,
+                   causal_offset=0, chunk=cfg.mla_chunk)
+
+
+def mla_decode(h, w, cache, pos, cfg: ModelConfig, ctx: ParallelCtx):
+    """cache: (B, S, r + dr) latent+rope-key cache (replicated over TP —
+    it is tiny; that replication is WHY MLA serves cheaply).
+    Returns (out, new_cache)."""
+    m = cfg.mla
+    q_nope, q_rope, latent_new, k_rope_new = _project(h, w, cfg, ctx, pos[None])
+    entry = jnp.concatenate([latent_new, k_rope_new[:, :, 0, :]], axis=-1)
+    cache = lax.dynamic_update_slice(
+        cache, entry.astype(cache.dtype), (0, pos, 0)
+    )
+    latent = cache[..., : m.kv_lora_rank]
+    k_rope = cache[..., m.kv_lora_rank :][:, :, None, :]
+    sk = cache.shape[1]
+    # mask positions beyond pos via the causal_offset mechanism
+    out = _attend(
+        q_nope,
+        q_rope,
+        latent.astype(jnp.float32),
+        k_rope.astype(jnp.float32),
+        w,
+        cfg,
+        ctx,
+        causal_offset=pos,
+        chunk=cfg.mla_chunk,
+    )
+    return out, cache

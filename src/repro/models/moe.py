@@ -1,0 +1,150 @@
+"""Mixture-of-Experts layer with expert parallelism over the TP axis.
+
+Top-k routing with capacity (Switch/GShard style), einsum dispatch, and
+``lax.all_to_all`` over the "model" axis to ship token slots to their
+expert's rank (experts_per_rank = E / tp).  The router's load-balance aux
+loss is returned to the caller.
+
+Note on gZCCL applicability (DESIGN.md §4): the dispatch all_to_all stays
+uncompressed by default; the size-dependent ablation
+(benchmarks/moe_a2a_ablation.py) shows compression pays at train shapes
+and hurts at decode — pass ``dispatch_gz=GZConfig(...)`` to route the
+dispatch through the compressed gz_all_to_all (one lossy hop, eb control).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.collectives import GZConfig, gz_all_to_all
+from repro.models.config import ModelConfig
+from repro.models.parallel import ParallelCtx
+
+__all__ = ["moe_ffn", "moe_capacity"]
+
+
+def moe_capacity(tokens: int, cfg: ModelConfig) -> int:
+    cap = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(-(-cap // 8) * 8, 8)
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def moe_ffn(
+    h: jnp.ndarray,
+    w: dict,
+    cfg: ModelConfig,
+    ctx: ParallelCtx,
+    dispatch_gz: GZConfig | None = None,
+):
+    """h: (B, S, d) local tokens.
+
+    w: {"router": (d, E) replicated-TP / FSDP dim0,
+        "wi", "wg": (E_local, d, ff), "wo": (E_local, ff, d)} — expert
+    weights sharded over TP on the EXPERT dim (expert parallel), FSDP on d.
+    Returns (out (B,S,d), aux_loss scalar).
+    """
+    b, s, d = h.shape
+    e = cfg.n_experts
+    tp = ctx.tp_size
+    assert e % tp == 0, f"experts {e} must divide over tp {tp}"
+    e_local = e // tp
+    t_full = b * s
+    x_full = h.reshape(t_full, d)
+    # Token slicing: activations are replicated over TP, so each TP rank
+    # routes only its 1/tp slice (otherwise every expert would process each
+    # token tp times — a 16x useful-flops bug caught by the dry-run).
+    if tp > 1:
+        t_pad = -(-t_full // tp) * tp  # decode can have t_full < tp
+        if t_pad != t_full:
+            x_full = jnp.concatenate(
+                [x_full, jnp.zeros((t_pad - t_full, d), x_full.dtype)], axis=0
+            )
+        t = t_pad // tp
+        start = ctx.tp_index() * t
+        x = lax.dynamic_slice_in_dim(x_full, start, t, axis=0)
+    else:
+        t = t_full
+        x = x_full
+
+    router = ctx.gather(w["router"], dim=0)  # (d, E)
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k gating with capacity
+    cap = moe_capacity(t, cfg)
+    gate_vals, gate_idx = lax.top_k(probs, cfg.top_k)  # (t, k)
+    if cfg.top_k > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # scatter/gather dispatch — O(t*k) memory, never materializes a
+    # (t, e, cap) tensor (that is 5e12 elements at production scale)
+    tk = t * cfg.top_k
+    e_flat = gate_idx.reshape(tk)  # expert of each (token, k) slot
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.float32)  # (tk, e) — small
+    pos_all = jnp.cumsum(onehot, axis=0) - 1.0  # position counters per expert
+    pos = jnp.take_along_axis(pos_all, e_flat[:, None], axis=1)[:, 0]  # (tk,)
+    keep = pos < cap
+    pos = jnp.where(keep, pos, cap - 1).astype(jnp.int32)
+    tok_idx = jnp.arange(tk) // cfg.top_k
+    gate_flat = gate_vals.reshape(tk) * keep.astype(gate_vals.dtype)
+
+    expert_in = jnp.zeros((e, cap, d), jnp.float32)
+    expert_in = expert_in.at[e_flat, pos].add(
+        x.astype(jnp.float32)[tok_idx] * keep[:, None].astype(jnp.float32)
+    )
+
+    if tp > 1:
+        # ship slots to expert owners: (e, cap, d) -> (e_local, tp*cap, d)
+        # (tiled: split the expert dim across ranks, stack received slots
+        # along the capacity dim in rank order).  With dispatch_gz the
+        # payload goes through the compressed all-to-all (the ablation in
+        # benchmarks/moe_a2a_ablation.py models a ~1.7x win at train
+        # shapes; exactly one lossy hop with eb control).
+        if dispatch_gz is not None and e_local == 1:
+            expert_in = gz_all_to_all(
+                expert_in.reshape(tp, cap * d), ctx.tp_axis, dispatch_gz
+            ).reshape(e_local, tp * cap, d)
+        else:
+            expert_in = lax.all_to_all(
+                expert_in, ctx.tp_axis, split_axis=0, concat_axis=1, tiled=True
+            )
+    else:
+        expert_in = expert_in.reshape(e_local, cap, d)
+
+    wi = ctx.gather(w["wi"], dim=1)  # (e_local, d, ff)
+    wg = ctx.gather(w["wg"], dim=1)
+    wo = ctx.gather(w["wo"], dim=2)  # (e_local, ff, d)
+    hmid = _silu(jnp.einsum("ecd,edf->ecf", expert_in, wg.astype(jnp.float32)))
+    hmid = hmid * jnp.einsum("ecd,edf->ecf", expert_in, wi.astype(jnp.float32))
+    expert_out = jnp.einsum("ecf,efd->ecd", hmid, wo.astype(jnp.float32))
+
+    if tp > 1:
+        if dispatch_gz is not None and e_local == 1:
+            expert_out = gz_all_to_all(
+                expert_out.reshape(tp, cap * d), ctx.tp_axis, dispatch_gz
+            ).reshape(e, cap, d)
+        else:
+            expert_out = lax.all_to_all(
+                expert_out, ctx.tp_axis, split_axis=1, concat_axis=0, tiled=True
+            )
+    else:
+        expert_out = expert_out.reshape(e, cap, d)
+
+    y_slots = expert_out[e_flat, pos]  # (tk, d) gather back
+    y = (y_slots * gate_flat[:, None]).reshape(t, cfg.top_k, d).sum(axis=1)
+    if tp > 1:
+        # reassemble the full token range from the per-rank slices
+        y = lax.all_gather(y, ctx.tp_axis, axis=0, tiled=True)[:t_full]
+    out = y.reshape(b, s, d)
+
+    # Switch-style load-balance loss (top-1 assignment share vs router mass)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return out.astype(h.dtype), aux

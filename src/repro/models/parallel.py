@@ -1,0 +1,118 @@
+"""Parallelism context + parameter-definition machinery.
+
+Everything distributed in this framework is explicit shard_map: model code
+is rank-centric, receives *local* parameter shards, and uses
+
+  * ``ParallelCtx.tp_*``   — Megatron-style tensor parallel over "model",
+  * ``fsdp_gather``        — ZeRO-3 gather over "data" (optionally through
+                             the gZ compressed allgather: the paper's
+                             technique in the training loop's hot path),
+  * ``dp_axes``            — gradient-sync axes (("pod","data") multi-pod).
+
+``ParamDef`` carries the GLOBAL shape, its PartitionSpec, and an init; the
+launcher materializes globals, the dry-run builds ShapeDtypeStructs, and
+shard_map in_specs come from the same tree — one source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.grad_sync import SyncConfig, fsdp_all_gather
+
+__all__ = ["ParallelCtx", "ParamDef", "init_params", "param_specs", "param_shapes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    """Static description of how the mesh axes are used."""
+
+    tp_axis: str = "model"
+    fsdp_axis: str = "data"
+    dp_axes: tuple = ("data",)  # ("pod","data") on the multi-pod mesh
+    tp_size: int = 1
+    fsdp_size: int = 1
+    # gZ compression on the FSDP param-gather / grad reduce-scatter path
+    fsdp_sync: Optional[SyncConfig] = None
+    # remat policy for the per-layer scan ("none"|"full"|"dots")
+    remat: str = "full"
+    # scan unroll factor; the dry-run's differential body costing sets this
+    # high so 1- vs 2-layer lowerings contain no `while` (XLA cost_analysis
+    # counts while bodies once — see launch/costing.py)
+    scan_unroll: int = 1
+
+    def gather(self, x: jnp.ndarray, dim: int = 0) -> jnp.ndarray:
+        """FSDP all-gather of a parameter along ``dim`` (identity if 1)."""
+        if self.fsdp_size == 1:
+            return x
+        if dim != 0:
+            x = jnp.moveaxis(x, dim, 0)
+        out = fsdp_all_gather(x, self.fsdp_axis, self.fsdp_sync)
+        if dim != 0:
+            out = jnp.moveaxis(out, 0, dim)
+        return out
+
+    def tp_reduce(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Row-parallel output reduction."""
+        if self.tp_size == 1:
+            return x
+        return lax.psum(x, self.tp_axis)
+
+    def tp_index(self):
+        return lax.axis_index(self.tp_axis) if self.tp_size > 1 else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Global-view definition of one parameter tensor."""
+
+    shape: tuple
+    spec: P
+    init: str = "normal"  # normal | zeros | ones | scaled
+    scale: float = 0.02
+    dtype: str = "bfloat16"
+
+    def initializer(self, key) -> jnp.ndarray:
+        dt = jnp.dtype(self.dtype)
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dt)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dt)
+        if self.init == "scaled":
+            fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+            s = 1.0 / np.sqrt(fan_in)
+            return (jax.random.normal(key, self.shape, jnp.float32) * s).astype(dt)
+        return (
+            jax.random.normal(key, self.shape, jnp.float32) * self.scale
+        ).astype(dt)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key):
+    """Materialize a ParamDef tree into (global) arrays."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [d.initializer(k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def param_specs(defs):
+    return jax.tree.map(lambda d: d.spec, defs, is_leaf=_is_def)
+
+
+def param_shapes(defs):
+    """ShapeDtypeStructs for the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)),
+        defs,
+        is_leaf=_is_def,
+    )

@@ -1,0 +1,222 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm in pure JAX:
+  * within-chunk: quadratic "attention-like" form over the chunk,
+  * across chunks: sequential state recurrence via lax.scan (S/chunk steps).
+
+Heads are tensor-parallel over the "model" axis (B/C projections are
+group-shared, n_groups=1, replicated); out-proj is row-parallel with a
+psum.  Decode carries (conv_state, ssm_state) and is a single recurrence
+step — no KV cache, which is what makes long_500k natural for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.config import ModelConfig
+from repro.models.parallel import ParallelCtx
+
+__all__ = ["ssm_train", "ssm_decode", "ssm_state_shapes"]
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def _softplus(x):
+    return jnp.logaddexp(x, 0.0)
+
+
+def _tp_mean_sq(y: jnp.ndarray, ctx: ParallelCtx) -> jnp.ndarray:
+    """Mean of y**2 over the (TP-sharded) last dim, psum'd to the global
+    d_inner so every rank normalizes identically."""
+    ss = jnp.sum(y * y, axis=-1, keepdims=True)
+    n = jnp.float32(y.shape[-1])
+    if ctx.tp_size > 1:
+        ss = lax.psum(ss, ctx.tp_axis)
+        n = n * ctx.tp_size
+    return ss / n
+
+
+def _proj_sizes(cfg: ModelConfig, tp: int):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    h = s.n_heads(cfg.d_model)
+    assert h % tp == 0, f"ssm heads {h} must divide tp {tp}"
+    h_local = h // tp
+    di_local = h_local * s.head_dim
+    return di, h, h_local, di_local
+
+
+def _in_proj(h, w, cfg: ModelConfig, ctx: ParallelCtx):
+    """Input projections, each with its own TP layout:
+
+      w_z, w_x:  (d, di)  TP-sharded on the output dim (head-parallel)
+      w_bc:      (d, 2*d_state) replicated over TP (group-shared, n_groups=1)
+      w_dt:      (d, H)   TP-sharded (per-head dt)
+
+    (A fused in_proj cannot mix sharded and replicated column blocks — this
+    split is the TP adaptation recorded in DESIGN.md.)
+    Returns local (z, x, B, C, dt).
+    """
+    s = cfg.ssm
+    w_z = ctx.gather(w["w_z"], dim=0)
+    w_x = ctx.gather(w["w_x"], dim=0)
+    w_bc = ctx.gather(w["w_bc"], dim=0)
+    w_dt = ctx.gather(w["w_dt"], dim=0)
+    z = jnp.einsum("bsd,dk->bsk", h, w_z)
+    xs = jnp.einsum("bsd,dk->bsk", h, w_x)
+    bcm = jnp.einsum("bsd,dk->bsk", h, w_bc)
+    bmat, cmat = jnp.split(bcm, 2, axis=-1)
+    dt = jnp.einsum("bsd,dk->bsk", h, w_dt)
+    return z, xs, bmat, cmat, dt
+
+
+def _conv_step(x_bc, conv_w, conv_state):
+    """Depthwise causal conv (width W) one step: x_bc (B, C), state (B, W-1, C)."""
+    window = jnp.concatenate([conv_state, x_bc[:, None, :]], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", window, conv_w)
+    return _silu(out), window[:, 1:, :]
+
+
+def _conv_seq(x, conv_w):
+    """Causal depthwise conv over a sequence: x (B, S, C), conv_w (W, C)."""
+    w = conv_w.shape[0]
+    pads = [jnp.pad(x, ((0, 0), (w - 1 - i, 0), (0, 0)))[:, : x.shape[1], :]
+            for i in range(w)]
+    out = sum(p * conv_w[i] for i, p in enumerate(pads))
+    return _silu(out)
+
+
+def ssm_train(h, w, cfg: ModelConfig, ctx: ParallelCtx):
+    """Full-sequence SSD. h: (B, S, d_model) -> (B, S, d_model).
+
+    w: {"w_in": (d, K_local), "conv": (W, conv_ch_local), "A_log": (h_local,),
+        "D": (h_local,), "dt_bias": (h_local,), "norm": (di_local,),
+        "w_out": (di_local, d)}
+    """
+    s = cfg.ssm
+    b, slen, _ = h.shape
+    _, _, h_local, di_local = _proj_sizes(cfg, ctx.tp_size)
+    p = s.head_dim
+    n = s.d_state
+    z, xs, bmat, cmat, dt = _in_proj(h, w, cfg, ctx)
+    # depthwise conv over (x | B | C) channels; conv_x is TP-local,
+    # conv_bc replicated — concat matches the channel layout
+    conv_w = jnp.concatenate([w["conv_x"], w["conv_bc"]], axis=1)
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    xbc = _conv_seq(xbc, conv_w)
+    xs, bmat, cmat = jnp.split(xbc, [di_local, di_local + n], axis=-1)
+    x = xs.reshape(b, slen, h_local, p)
+    dt = _softplus(dt.astype(jnp.float32) + w["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(w["A_log"].astype(jnp.float32))  # (h_local,)
+    da = dt * a  # (B, S, h_local) negative
+
+    q = s.chunk
+    n_chunks = -(-slen // q)
+    pad = n_chunks * q - slen
+
+    def padq(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+
+    xc = padq(x).reshape(b, n_chunks, q, h_local, p)
+    bc = padq(bmat).reshape(b, n_chunks, q, n).astype(jnp.float32)
+    cc = padq(cmat).reshape(b, n_chunks, q, n).astype(jnp.float32)
+    dac = padq(da).reshape(b, n_chunks, q, h_local)
+    dtc = padq(dt).reshape(b, n_chunks, q, h_local)
+
+    lc = jnp.cumsum(dac, axis=2)  # within-chunk cumulative log decay
+    # within-chunk (diagonal block) term
+    att = jnp.exp(
+        lc[:, :, :, None, :] - lc[:, :, None, :, :]
+    )  # (b, nc, q_i, q_j, h)
+    iota_i = jnp.arange(q)
+    causal = (iota_i[:, None] >= iota_i[None, :]).astype(jnp.float32)
+    cb = jnp.einsum("bkin,bkjn->bkij", cc, bc)  # (b, nc, q, q)
+    w_att = cb[:, :, :, :, None] * att * causal[None, None, :, :, None]
+    y_diag = jnp.einsum(
+        "bkijh,bkjh,bkjhp->bkihp", w_att, dtc, xc.astype(jnp.float32)
+    )
+
+    # chunk-local end states: (b, nc, h, p, n)
+    decay_to_end = jnp.exp(lc[:, :, -1:, :] - lc)  # (b, nc, q, h)
+    s_loc = jnp.einsum(
+        "bkjh,bkjh,bkjhp,bkjn->bkhpn",
+        decay_to_end,
+        dtc,
+        xc.astype(jnp.float32),
+        bc,
+    )
+    chunk_decay = jnp.exp(jnp.sum(dac, axis=2))  # (b, nc, h)
+
+    def scan_body(state, inp):
+        s_local, dec = inp  # (b, h, p, n), (b, h)
+        new = state * dec[:, :, None, None] + s_local
+        return new, state  # emit the state ENTERING this chunk
+
+    init = jnp.zeros((b, h_local, p, n), jnp.float32)
+    _, s_in = lax.scan(
+        scan_body,
+        init,
+        (jnp.moveaxis(s_loc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    s_in = jnp.moveaxis(s_in, 0, 1)  # (b, nc, h, p, n) state before chunk
+    y_inter = jnp.einsum(
+        "bkin,bkih,bkhpn->bkihp", cc, jnp.exp(lc), s_in
+    )
+    y = y_diag + y_inter  # (b, nc, q, h, p)
+    y = y.reshape(b, n_chunks * q, h_local, p)[:, :slen]
+    y = y + w["D"].astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, slen, di_local)
+    # gated RMSNorm (Mamba2 style) — d_inner is TP-sharded, so the second
+    # moment needs a psum to match the single-device model
+    y = y * _silu(z.astype(jnp.float32))
+    var = _tp_mean_sq(y, ctx)
+    y = y * lax.rsqrt(var + cfg.norm_eps) * w["norm"].astype(jnp.float32)
+    w_out = ctx.gather(w["w_out"], dim=1)
+    out = jnp.einsum("bsk,kd->bsd", y.astype(h.dtype), w_out)
+    return ctx.tp_reduce(out)
+
+
+def ssm_state_shapes(cfg: ModelConfig, tp: int, batch_local: int):
+    """Decode-cache shapes per layer: (conv_state, ssm_state)."""
+    s = cfg.ssm
+    _, _, h_local, di_local = _proj_sizes(cfg, tp)
+    conv_ch = di_local + 2 * s.d_state
+    return (
+        (batch_local, s.conv_width - 1, conv_ch),
+        (batch_local, h_local, s.head_dim, s.d_state),
+    )
+
+
+def ssm_decode(h, w, conv_state, ssm_state, cfg: ModelConfig, ctx: ParallelCtx):
+    """One-token SSD recurrence. h: (B, 1, d). Returns (out, new_conv, new_ssm)."""
+    s = cfg.ssm
+    b = h.shape[0]
+    _, _, h_local, di_local = _proj_sizes(cfg, ctx.tp_size)
+    p, n = s.head_dim, s.d_state
+    z, xs, bmat, cmat, dt = _in_proj(h, w, cfg, ctx)
+    conv_w = jnp.concatenate([w["conv_x"], w["conv_bc"]], axis=1)
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)[:, 0]  # (B, C)
+    xbc, new_conv = _conv_step(xbc, conv_w, conv_state)
+    xs, bmat, cmat = jnp.split(xbc, [di_local, di_local + n], axis=-1)
+    x = xs.reshape(b, h_local, p).astype(jnp.float32)
+    dt = _softplus(dt[:, 0].astype(jnp.float32) + w["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(w["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)  # (B, h_local)
+    bmat = bmat.astype(jnp.float32)
+    cmat = cmat.astype(jnp.float32)
+    new_ssm = ssm_state * da[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, x, bmat
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cmat, new_ssm)
+    y = y + w["D"].astype(jnp.float32)[None, :, None] * x
+    y = y.reshape(b, 1, di_local)
+    y = y * _silu(z.astype(jnp.float32))
+    var = _tp_mean_sq(y, ctx)
+    y = y * lax.rsqrt(var + cfg.norm_eps) * w["norm"].astype(jnp.float32)
+    w_out = ctx.gather(w["w_out"], dim=1)
+    out = jnp.einsum("bsk,kd->bsd", y.astype(h.dtype), w_out)
+    return ctx.tp_reduce(out), new_conv, new_ssm

@@ -1,0 +1,118 @@
+"""Child script: validates shard_map gZ collectives on 8 virtual devices.
+
+Run by tests/test_collectives_multidevice.py in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (must be set before jax
+import, which is why this is a separate process).  Prints 'OK <name>' per
+passing check; any assertion failure propagates as nonzero exit.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.collectives import (
+    GZConfig,
+    gz_allgather,
+    gz_allreduce,
+    gz_broadcast,
+    gz_reduce_scatter,
+    gz_scatter,
+)
+from repro.core.shmap import shard_map
+
+N = 8
+D = 8192
+mesh = jax.make_mesh((N,), ("x",))
+rng = np.random.default_rng(0)
+# smooth per-rank fields (paper's RTM-like regime)
+base = np.cumsum(rng.normal(0, 0.01, (N, D)), axis=1).astype(np.float32)
+exact_sum = base.sum(axis=0)
+
+def shmap(f, in_specs, out_specs):
+    return jax.jit(
+        shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    )
+
+
+def check_allreduce(algo, tol_hops):
+    cfg = GZConfig(eb=1e-4, algo=algo, capacity_factor=1.2)
+    def body(x):
+        out, ovf = gz_allreduce(x[0], "x", cfg, return_info=True)
+        return out[None], ovf[None]
+
+    f = shmap(body, (P("x", None),), (P("x", None), P("x")))
+    out, ovf = f(base)
+    out = np.asarray(out)
+    assert not np.asarray(ovf).any(), f"{algo}: capacity overflow"
+    err = np.abs(out - exact_sum[None, :]).max()
+    # worst-case budget guarantees <= eb total for redoub/ring;
+    # intring is <= N*eb_total (single grid, N addends)
+    bound = 1e-4 * tol_hops + np.abs(exact_sum).max() * 1e-6
+    assert err <= bound, f"{algo}: err {err} > {bound}"
+    spread = np.abs(out - out[0:1]).max()
+    if algo == "intring":
+        assert spread == 0.0, f"intring not bitwise consistent: {spread}"
+    print(f"OK allreduce_{algo} err={err:.2e} spread={spread:.2e}")
+
+
+check_allreduce("redoub", 1.05)
+check_allreduce("ring", 1.05)
+check_allreduce("intring", N * 1.05)
+
+# reduce_scatter: rank r gets summed chunk r
+cfg = GZConfig(eb=1e-4, capacity_factor=1.2)
+f = shmap(lambda x: gz_reduce_scatter(x[0], "x", cfg), (P("x", None),), P("x"))
+out = np.asarray(f(base)).reshape(N, D // N)
+want = exact_sum.reshape(N, D // N)
+err = np.abs(out - want).max()
+assert err <= 1e-4 * 1.05 + np.abs(exact_sum).max() * 1e-6, err
+print(f"OK reduce_scatter err={err:.2e}")
+
+# allgather: every rank sees all chunks, one lossy hop
+chunks = base[:, : D // N].copy()
+f = shmap(lambda x: gz_allgather(x[0], "x", cfg)[None], (P("x", None),), P("x", None))
+out = np.asarray(f(chunks)).reshape(N, N * (D // N))
+want = chunks.reshape(-1)
+err = np.abs(out - want[None]).max()
+assert err <= 1e-4 * 1.001 + np.abs(want).max() * 2e-7, err
+assert np.abs(out - out[0:1]).max() == 0.0  # identical on every rank
+print(f"OK allgather err={err:.2e}")
+
+# scatter from root 0: rank r gets chunk r within eb
+full = np.cumsum(rng.normal(0, 0.01, N * D)).astype(np.float32)
+xin = np.zeros((N, N * D), np.float32)
+xin[0] = full  # root-significant input, replicated layout
+f = shmap(lambda x: gz_scatter(x[0], "x", cfg), (P("x", None),), P("x"))
+out = np.asarray(f(xin)).reshape(N, D)
+err = np.abs(out - full.reshape(N, D)).max()
+assert err <= 1e-4 * 1.001 + np.abs(full).max() * 2e-7, err
+print(f"OK scatter err={err:.2e}")
+
+# broadcast from root 0
+xb = np.zeros((N, D), np.float32)
+xb[0] = base[0]
+f = shmap(lambda x: gz_broadcast(x[0], "x", cfg)[None], (P("x", None),), P("x", None))
+out = np.asarray(f(xb))
+err = np.abs(out - base[0][None]).max()
+assert err <= 1e-4 * 1.001 + np.abs(base[0]).max() * 2e-7, err
+assert np.abs(out - out[0:1]).max() == 0.0
+print(f"OK broadcast err={err:.2e}")
+
+# all_to_all: compressed vs exact (one lossy hop)
+from repro.core.collectives import gz_all_to_all
+x_a2a = base[:, : N * 512].reshape(N, N * 512).copy()
+f = shmap(
+    lambda x: gz_all_to_all(x[0], "x", cfg)[None], (P("x", None),), P("x", None)
+)
+got = np.asarray(f(x_a2a)).reshape(N, N, 512)
+# rank r receives rank p's chunk r: want[r, p] = x_a2a[p, r*512:(r+1)*512]
+want = x_a2a.reshape(N, N, 512).transpose(1, 0, 2)
+err = np.abs(got - want).max()
+assert err <= 1e-4 * 1.001 + np.abs(want).max() * 2e-7, err
+print(f"OK all_to_all err={err:.2e}")
+
+print("ALL OK")

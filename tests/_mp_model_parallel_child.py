@@ -1,0 +1,140 @@
+"""Child: parallel-correctness of the model zoo.
+
+For each architecture family, runs the SAME smoke model + batch on a
+(1,1) mesh and on a (2,4) (data, model) mesh — TP=4 exercises head
+sharding / kv replication groups / expert parallel / vocab-parallel loss;
+data=2 exercises FSDP gather + batch sharding.  Losses and gradients must
+agree (up to bf16 reduction-order noise).
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.core.shmap import shard_map
+from repro.models.model import Model
+from repro.models.parallel import ParallelCtx, init_params, param_specs
+
+B, S = 2, 32
+
+ARCHS = [
+    "internlm2-20b",       # dense GQA, kv < tp -> replication groups
+    "minicpm3-4b",         # MLA
+    "llama4-scout-17b-a16e",  # MoE top-1, expert parallel
+    "phi3.5-moe-42b-a6.6b",   # MoE top-2
+    "mamba2-780m",         # SSD
+    "zamba2-2.7b",         # hybrid + shared block
+    "seamless-m4t-medium",  # enc-dec
+    "internvl2-26b",       # VLM prefix
+]
+
+
+def batch_for(cfg, rng):
+    s_text = S - (cfg.n_prefix if cfg.family in ("vlm", "audio") else 0)
+    b = {
+        "tokens": rng.integers(0, cfg.vocab, (B, s_text)).astype(np.int32),
+        "labels": rng.integers(0, cfg.vocab, (B, s_text)).astype(np.int32),
+    }
+    if cfg.family in ("vlm", "audio") and cfg.n_prefix:
+        b["prefix"] = rng.normal(0, 1, (B, cfg.n_prefix, cfg.d_model)).astype(
+            np.float32
+        )
+    if cfg.family == "encdec":
+        b["enc_input"] = rng.normal(0, 1, (B, cfg.n_prefix, cfg.d_model)).astype(
+            np.float32
+        )
+    return b
+
+
+def run(cfg, mesh, tp, fsdp, batch, params_defs_params):
+    defs, params = params_defs_params
+    ctx = ParallelCtx(tp_size=tp, fsdp_size=fsdp,
+                      dp_axes=("data",), fsdp_sync=None, remat="full")
+    model = Model(cfg, ctx)
+    specs = param_specs(defs)
+
+    def bspec(a, batched):
+        if batched:
+            return P(*(("data",) + (None,) * (a.ndim - 1)))
+        return P(*((None,) * a.ndim))
+
+    bspecs = {k: bspec(v, True) for k, v in batch.items()}
+
+    def body(p, b):
+        # shard_map grad semantics: d(sum over ranks of per-rank loss); the
+        # loss is replicated over TP (x tp) and a local mean per data rank
+        # (x n_data vs the global mean) -> scale the differentiated loss.
+        scale = 1.0 / (tp * fsdp)
+
+        def scaled(p, b):
+            return model.loss_fn(p, b) * scale
+
+        loss, grads = jax.value_and_grad(scaled)(p, b)
+        loss = jax.lax.pmean(loss / scale, "data")
+
+        # Grad-sync rule: psum over every mesh axis ABSENT from the leaf's
+        # spec (axes in the spec are either sharded-and-consumed locally or
+        # already summed by the FSDP gather's vjp).
+        def sync(g, s):
+            present = set(jax.tree.leaves(tuple(s)))
+            for ax in ("data", "model"):
+                if ax not in present:
+                    g = jax.lax.psum(g, ax)
+            return g
+
+        grads = jax.tree.map(sync, grads, specs)
+        return loss, grads
+
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=(specs, bspecs),
+                          out_specs=(P(), specs)))
+    loss, grads = f(params, batch)
+    return np.asarray(loss), jax.tree.map(np.asarray, grads)
+
+
+import dataclasses
+
+for arch in ARCHS:
+    cfg = registry.get(arch, smoke=True)
+    if cfg.family == "moe":
+        # capacity is a per-shard quantity; different meshes drop different
+        # tokens.  Equivalence requires a no-drop capacity.
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    rng = np.random.default_rng(7)
+    batch = batch_for(cfg, rng)
+    # single-device reference
+    mesh1 = jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model")
+    )
+    ctx1 = ParallelCtx(tp_size=1, fsdp_size=1, dp_axes=("data",))
+    defs = Model(cfg, ctx1).param_defs()
+    params = init_params(defs, jax.random.key(0))
+    l1, g1 = run(cfg, mesh1, 1, 1, batch, (defs, params))
+    # 2x4 mesh — same GLOBAL params (defs are identical global shapes)
+    mesh8 = jax.make_mesh((2, 4), ("data", "model"))
+    ctx8 = ParallelCtx(tp_size=4, fsdp_size=2, dp_axes=("data",))
+    defs8 = Model(cfg, ctx8).param_defs()
+    shapes1 = jax.tree.map(lambda d: d.shape, defs,
+                           is_leaf=lambda x: hasattr(x, "spec"))
+    shapes8 = jax.tree.map(lambda d: d.shape, defs8,
+                           is_leaf=lambda x: hasattr(x, "spec"))
+    assert shapes1 == shapes8, f"{arch}: global shapes differ between meshes"
+    l8, g8 = run(cfg, mesh8, 4, 2, batch, (defs8, params))
+
+    rtol = 0.05 if cfg.family == "moe" else 0.02
+    assert np.allclose(l1, l8, rtol=rtol), f"{arch}: loss {l1} vs {l8}"
+    worst = 0.0
+    for k1, k8 in zip(jax.tree.leaves(g1), jax.tree.leaves(g8)):
+        a, b = np.asarray(k1, np.float32), np.asarray(k8, np.float32)
+        scale = max(np.abs(a).max(), 1e-6)
+        worst = max(worst, float(np.abs(a - b).max() / scale))
+    lim = 0.35 if cfg.family == "moe" else 0.1  # moe: capacity-drop noise
+    assert worst <= lim, f"{arch}: grad rel err {worst}"
+    print(f"OK {arch} loss={float(l1):.4f} dloss={abs(float(l1-l8)):.2e} "
+          f"grad_rel={worst:.3f}")
+
+print("ALL OK")

@@ -1,0 +1,87 @@
+"""bitpack: vectorized pack/unpack vs a trivially-correct python loop."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bitpack
+
+
+def _pack_loop(codes: np.ndarray, bitwidth: np.ndarray, capacity: int):
+    """Bit-at-a-time python reference."""
+    out = np.zeros(capacity, np.uint32)
+    pos = 0
+    for i in range(codes.shape[0]):
+        b = int(bitwidth[i])
+        for j in range(codes.shape[1]):
+            v = int(codes[i, j]) & ((1 << b) - 1 if b < 32 else 0xFFFFFFFF)
+            for k in range(b):
+                if (v >> k) & 1:
+                    w, s = divmod(pos + k, 32)
+                    if w < capacity:
+                        out[w] |= np.uint32(1 << s)
+            pos += b
+    return out, (pos + 31) // 32
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("n_blocks,block", [(4, 32), (7, 16), (3, 256)])
+def test_pack_matches_loop(seed, n_blocks, block):
+    rng = np.random.default_rng(seed)
+    bw = rng.integers(0, 18, n_blocks).astype(np.int32)
+    codes = np.zeros((n_blocks, block), np.uint32)
+    for i in range(n_blocks):
+        codes[i] = rng.integers(0, 1 << max(int(bw[i]), 1), block)
+        if bw[i] == 0:
+            codes[i] = 0
+    capacity = int(np.sum(bw) * block // 32 + 8)
+    ref_packed, ref_words = _pack_loop(codes, bw, capacity)
+    packed, nwords = bitpack.pack(jnp.asarray(codes), jnp.asarray(bw), capacity)
+    assert int(nwords) == ref_words
+    np.testing.assert_array_equal(np.asarray(packed), ref_packed)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_roundtrip_random_bitwidths(seed):
+    rng = np.random.default_rng(seed)
+    n_blocks, block = 32, 64
+    bw = rng.integers(0, 33, n_blocks).astype(np.int32)
+    codes = np.zeros((n_blocks, block), np.uint32)
+    for i in range(n_blocks):
+        hi = (1 << int(bw[i])) if bw[i] < 32 else (1 << 32)
+        codes[i] = rng.integers(0, max(hi, 1), block, dtype=np.uint64).astype(np.uint32)
+        if bw[i] == 0:
+            codes[i] = 0
+    capacity = int(np.sum(bw.astype(np.int64)) * block // 32 + 8)
+    packed, nwords = bitpack.pack(jnp.asarray(codes), jnp.asarray(bw), capacity)
+    out = bitpack.unpack(packed, jnp.asarray(bw), block)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+def test_full_width_32():
+    block = 32
+    codes = np.full((2, block), 0xFFFFFFFF, np.uint32)
+    bw = np.full(2, 32, np.int32)
+    packed, nwords = bitpack.pack(jnp.asarray(codes), jnp.asarray(bw), 2 * block + 4)
+    assert int(nwords) == 2 * block
+    out = bitpack.unpack(packed, jnp.asarray(bw), block)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+def test_zero_width_blocks_cost_nothing():
+    block = 128
+    codes = np.zeros((8, block), np.uint32)
+    bw = np.zeros(8, np.int32)
+    packed, nwords = bitpack.pack(jnp.asarray(codes), jnp.asarray(bw), 16)
+    assert int(nwords) == 0
+    out = bitpack.unpack(packed, jnp.asarray(bw), block)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+def test_overflow_detected_not_silent():
+    """Capacity too small: nwords still reports the true requirement."""
+    block = 32
+    codes = np.full((4, block), 0xFFFF, np.uint32)
+    bw = np.full(4, 16, np.int32)
+    packed, nwords = bitpack.pack(jnp.asarray(codes), jnp.asarray(bw), 4)
+    assert int(nwords) == 4 * block * 16 // 32
+    assert int(nwords) > 4

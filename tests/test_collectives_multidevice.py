@@ -1,0 +1,28 @@
+"""Runs the 8-virtual-device shard_map collective validation.
+
+XLA device count is fixed at first jax init, so this must run in a
+subprocess (tests/_mp_collectives_child.py sets
+--xla_force_host_platform_device_count=8 before importing jax).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+CHILD = pathlib.Path(__file__).parent / "_mp_collectives_child.py"
+SRC = str(pathlib.Path(__file__).parent.parent / "src")
+
+
+@pytest.mark.slow
+def test_collectives_on_8_devices():
+    proc = subprocess.run(
+        [sys.executable, str(CHILD)],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env={**os.environ, "PYTHONPATH": SRC},
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL OK" in proc.stdout

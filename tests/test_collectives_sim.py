@@ -1,0 +1,101 @@
+"""Algorithm correctness on the single-device N-rank simulator.
+
+Validates the collective algorithms' numerics and the error-budget
+analysis without a multi-device runtime (the shard_map versions get the
+real 8-device treatment in test_collectives_multidevice.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core import error_budget, simulator
+from repro.core.collectives import GZConfig
+
+EB = 1e-4
+
+
+def _ranks(n, d, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        np.cumsum(rng.normal(0, 0.01, d)).astype(np.float32) for _ in range(n)
+    ]
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16])
+def test_sim_allreduce_redoub_within_budget(n):
+    xs = _ranks(n, 4096)
+    cfg = GZConfig(eb=EB, capacity_factor=1.2)
+    outs = simulator.sim_allreduce_redoub(xs, cfg)
+    exact = np.sum(xs, axis=0)
+    slack = np.abs(exact).max() * 1e-6
+    for o in outs:
+        assert np.abs(o - exact).max() <= EB + slack
+
+
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_sim_allreduce_ring_within_budget(n):
+    xs = _ranks(n, 4096, seed=1)
+    cfg = GZConfig(eb=EB, capacity_factor=1.2)
+    outs = simulator.sim_allreduce_ring(xs, cfg)
+    exact = np.sum(xs, axis=0)
+    slack = np.abs(exact).max() * 1e-6
+    for o in outs:
+        assert np.abs(o - exact).max() <= EB + slack
+    # ring AG distributes the same decompressed chunks -> rank-identical
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
+
+
+def test_sim_intring_error_model():
+    n = 8
+    xs = _ranks(n, 2048, seed=2)
+    cfg = GZConfig(eb=EB)
+    outs = simulator.sim_allreduce_intring(xs, cfg)
+    exact = np.sum(xs, axis=0)
+    for o in outs:
+        assert np.abs(o - exact).max() <= n * EB + np.abs(exact).max() * 1e-6
+        np.testing.assert_array_equal(o, outs[0])
+
+
+@pytest.mark.parametrize("n", [4, 8])
+def test_sim_reduce_scatter(n):
+    xs = _ranks(n, n * 512, seed=3)
+    cfg = GZConfig(eb=EB, capacity_factor=1.2)
+    outs = simulator.sim_reduce_scatter_ring(xs, cfg)
+    exact = np.sum(xs, axis=0)
+    hops = error_budget.lossy_hops("reduce_scatter_ring", n)
+    slack = np.abs(exact).max() * 1e-6
+    for r, o in enumerate(outs):
+        want = exact[r * 512 : (r + 1) * 512]
+        assert np.abs(o - want).max() <= EB + slack
+
+
+def test_sim_allgather_single_lossy_hop():
+    n = 8
+    xs = _ranks(n, 512, seed=4)
+    cfg = GZConfig(eb=EB)
+    outs = simulator.sim_allgather_ring(xs, cfg)
+    want = np.concatenate(xs)
+    for o in outs:
+        assert np.abs(o - want).max() <= EB + np.abs(want).max() * 2e-7
+
+
+def test_sim_scatter_and_broadcast():
+    n = 8
+    rng = np.random.default_rng(5)
+    full = np.cumsum(rng.normal(0, 0.01, n * 512)).astype(np.float32)
+    cfg = GZConfig(eb=EB)
+    outs = simulator.sim_scatter_binomial(full, n, cfg)
+    for i, o in enumerate(outs):
+        want = full[i * 512 : (i + 1) * 512]
+        assert np.abs(o - want).max() <= EB + np.abs(want).max() * 2e-7
+    bc = simulator.sim_broadcast_binomial(full, n, cfg)
+    for o in bc:
+        assert np.abs(o - full).max() <= EB + np.abs(full).max() * 2e-7
+
+
+def test_redoub_fewer_compression_events_than_ring():
+    """The paper's performance metric: log N vs N events per rank."""
+    for n in [8, 64, 256]:
+        assert error_budget.compression_events(
+            "allreduce_redoub", n
+        ) < error_budget.compression_events("allreduce_ring", n)

@@ -1,0 +1,102 @@
+"""Compressor-level invariants, incl. hypothesis property tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compressor import ErrorBoundedLorenzo, FixedRate
+
+COMP = ErrorBoundedLorenzo(capacity_factor=1.1)
+
+
+def test_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = np.cumsum(rng.normal(0, 0.01, 50_000)).astype(np.float32)
+    for eb in [1e-2, 1e-3, 1e-4]:
+        c = COMP.compress(jnp.asarray(x), eb)
+        assert not bool(c.overflowed())
+        y = np.asarray(COMP.decompress(c))
+        assert np.abs(x - y).max() <= eb * (1 + 1e-3) + np.abs(x).max() * 2e-7
+
+
+def test_compression_ratio_on_smooth_data():
+    """Paper Table 1 regime: smooth fields at eb=1e-4 compress well."""
+    rng = np.random.default_rng(1)
+    x = np.cumsum(rng.normal(0, 1e-3, 500_000)).astype(np.float32)
+    c = COMP.compress(jnp.asarray(x), 1e-4)
+    ratio = x.nbytes / float(np.asarray(c.payload_bytes()))
+    assert ratio > 4.0, ratio
+
+
+def test_decompress_reduce_equals_decompress_then_add():
+    rng = np.random.default_rng(2)
+    x = np.cumsum(rng.normal(0, 0.01, 10_000)).astype(np.float32)
+    acc = rng.normal(0, 1, 10_000).astype(np.float32)
+    c = COMP.compress(jnp.asarray(x), 1e-4)
+    fused = np.asarray(COMP.decompress_reduce(c, jnp.asarray(acc)))
+    manual = acc + np.asarray(COMP.decompress(c))
+    np.testing.assert_allclose(fused, manual, rtol=0, atol=1e-6)
+
+
+def test_fixed_rate_error_unbounded():
+    """The [30]-baseline flaw: clamped codes break the error bound."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(0, 100.0, 4096).astype(np.float32)  # rough data
+    eb = 1e-4
+    fr = FixedRate(rate_bits=8)
+    c = fr.compress(jnp.asarray(x), eb)
+    y = np.asarray(fr.decompress(c))
+    assert np.abs(x - y).max() > 10 * eb  # error blows way past the bound
+
+
+def test_non_multiple_of_block_sizes():
+    rng = np.random.default_rng(4)
+    for n in [1, 7, 255, 256, 257, 1000, 4097]:
+        x = rng.normal(0, 1, n).astype(np.float32)
+        c = COMP.compress(jnp.asarray(x), 1e-3)
+        y = np.asarray(COMP.decompress(c))
+        assert y.shape == (n,)
+        assert np.abs(x - y).max() <= 1e-3 * (1 + 1e-3)
+
+
+def test_multidim_input_flattened():
+    rng = np.random.default_rng(5)
+    x = rng.normal(0, 1, (32, 48)).astype(np.float32)
+    c = COMP.compress(jnp.asarray(x), 1e-3)
+    y = np.asarray(COMP.decompress(c)).reshape(32, 48)
+    assert np.abs(x - y).max() <= 1e-3 * (1 + 1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    scale=st.floats(1e-3, 1e3),
+    eb=st.sampled_from([1e-2, 1e-3, 1e-4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_error_bound(n, scale, eb, seed):
+    """For any input within the int32 quantization envelope, the bound holds."""
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(0, scale, n)).astype(np.float32)
+    # keep |x|/(2eb) inside int32 (the documented envelope)
+    x = np.clip(x, -2e5 * eb * 2, 2e5 * eb * 2)
+    c = COMP.compress(jnp.asarray(x), eb)
+    y = np.asarray(COMP.decompress(c))
+    # bound holds up to f32 relative rounding (~1e-7 * |x|), same as cuSZp
+    assert np.abs(x - y).max() <= eb * (1 + 1e-3) + np.abs(x).max() * 2e-7
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), eb=st.sampled_from([1e-3, 1e-4]))
+def test_property_idempotent_recompress(seed, eb):
+    """compress(decompress(c)) at the same eb reproduces values within eb.
+
+    (This is what bounds error accumulation per lossy hop in collectives.)
+    """
+    rng = np.random.default_rng(seed)
+    x = np.cumsum(rng.normal(0, 0.01, 2048)).astype(np.float32)
+    c1 = COMP.compress(jnp.asarray(x), eb)
+    y1 = COMP.decompress(c1)
+    c2 = COMP.compress(y1, eb)
+    y2 = np.asarray(COMP.decompress(c2))
+    assert np.abs(np.asarray(y1) - y2).max() <= eb * (1 + 1e-3)

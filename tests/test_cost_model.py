@@ -1,0 +1,55 @@
+"""Cost model reproduces the paper's qualitative findings (Figs 3,7,9,10)."""
+from repro.core import cost_model as cm
+from repro.core.selector import select_allreduce
+
+HW = cm.A100_SLINGSHOT
+
+
+def test_fig3_shape_small_inputs_underutilized():
+    """Per-byte compression cost explodes as size shrinks (Fig. 3)."""
+    per_byte = [cm.t_compress(s, HW) / s for s in [1e5, 1e6, 1e7, 1e8]]
+    assert per_byte == sorted(per_byte, reverse=True)
+    # 10 compressions of 1MB are much more expensive than 1 of 10MB
+    assert 10 * cm.t_compress(1e6, HW) > 2 * cm.t_compress(1e7, HW)
+
+
+def test_redoub_beats_ring_at_scale():
+    """Paper Fig. 10: ReDoub scales; Ring's D/N chunks starve the GPU."""
+    D = 646e6
+    assert cm.allreduce_redoub_gz(D, 512, 60, HW) < cm.allreduce_ring_gz(D, 512, 60, HW)
+    # and the selector picks it
+    assert select_allreduce(int(D), 512, 60, HW) == "redoub"
+
+
+def test_ring_competitive_when_saturated():
+    """Small N keeps chunks big: ring beats NCCL there (Fig. 10, N<=32)."""
+    D = 646e6
+    ring = cm.allreduce_ring_gz(D, 8, 60, HW)
+    nccl = cm.allreduce_uncompressed_ring(D, 8, HW)
+    assert ring < nccl
+
+
+def test_paper_headline_speedups_direction():
+    """gZ-ReDoub beats the NCCL analog by >1x at 64-512 GPUs, 646MB."""
+    D = 646e6
+    for n in [64, 256, 512]:
+        gz = cm.allreduce_redoub_gz(D, n, 60, HW)
+        nccl = cm.allreduce_uncompressed_ring(D, n, HW)
+        assert gz < nccl, (n, gz, nccl)
+
+
+def test_cprp2p_and_ccoll_slower_than_gz():
+    """Fig. 2: the prior-work baselines lose to the gZ designs."""
+    D, n, R = 646e6, 64, 60
+    gz_ring = cm.allreduce_ring_gz(D, n, R, HW)
+    assert cm.allreduce_cprp2p(D, n, R, HW) > gz_ring
+    assert cm.allreduce_ccoll(D, n, R, HW) > gz_ring
+
+
+def test_scatter_speedup_positive():
+    """Fig. 11/12: gZ-Scatter beats uncompressed binomial scatter."""
+    D = 646e6
+    for n in [8, 64, 512]:
+        gz = cm.scatter_binomial_gz(D, n, 60, HW)
+        base = cm.scatter_uncompressed_binomial(D, n, HW)
+        assert gz < base, (n, gz, base)

@@ -1,0 +1,67 @@
+"""Property tests: error-budget allocation is a sound end-to-end bound."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import error_budget, simulator
+from repro.core.collectives import GZConfig
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([2, 4, 8]),
+    eb=st.sampled_from([1e-3, 1e-4]),
+    seed=st.integers(0, 1000),
+)
+def test_property_redoub_budget_sound(n, eb, seed):
+    rng = np.random.default_rng(seed)
+    xs = [
+        np.cumsum(rng.normal(0, 0.01, 1024)).astype(np.float32) for _ in range(n)
+    ]
+    cfg = GZConfig(eb=eb, capacity_factor=1.3, worst_case_budget=True)
+    outs = simulator.sim_allreduce_redoub(xs, cfg)
+    exact = np.sum(xs, axis=0)
+    slack = max(np.abs(exact).max(), 1.0) * 1e-6
+    for o in outs:
+        assert np.abs(o - exact).max() <= eb + slack
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.sampled_from([2, 4, 8]), seed=st.integers(0, 1000))
+def test_property_ring_budget_sound(n, seed):
+    eb = 1e-3
+    rng = np.random.default_rng(seed)
+    xs = [
+        np.cumsum(rng.normal(0, 0.01, 1024)).astype(np.float32) for _ in range(n)
+    ]
+    cfg = GZConfig(eb=eb, capacity_factor=1.3, worst_case_budget=True)
+    outs = simulator.sim_allreduce_ring(xs, cfg)
+    exact = np.sum(xs, axis=0)
+    slack = max(np.abs(exact).max(), 1.0) * 1e-6
+    for o in outs:
+        assert np.abs(o - exact).max() <= eb + slack
+
+
+def test_statistical_budget_tighter_but_usually_fine():
+    """sqrt-allocation (paper's statistical argument): empirically the
+    error stays within eb_total even though the hard bound doesn't."""
+    n, eb = 16, 1e-4
+    rng = np.random.default_rng(0)
+    xs = [
+        np.cumsum(rng.normal(0, 0.01, 8192)).astype(np.float32) for _ in range(n)
+    ]
+    cfg = GZConfig(eb=eb, capacity_factor=1.3, worst_case_budget=False)
+    outs = simulator.sim_allreduce_redoub(xs, cfg)
+    exact = np.sum(xs, axis=0)
+    err = max(np.abs(o - exact).max() for o in outs)
+    # statistical allocation: per-stage eb = eb/sqrt(N-1); zero-mean errors
+    # random-walk, so observed error ~ eb, far under the hard bound
+    assert err <= 3 * eb, err
+
+
+def test_hop_counts_monotone_and_documented():
+    for algo in ["allreduce_redoub", "allreduce_ring", "reduce_scatter_ring"]:
+        hops = [error_budget.lossy_hops(algo, n) for n in [2, 4, 8, 16]]
+        assert hops == sorted(hops)
+    for algo in ["allgather_ring", "scatter_binomial", "broadcast_binomial"]:
+        assert error_budget.lossy_hops(algo, 64) == 1
+    assert error_budget.allocate(1e-3, "allreduce_redoub", 8) == 1e-3 / 7

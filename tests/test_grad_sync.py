@@ -1,0 +1,47 @@
+"""grad_sync: subprocess validation on a 2x4 mesh + 1-device fast paths."""
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.grad_sync import SyncConfig, dp_allreduce_grads, fsdp_all_gather
+
+CHILD = pathlib.Path(__file__).parent / "_mp_gradsync_child.py"
+SRC = str(pathlib.Path(__file__).parent.parent / "src")
+
+
+@pytest.mark.slow
+def test_grad_sync_on_2x4_mesh():
+    proc = subprocess.run(
+        [sys.executable, str(CHILD)],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env={**os.environ, "PYTHONPATH": SRC},
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL OK" in proc.stdout
+
+
+def test_single_device_fast_paths():
+    """axis size 1: collectives are identity, vjp is exact."""
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import PartitionSpec as P
+    from repro.core.shmap import shard_map
+
+    g = {"a": jnp.ones((128,)), "b": jnp.arange(64, dtype=jnp.float32)}
+
+    def body(g):
+        return dp_allreduce_grads(g, ("data",), SyncConfig())
+
+    out = jax.jit(
+        shard_map(body, mesh=mesh, in_specs=({"a": P(None), "b": P(None)},),
+                  out_specs={"a": P(None), "b": P(None)})
+    )(g)
+    np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(g["a"]))
+    np.testing.assert_allclose(np.asarray(out["b"]), np.asarray(g["b"]))

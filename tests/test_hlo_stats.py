@@ -1,0 +1,51 @@
+"""hlo_stats: collective parser + roofline arithmetic on known inputs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_stats
+
+
+def test_parser_on_synthetic_hlo():
+    text = """
+  %ag = f32[16,1024]{1,0} all-gather(f32[1,1024] %x), replica_groups={}
+  %ar.1 = bf16[4096]{0} all-reduce(bf16[4096] %y), to_apply=%add
+  tuple.1 = (f32[512]{0}, f32[512]{0}) all-reduce-start(f32[512] %z)
+  done.1 = f32[512]{0} all-reduce-done(f32[512] %w)
+  %rs = f32[256]{0} reduce-scatter(f32[4096] %a), dimensions={0}
+  %cp = u32[100]{0} collective-permute(u32[100] %b)
+  %a2a = f32[8,32]{1,0} all-to-all(f32[8,32] %c)
+"""
+    out = hlo_stats.collective_bytes(text)
+    assert out["all-gather"] == 16 * 1024 * 4
+    assert out["all-reduce"] == 4096 * 2 + 2 * 512 * 4  # -done skipped
+    assert out["reduce-scatter"] == 256 * 4
+    assert out["collective-permute"] == 100 * 4
+    assert out["all-to-all"] == 8 * 32 * 4
+    assert out["total"] == sum(
+        v for k, v in out.items() if k not in ("total", "_counts")
+    )
+
+
+def test_parser_on_real_compiled_module():
+    mesh = jax.make_mesh((1,), ("x",))
+    from jax.sharding import PartitionSpec as P
+    from repro.core.shmap import shard_map
+
+    f = jax.jit(shard_map(
+        lambda x: jax.lax.psum(x, "x"), mesh=mesh,
+        in_specs=(P("x"),), out_specs=P(),
+    ))
+    hlo = f.lower(jax.ShapeDtypeStruct((16,), jnp.float32)).compile().as_text()
+    out = hlo_stats.collective_bytes(hlo)  # may be optimized away at n=1
+    assert "total" in out
+
+
+def test_roofline_terms_math():
+    r = hlo_stats.roofline_terms(197e12, 819e9, 50e9, 1)
+    assert abs(r["compute_s"] - 1.0) < 1e-9
+    assert abs(r["memory_s"] - 1.0) < 1e-9
+    assert abs(r["collective_s"] - 1.0) < 1e-9
+    r = hlo_stats.roofline_terms(1, 1e12, 1, 1)
+    assert r["dominant"] == "memory"

@@ -1,0 +1,65 @@
+"""End-to-end training integration: loss decreases, checkpoint round-trips."""
+import numpy as np
+import jax
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.configs import registry
+from repro.core.collectives import GZConfig
+from repro.data.pipeline import SyntheticStream
+from repro.launch.shapes import InputShape, train_specs
+from repro.launch.training import make_setup, make_train_step
+from repro.models.parallel import init_params
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+STEPS, BATCH, SEQ = 12, 4, 64
+
+
+def _train(arch, grad_gz=None, steps=STEPS):
+    cfg = registry.get(arch, smoke=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    opt = AdamWConfig(lr=1e-3, total_steps=steps, warmup_steps=2)
+    setup = make_setup(cfg, mesh, opt=opt, grad_gz=grad_gz)
+    _, bspecs = train_specs(cfg, InputShape("t", SEQ, BATCH, "train"), mesh)
+    step_fn = make_train_step(setup, bspecs)
+    params = init_params(setup.defs, jax.random.key(0))
+    opt_state = adamw_init(params)
+    stream = SyntheticStream(cfg, BATCH, SEQ, seed=0)
+    losses = []
+    for _, batch in zip(range(steps), stream):
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+        assert np.isfinite(losses[-1])
+    return losses, params, opt_state
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["minitron-8b", "mamba2-780m",
+                                  "phi3.5-moe-42b-a6.6b"])
+def test_loss_decreases(arch):
+    losses, _, _ = _train(arch)
+    assert losses[-1] < losses[0] - 0.2, losses
+
+
+@pytest.mark.slow
+def test_gz_grad_sync_trains():
+    """Training with compressed gradient sync still learns (1-device mesh
+    degenerates the collectives to identity; the multi-device version is
+    exercised by examples/compressed_training.py and the gradsync child)."""
+    losses, _, _ = _train(
+        "minitron-8b", GZConfig(eb=1e-5, algo="redoub")
+    )
+    assert losses[-1] < losses[0] - 0.2
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    losses, params, opt_state = _train("minitron-8b", steps=3)
+    tree = {"params": params, "opt": opt_state}
+    d = checkpoint.save(str(tmp_path), 3, tree)
+    assert checkpoint.latest_step(str(tmp_path)) == 3
+    restored = checkpoint.restore(str(tmp_path), 3, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype.name == "bfloat16":
+            a, b = a.view(np.uint16), b.view(np.uint16)
+        np.testing.assert_array_equal(a, b)
