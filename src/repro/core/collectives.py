@@ -57,6 +57,7 @@ __all__ = [
     "gz_scatter",
     "gz_broadcast",
     "gz_all_to_all",
+    "plan_ring_pipeline_chunks",
 ]
 
 
@@ -66,19 +67,41 @@ class GZConfig:
 
     eb is the *end-to-end* absolute error bound; per-stage budgets are
     derived via core.error_budget (accuracy-aware design, paper §3.3.3).
+
+    ``pipeline_chunks`` (power of two) splits every ring chunk into that
+    many pieces and software-pipelines the ring: piece k+1 is compressed
+    while piece k is in flight on ``ppermute`` — the shard_map analog of
+    the paper's multi-stream overlap (§3.2/§3.3, DESIGN.md §4).  1 means
+    the sequential schedule; ``algo="auto"`` also auto-selects the chunk
+    count from the cost model.  Piece boundaries stay aligned to whole
+    compressor row-tiles, so the quantization grid — and therefore the
+    error bound and the per-element lossy-hop count — is identical to the
+    unpipelined schedule.
+
+    ``fused`` routes compression through the single-pass Pallas pipeline
+    (kernels/lorenzo.py quantize_pack); False keeps the two-pass oracle
+    composition.  Wire bytes are identical either way.
     """
 
     eb: float = 1e-4
     capacity_factor: float = 0.6
     algo: str = "auto"  # auto | redoub | ring | intring
     worst_case_budget: bool = True
+    pipeline_chunks: int = 1
+    fused: bool = True
 
     def compressor(self) -> ErrorBoundedLorenzo:
-        return ErrorBoundedLorenzo(capacity_factor=self.capacity_factor)
+        return ErrorBoundedLorenzo(
+            capacity_factor=self.capacity_factor, fused=self.fused
+        )
 
 
 def _axis_size(axis_name) -> int:
-    return lax.axis_size(axis_name)
+    if hasattr(lax, "axis_size"):  # JAX >= 0.6
+        return lax.axis_size(axis_name)
+    from jax import core
+
+    return int(core.axis_frame(axis_name))
 
 
 def _ppermute(tree, axis_name, perm):
@@ -166,18 +189,206 @@ def _reduce_scatter_ring(x, axis_name, cfg: GZConfig, eb_stage, *, owner_offset=
     return acc, chunk_n, overflow
 
 
+# ---------------------------------------------------------------------------
+# Chunked double-buffered (pipelined) ring schedule — DESIGN.md §4
+# ---------------------------------------------------------------------------
+#
+# Each ring chunk is split into P = cfg.pipeline_chunks pieces, each a whole
+# number of compressor row-tiles so the quantization grid matches the
+# sequential schedule exactly.  The (step, piece) loop is flattened to
+# t = s*P + p and software-pipelined with one piece of double buffering:
+# the body at iteration t ppermutes the *already compressed* piece t while
+# compressing piece t+1 from the pre-update accumulator.  For P >= 2 the
+# piece compressed at t is never the piece reduced at t (next step's piece
+# 0 was received P-1 iterations earlier), so the compress has no data
+# dependency on the in-flight ppermute — XLA's scheduler is free to overlap
+# them, which is the shard_map translation of the paper's multi-stream
+# compress/communicate overlap.
+
+PIECE_QUANTUM = ops.BLOCK * ops.TILE_ROWS  # elements per compressor row-tile
+
+
+def _piece(x, chunk_idx, piece_idx, chunk_n, piece_n):
+    return lax.dynamic_slice(
+        x, (chunk_idx * chunk_n + piece_idx * piece_n,), (piece_n,)
+    )
+
+
+def _set_piece(x, val, chunk_idx, piece_idx, chunk_n, piece_n):
+    return lax.dynamic_update_slice(
+        x, val, (chunk_idx * chunk_n + piece_idx * piece_n,)
+    )
+
+
+def _pad_for_pipeline(x, n, p):
+    """Pad flat x so each of n chunks is p pieces of whole row-tiles."""
+    quantum = n * p * PIECE_QUANTUM
+    total = -(-x.shape[0] // quantum) * quantum
+    padded = jnp.zeros((total,), x.dtype).at[: x.shape[0]].set(x)
+    return padded, total // n, total // (n * p)
+
+
+def plan_ring_pipeline_chunks(n_elems: int, n_ranks: int, *, ratio: float = 20.0,
+                              hw=None) -> int:
+    """Cost-model pipeline depth for a ring over `n_elems` f32 elements,
+    capped at what the payload can actually fill with whole-tile pieces.
+
+    The one planner every entry point (gz_allreduce auto, grad_sync
+    routing) shares, so identical messages get identical schedules.
+    """
+    from repro.core import cost_model as cm
+
+    chunks = cm.best_pipeline_chunks(
+        n_elems * 4, n_ranks, ratio, hw if hw is not None else cm.TPU_V5E
+    )
+    fill = n_elems // (n_ranks * PIECE_QUANTUM)
+    while chunks > 1 and chunks > fill:
+        chunks //= 2
+    return chunks
+
+
+def _reduce_scatter_ring_pipelined(x, axis_name, cfg: GZConfig, eb_stage, *,
+                                   owner_offset=0):
+    """Chunked double-buffered ring reduce-scatter.
+
+    Same hop structure and error budget as :func:`_reduce_scatter_ring`
+    (every element is still requantized once per hop); only the schedule
+    changes: compress(piece t+1) runs concurrently with ppermute(piece t).
+    Returns (acc, chunk_n, overflow) with the same ownership convention.
+    """
+    n = _axis_size(axis_name)
+    p_chunks = cfg.pipeline_chunks
+    assert p_chunks >= 2, "pipelined schedule needs >= 2 pieces per chunk"
+    comp = cfg.compressor()
+    r = lax.axis_index(axis_name)
+    acc, chunk_n, piece_n = _pad_for_pipeline(x, n, p_chunks)
+    perm = _ring_perm(n)
+    t0 = owner_offset
+    T = (n - 1) * p_chunks
+
+    def send_piece(acc, t):
+        s, p = t // p_chunks, t % p_chunks
+        send_idx = (r - s + t0) % n
+        return comp.compress(
+            _piece(acc, send_idx, p, chunk_n, piece_n), eb_stage
+        )
+
+    c0 = send_piece(acc, 0)  # pipeline fill: piece 0 compressed up front
+    overflow = c0.overflowed()
+
+    def body(t, carry):
+        acc, c_in, overflow = carry
+        # Compress the NEXT piece from the pre-update accumulator: for
+        # P >= 2 that piece was last touched at least P-1 iterations ago,
+        # so this op is independent of the ppermute below (the overlap).
+        c_next = send_piece(acc, t + 1)
+        overflow |= c_next.overflowed()
+        c_recv = _ppermute(c_in, axis_name, perm)
+        s, p = t // p_chunks, t % p_chunks
+        recv_idx = (r - s - 1 + t0) % n
+        updated = comp.decompress_reduce(
+            c_recv, _piece(acc, recv_idx, p, chunk_n, piece_n)
+        )
+        acc = _set_piece(acc, updated, recv_idx, p, chunk_n, piece_n)
+        return acc, c_next, overflow
+
+    acc, c_last, overflow = lax.fori_loop(0, T - 1, body, (acc, c0, overflow))
+    # Pipeline drain: the final piece's hop.
+    c_recv = _ppermute(c_last, axis_name, perm)
+    recv_idx = (r - (n - 2) - 1 + t0) % n
+    updated = comp.decompress_reduce(
+        c_recv, _piece(acc, recv_idx, p_chunks - 1, chunk_n, piece_n)
+    )
+    acc = _set_piece(acc, updated, recv_idx, p_chunks - 1, chunk_n, piece_n)
+    return acc, chunk_n, overflow
+
+
+def _compress_own_pieces(buf, own_idx, eb, cfg: GZConfig, chunk_n, piece_n,
+                         overflow):
+    """Compress chunk `own_idx` of `buf` as P independent pieces, installing
+    the decompressed copy in place (owner sees the same values everyone
+    else will).  Returns (buf, pieces tuple, overflow)."""
+    comp = cfg.compressor()
+    pieces = []
+    for p in range(cfg.pipeline_chunks):
+        c = comp.compress(_piece(buf, own_idx, p, chunk_n, piece_n), eb)
+        overflow |= c.overflowed()
+        buf = _set_piece(buf, comp.decompress(c), own_idx, p, chunk_n, piece_n)
+        pieces.append(c)
+    return buf, tuple(pieces), overflow
+
+
+def _forward_pieces_ring(buf, pieces, axis_name, cfg: GZConfig, recv_idx_fn,
+                         chunk_n, piece_n):
+    """Forward P compressed pieces around the ring for n-1 steps, installing
+    decompressed copies at chunk ``recv_idx_fn(s)`` each step.
+
+    Each piece rides its own ppermute chain, so decompress(piece p) can
+    overlap the wire time of piece p+1 at every step — the chunked
+    double-buffered allgather schedule.  Exactly one lossy hop per element
+    (the compression happened once, at the owner).
+    """
+    n = _axis_size(axis_name)
+    comp = cfg.compressor()
+    perm = _ring_perm(n)
+
+    def body(s, carry):
+        buf, pieces = carry
+        recv_idx = recv_idx_fn(s)
+        new_pieces = []
+        for p, c_p in enumerate(pieces):
+            c_new = _ppermute(c_p, axis_name, perm)
+            buf = _set_piece(
+                buf, comp.decompress(c_new), recv_idx, p, chunk_n, piece_n
+            )
+            new_pieces.append(c_new)
+        return buf, tuple(new_pieces)
+
+    buf, _ = lax.fori_loop(0, n - 1, body, (buf, pieces))
+    return buf
+
+
+def _allgather_forward_pipelined(acc, axis_name, cfg: GZConfig, eb_stage,
+                                 chunk_n, piece_n, overflow):
+    """Pipelined ring-allgather forwarding stage over an RS-reduced acc."""
+    n = _axis_size(axis_name)
+    r = lax.axis_index(axis_name)
+    acc, pieces, overflow = _compress_own_pieces(
+        acc, (r + 1) % n, eb_stage, cfg, chunk_n, piece_n, overflow
+    )
+    acc = _forward_pieces_ring(
+        acc, pieces, axis_name, cfg,
+        lambda s: (r - s) % n,  # chunk owned by rank (r - 1 - s)
+        chunk_n, piece_n,
+    )
+    return acc, overflow
+
+
 def _allreduce_ring(x, axis_name, cfg: GZConfig):
     """Ring gZ-Allreduce: reduce-scatter stage + allgather-forwarding stage.
 
     The allgather stage compresses exactly once (owner) and forwards the
     *compressed* payload N-1 times (no recompression — the paper's
-    data-movement framework), so it adds exactly one lossy hop.
+    data-movement framework), so it adds exactly one lossy hop.  With
+    ``cfg.pipeline_chunks > 1`` both stages run the chunked
+    double-buffered schedule (same lossy-hop count, overlapped pipeline).
     """
     n = _axis_size(axis_name)
     comp = cfg.compressor()
     hops = error_budget.lossy_hops("allreduce_ring", n)
     eb_stage = cfg.eb / hops if cfg.worst_case_budget else cfg.eb / math.sqrt(hops)
     r = lax.axis_index(axis_name)
+
+    if cfg.pipeline_chunks > 1:
+        assert _is_pow2(cfg.pipeline_chunks), "pipeline_chunks must be 2**k"
+        acc, chunk_n, overflow = _reduce_scatter_ring_pipelined(
+            x, axis_name, cfg, eb_stage
+        )
+        acc, overflow = _allgather_forward_pipelined(
+            acc, axis_name, cfg, eb_stage, chunk_n,
+            chunk_n // cfg.pipeline_chunks, overflow,
+        )
+        return acc[: x.shape[0]], overflow
 
     acc, chunk_n, overflow = _reduce_scatter_ring(x, axis_name, cfg, eb_stage)
     own_idx = (r + 1) % n
@@ -314,9 +525,15 @@ def gz_allreduce(
     assert _is_pow2(n), f"axis {axis_name!r} size {n} must be a power of two"
     algo = cfg.algo
     if algo == "auto":
-        from repro.core.selector import select_allreduce
+        from repro.core.selector import select_allreduce_plan
 
-        algo = select_allreduce(x.size * 4, n)
+        algo, _ = select_allreduce_plan(x.size * 4, n)
+        # Plan the ring pipeline depth only when the caller left the knob
+        # at its default — an explicit pipeline_chunks is always honored.
+        if algo == "ring" and cfg.pipeline_chunks == 1:
+            cfg = dataclasses.replace(
+                cfg, pipeline_chunks=plan_ring_pipeline_chunks(x.size, n)
+            )
     shape, dtype = x.shape, x.dtype
     flat = x.reshape(-1).astype(jnp.float32)
     if algo == "redoub":
@@ -354,12 +571,29 @@ def gz_reduce_scatter(
     )
     r = lax.axis_index(axis_name)
     flat = x.astype(jnp.float32)
-    # owner_offset=-1 makes rank r end owning chunk r (see derivation in
-    # _reduce_scatter_ring docstring).
-    acc, chunk_n, ovf = _reduce_scatter_ring(
-        flat, axis_name, cfg, eb_stage, owner_offset=-1
-    )
-    out = _chunk(acc, r % n, chunk_n).astype(x.dtype)
+    chunk_in = x.shape[0] // n
+    if cfg.pipeline_chunks > 1:
+        assert _is_pow2(cfg.pipeline_chunks)
+        # Chunk boundaries are caller semantics: pad each chunk (not the
+        # flat tail) so every chunk is pipeline_chunks whole-tile pieces.
+        quantum = cfg.pipeline_chunks * PIECE_QUANTUM
+        chunk_pad = -(-chunk_in // quantum) * quantum
+        flat = (
+            jnp.zeros((n, chunk_pad), jnp.float32)
+            .at[:, :chunk_in]
+            .set(flat.reshape(n, chunk_in))
+            .reshape(-1)
+        )
+        acc, chunk_n, ovf = _reduce_scatter_ring_pipelined(
+            flat, axis_name, cfg, eb_stage, owner_offset=-1
+        )
+    else:
+        # owner_offset=-1 makes rank r end owning chunk r (see derivation in
+        # _reduce_scatter_ring docstring).
+        acc, chunk_n, ovf = _reduce_scatter_ring(
+            flat, axis_name, cfg, eb_stage, owner_offset=-1
+        )
+    out = _chunk(acc, r % n, chunk_n)[:chunk_in].astype(x.dtype)
     return (out, ovf) if return_info else out
 
 
@@ -380,7 +614,30 @@ def gz_allgather(
     r = lax.axis_index(axis_name)
     dtype = x.dtype
     flat = x.reshape(-1).astype(jnp.float32)
-    chunk_n = flat.shape[0]
+    n_orig = flat.shape[0]
+
+    if cfg.pipeline_chunks > 1:
+        assert _is_pow2(cfg.pipeline_chunks)
+        quantum = cfg.pipeline_chunks * PIECE_QUANTUM
+        chunk_n = -(-n_orig // quantum) * quantum
+        piece_n = chunk_n // cfg.pipeline_chunks
+        own_chunk = jnp.zeros((chunk_n,), jnp.float32).at[:n_orig].set(flat)
+        padded = lax.dynamic_update_slice(
+            jnp.zeros((n * chunk_n,), jnp.float32), own_chunk, (r * chunk_n,)
+        )
+        out, pieces, ovf = _compress_own_pieces(
+            padded, r, cfg.eb, cfg, chunk_n, piece_n, jnp.zeros((), jnp.bool_)
+        )
+        out = _forward_pieces_ring(
+            out, pieces, axis_name, cfg,
+            lambda s: (r - s - 1) % n,  # piece sent by rank (r - 1 - s)
+            chunk_n, piece_n,
+        )
+        out = out.reshape(n, chunk_n)[:, :n_orig].reshape(-1)
+        out = out.reshape((n * x.shape[0],) + x.shape[1:]) if x.ndim else out
+        return (out.astype(dtype), ovf) if return_info else out.astype(dtype)
+
+    chunk_n = n_orig
     out = jnp.zeros((n * chunk_n,), jnp.float32)
     c_own = comp.compress(flat, cfg.eb)
     ovf = c_own.overflowed()
@@ -456,38 +713,57 @@ def gz_scatter(
 
     # Binomial tree: round k (from top) ships 2**k chunks from each sender
     # i (i % 2**(k+1) == 0) to i + 2**k.  Payload shrinks by half each
-    # round — each round is its own static ppermute shape.
+    # round — each round is its own static ppermute shape.  With
+    # cfg.pipeline_chunks > 1 each round's slab is split into that many
+    # independent piece-permute chains (both powers of two, so pieces
+    # divide the slab): the install of piece g overlaps the wire time of
+    # piece g+1 — the chunked double-buffered analog of the paper's
+    # multi-stream scatter.
     steps = int(math.log2(n))
+    if cfg.pipeline_chunks > 1:
+        assert _is_pow2(cfg.pipeline_chunks)
     for k in reversed(range(steps)):
         span = 1 << k
         perm = [(i, i + span) for i in range(n) if i % (span * 2) == 0]
         start = (r + span) % n  # sender's outgoing slab start (own rank + span)
-        slab = jax.tree.map(
-            lambda h: lax.dynamic_slice(h, (start,) + (0,) * (h.ndim - 1), (span,) + h.shape[1:]),
-            (held_packed, held_bw, held_anchor),
-        )
-        recv = _ppermute(slab, axis_name, perm)
-        # Receivers (r % 2**(k+1) == span) install the slab at their own rank
-        # index; everyone else keeps their buffer.
         is_recv = (r % (span * 2)) == span
-        installed = jax.tree.map(
-            lambda h, rv: lax.dynamic_update_slice(h, rv, (r,) + (0,) * (h.ndim - 1)),
-            (held_packed, held_bw, held_anchor),
-            recv,
-        )
-        held_packed, held_bw, held_anchor = jax.tree.map(
-            lambda new, old: jnp.where(is_recv, new, old),
-            installed,
-            (held_packed, held_bw, held_anchor),
-        )
+        groups = min(max(cfg.pipeline_chunks, 1), span)
+        sub = span // groups
+        for g in range(groups):
+            piece = jax.tree.map(
+                lambda h: lax.dynamic_slice(
+                    h,
+                    ((start + g * sub) % n,) + (0,) * (h.ndim - 1),
+                    (sub,) + h.shape[1:],
+                ),
+                (held_packed, held_bw, held_anchor),
+            )
+            recv = _ppermute(piece, axis_name, perm)
+            # Receivers (r % 2**(k+1) == span) install the piece at their
+            # own rank index; everyone else keeps their buffer.
+            installed = jax.tree.map(
+                lambda h, rv: lax.dynamic_update_slice(
+                    h, rv, (r + g * sub,) + (0,) * (h.ndim - 1)
+                ),
+                (held_packed, held_bw, held_anchor),
+                recv,
+            )
+            held_packed, held_bw, held_anchor = jax.tree.map(
+                lambda new, old: jnp.where(is_recv, new, old),
+                installed,
+                (held_packed, held_bw, held_anchor),
+            )
 
     # Decompress own chunk (the single lossy hop).
     my_pk = jnp.take(held_packed, r, axis=0)
     my_bw = jnp.take(held_bw, r, axis=0)
     my_anchor = jnp.take(held_anchor, r, axis=0)
-    my_codes = bitpack.unpack(my_pk, my_bw, ops.BLOCK)
-    out = ops.from_blocks(ops.dequantize(my_codes, my_anchor, cfg.eb), chunk_n)
-    out = out.astype(dtype)
+    if cfg.fused:
+        x2d = ops.unpack_dequantize(my_pk, my_bw, my_anchor, cfg.eb)
+    else:
+        my_codes = bitpack.unpack(my_pk, my_bw, ops.BLOCK)
+        x2d = ops.dequantize(my_codes, my_anchor, cfg.eb)
+    out = ops.from_blocks(x2d, chunk_n).astype(dtype)
     return (out, ovf) if return_info else out
 
 
@@ -549,8 +825,12 @@ def _gz_all_to_all_impl(x, axis_name, cfg, return_info: bool = True):
     rp, rb, ra = recv
     out = []
     for i in range(n):
-        c = bitpack.unpack(rp[i], rb[i], B)
-        out.append(ops.from_blocks(ops.dequantize(c, ra[i], cfg.eb), chunk_n))
+        if cfg.fused:
+            x2d = ops.unpack_dequantize(rp[i], rb[i], ra[i], cfg.eb)
+        else:
+            c = bitpack.unpack(rp[i], rb[i], B)
+            x2d = ops.dequantize(c, ra[i], cfg.eb)
+        out.append(ops.from_blocks(x2d, chunk_n))
     out = jnp.stack(out).reshape(shape).astype(dtype)
     return out, ovf
 

@@ -25,26 +25,40 @@ class ErrorBoundedLorenzo:
     Guarantee: |x - decompress(compress(x, eb))| <= eb element-wise, as long
     as |x|/(2*eb) < 2**30 (pre-quantization fits int32 — same envelope as
     cuSZp; asserted in tests).
+
+    ``fused=True`` (default) runs the single-pass Pallas pipeline
+    (quantize_pack / unpack_dequantize_reduce, DESIGN.md §3): the uint32
+    codes array never materializes and the separate jnp bitpack pass is
+    gone.  ``fused=False`` is the two-pass composition kept as the oracle
+    path; both produce byte-identical wire streams.
     """
 
     capacity_factor: float = 0.5
     block: int = ops.BLOCK
+    fused: bool = True
 
     def compress(self, x: jnp.ndarray, eb) -> Compressed:
         n = int(x.size)
         eb = jnp.asarray(eb, jnp.float32)
         x2d = ops.to_blocks(x)
-        codes, bw, anchor = ops.quantize(x2d, eb)
         cap = capacity_words_for(n, self.capacity_factor, self.block)
-        packed, nwords = bitpack.pack(codes, bw, cap)
+        if self.fused:
+            packed, bw, anchor = ops.quantize_pack(x2d, eb, cap)
+            nwords = bitpack.packed_words(bw, self.block)
+        else:
+            codes, bw, anchor = ops.quantize(x2d, eb)
+            packed, nwords = bitpack.pack(codes, bw, cap)
         return Compressed(
             packed=packed, bitwidth=bw, anchor=anchor, nwords=nwords, eb=eb,
             n=n, block=self.block,
         )
 
     def decompress(self, c: Compressed) -> jnp.ndarray:
-        codes = bitpack.unpack(c.packed, c.bitwidth, c.block)
-        x2d = ops.dequantize(codes, c.anchor, c.eb)
+        if self.fused:
+            x2d = ops.unpack_dequantize(c.packed, c.bitwidth, c.anchor, c.eb)
+        else:
+            codes = bitpack.unpack(c.packed, c.bitwidth, c.block)
+            x2d = ops.dequantize(codes, c.anchor, c.eb)
         return ops.from_blocks(x2d, c.n)
 
     def decompress_reduce(self, c: Compressed, acc: jnp.ndarray) -> jnp.ndarray:
@@ -53,9 +67,14 @@ class ErrorBoundedLorenzo:
         ``acc`` is flat (n,); fused Pallas kernel works on the padded block
         view.
         """
-        codes = bitpack.unpack(c.packed, c.bitwidth, c.block)
         acc2d = ops.to_blocks(acc)
-        out2d = ops.dequantize_reduce(codes, c.anchor, c.eb, acc2d)
+        if self.fused:
+            out2d = ops.unpack_dequantize_reduce(
+                c.packed, c.bitwidth, c.anchor, c.eb, acc2d
+            )
+        else:
+            codes = bitpack.unpack(c.packed, c.bitwidth, c.block)
+            out2d = ops.dequantize_reduce(codes, c.anchor, c.eb, acc2d)
         return ops.from_blocks(out2d, c.n)
 
 

@@ -37,9 +37,12 @@ __all__ = [
     "allreduce_uncompressed_ring",
     "allreduce_cprp2p",
     "allreduce_ccoll",
+    "allreduce_ring_gz_chunked",
     "scatter_binomial_gz",
+    "scatter_binomial_gz_chunked",
     "scatter_uncompressed_binomial",
     "allgather_ring_gz",
+    "best_pipeline_chunks",
 ]
 
 
@@ -184,6 +187,81 @@ def allreduce_ccoll(D, N, R, hw: Hardware) -> float:
         + t_reduce(ch, hw) + stage
     step_ag = t_net(ch / R, hw) + t_decompress(ch, hw) + stage
     return (N - 1) * step_rs + t_compress(ch, hw) + (N - 1) * step_ag
+
+
+# --- Chunked double-buffered pipeline (DESIGN.md §4) ---
+#
+# The explicit per-chunk overlap model of the pipelined schedules in
+# core/collectives.py.  Unlike the fractional ``overlap`` discount above
+# (which credits an *assumed* multi-stream engine), this models the
+# schedule the implementation actually runs: each ring chunk is split into
+# ``chunks`` pieces that flow through the serial stage chain
+# compress -> wire -> decompress+reduce with one piece of double
+# buffering, so steady-state throughput is set by the slowest stage and
+# the ends pay a fill + drain of one full piece-chain.  chunks=1 is the
+# sequential schedule (zero overlap) — what the unpipelined code paths do.
+# The cost of pipelining is explicit too: every piece pays the
+# per-invocation compressor overhead and runs at the *piece* size's
+# utilization, which is why the selector's best chunk count falls back to
+# 1 below the saturation size.
+
+
+def _pipeline_phase(stage_times, chunks: int) -> float:
+    """Fill/drain + steady-state time of `chunks` pieces through serial,
+    double-buffered stages: sum(stages) + (chunks-1) * max(stages)."""
+    return sum(stage_times) + (chunks - 1) * max(stage_times)
+
+
+def allreduce_ring_gz_chunked(D, N, R, hw: Hardware, chunks: int = 1) -> float:
+    """gZ-Allreduce (Ring) under the chunked double-buffered schedule.
+
+    Per-chunk overlap terms: each of the (N-1) RS steps pipelines
+    [compress, wire, decompress+reduce] over `chunks` pieces of D/(N*chunks)
+    bytes; the AG stage pipelines [wire, decompress] plus the owner's
+    one-off piece-wise compression.
+    """
+    piece = D / N / chunks
+    rs_stages = [
+        t_compress(piece, hw),
+        t_net(piece / R, hw),
+        t_decompress(piece, hw) + t_reduce(piece, hw),
+    ]
+    step_rs = _pipeline_phase(rs_stages, chunks)
+    own = chunks * t_compress(piece, hw)  # owner compress, not overlappable
+    ag_stages = [t_net(piece / R, hw), t_decompress(piece, hw)]
+    step_ag = _pipeline_phase(ag_stages, chunks)
+    return (N - 1) * step_rs + own + (N - 1) * step_ag
+
+
+def scatter_binomial_gz_chunked(D, N, R, hw: Hardware, chunks: int = 1) -> float:
+    """gZ-Scatter with each tree round's slab split into `chunks` piece
+    chains: the receiver-side install (buffer copy at reduce bandwidth)
+    overlaps the next piece's wire time."""
+    rounds = math.ceil(math.log2(N))
+    total = t_compress(D, hw)  # batched root compression, saturated
+    for k in reversed(range(rounds)):
+        payload = D * (2**k) / N / R
+        g = min(chunks, 2**k) if k else 1
+        piece = payload / g
+        total += _pipeline_phase(
+            [t_net(piece, hw), t_reduce(piece, hw)], g
+        )
+    total += t_decompress(D / N, hw)
+    return total
+
+
+# Single source of truth for every planner entry point (selector plan,
+# gz_allreduce auto, grad_sync routing) — keep them agreeing.
+PIPELINE_CHUNK_CANDIDATES = (1, 2, 4, 8, 16)
+
+
+def best_pipeline_chunks(
+    D, N, R, hw: Hardware, candidates=PIPELINE_CHUNK_CANDIDATES
+) -> int:
+    """Chunk count minimizing the chunked-ring model (1 == don't pipeline)."""
+    return min(
+        candidates, key=lambda c: allreduce_ring_gz_chunked(D, N, R, hw, c)
+    )
 
 
 # --- Data movement ---

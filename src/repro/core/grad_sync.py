@@ -35,6 +35,7 @@ from jax.flatten_util import ravel_pytree
 
 from repro.core.collectives import (
     GZConfig,
+    _axis_size,
     gz_allgather,
     gz_allreduce,
     gz_reduce_scatter,
@@ -47,16 +48,36 @@ CHUNK = 4 * 1024 * 1024  # elements per compression call (f32: 16 MiB)
 
 @dataclasses.dataclass(frozen=True)
 class SyncConfig:
-    """How gradients cross the wire."""
+    """How gradients cross the wire.
+
+    ``pipeline_chunks``: 0 (default) auto-selects the ring pipeline depth
+    from the cost model per (chunk bytes, axis size) — the chunked
+    double-buffered schedule of DESIGN.md §4; > 0 forces that depth; the
+    knob is ignored by non-ring algorithms (redoub/intring take no chunk
+    schedule).
+    """
 
     gz: GZConfig | None = GZConfig(eb=1e-4, algo="redoub", worst_case_budget=False)
     relative_eb: bool = True
     chunk: int = CHUNK
+    pipeline_chunks: int = 0
 
     def with_algo(self, algo: str) -> "SyncConfig":
         return dataclasses.replace(
             self, gz=dataclasses.replace(self.gz, algo=algo)
         )
+
+
+def _plan_cfg(cfg: GZConfig, sync: "SyncConfig", n_elems: int, ax) -> GZConfig:
+    """Resolve the per-axis pipeline depth for the gradient allreduce."""
+    if sync.pipeline_chunks > 0:
+        return dataclasses.replace(cfg, pipeline_chunks=sync.pipeline_chunks)
+    if cfg.algo == "ring" and cfg.pipeline_chunks == 1:
+        from repro.core.collectives import plan_ring_pipeline_chunks
+
+        chunks = plan_ring_pipeline_chunks(n_elems, _axis_size(ax))
+        return dataclasses.replace(cfg, pipeline_chunks=chunks)
+    return cfg  # "auto" plans inside gz_allreduce; explicit depth honored
 
 
 def _global_rms(flat: jnp.ndarray, axis_names) -> jnp.ndarray:
@@ -87,7 +108,7 @@ def _allreduce_flat(flat: jnp.ndarray, axis_names, sync: SyncConfig) -> jnp.ndar
     def body(carry, xc):
         out = xc
         for ax in axis_names:  # hierarchical: data first, then pod
-            out = gz_allreduce(out, ax, cfg)
+            out = gz_allreduce(out, ax, _plan_cfg(cfg, sync, chunk, ax))
         return carry, out
 
     _, synced = lax.scan(body, (), padded.reshape(n_chunks, chunk))
@@ -131,7 +152,7 @@ def _fsdp_gather_impl(x, axis_name, sync):
     shape = x.shape
     flat = x.reshape(-1)
     out = gz_allgather(flat.astype(jnp.float32), axis_name, sync.gz)
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     return out.astype(x.dtype).reshape((n * shape[0],) + shape[1:])
 
 
@@ -152,7 +173,7 @@ def fsdp_reduce_scatter(
     """Sum-and-shard along the leading axis: (n*s, ...) -> (s, ...)."""
     if sync is None or sync.gz is None:
         return lax.psum_scatter(g, axis_name, scatter_dimension=0, tiled=True)
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     shape = g.shape
     flat = g.astype(jnp.float32).reshape(n, -1).reshape(-1)
     out = gz_reduce_scatter(flat, axis_name, sync.gz)

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 from repro.core import cost_model as cm
 
-__all__ = ["select_allreduce"]
+__all__ = ["select_allreduce", "select_allreduce_plan"]
 
 
 def select_allreduce(
@@ -33,4 +33,39 @@ def select_allreduce(
     }
     if allow_beyond_paper:
         costs["intring"] = cm.allreduce_intring_gz(d_bytes, n_ranks, ratio, hw)
+    return min(costs, key=costs.get)
+
+
+def select_allreduce_plan(
+    d_bytes: int,
+    n_ranks: int,
+    ratio: float = 20.0,
+    hw: cm.Hardware = cm.TPU_V5E,
+    *,
+    allow_beyond_paper: bool = False,
+    chunk_candidates=cm.PIPELINE_CHUNK_CANDIDATES,
+) -> tuple[str, int]:
+    """Pick (algo, pipeline_chunks) from the explicit per-chunk cost model.
+
+    Ring is costed under the chunked double-buffered schedule at its best
+    chunk count (DESIGN.md §4): above the compressor saturation size the
+    pipelined ring strictly dominates the sequential one, so the plan comes
+    back with chunks > 1; below it, per-piece overhead wins and the plan
+    degrades to the sequential schedule (chunks == 1).  ReDoub compresses
+    full messages — its overlap is already a single long chain, so it takes
+    no chunk knob (returned chunks apply to ring only).
+    """
+    ring_chunks = cm.best_pipeline_chunks(
+        d_bytes, n_ranks, ratio, hw, chunk_candidates
+    )
+    costs = {
+        ("ring", ring_chunks): cm.allreduce_ring_gz_chunked(
+            d_bytes, n_ranks, ratio, hw, ring_chunks
+        ),
+        ("redoub", 1): cm.allreduce_redoub_gz(d_bytes, n_ranks, ratio, hw),
+    }
+    if allow_beyond_paper:
+        costs[("intring", 1)] = cm.allreduce_intring_gz(
+            d_bytes, n_ranks, ratio, hw
+        )
     return min(costs, key=costs.get)

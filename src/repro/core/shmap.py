@@ -1,13 +1,12 @@
 """shard_map wrapper used framework-wide.
 
-``check_vma=False`` because Pallas calls inside shard_map bodies cannot
-declare varying-mesh-axes on their ShapeDtypeStruct outputs (JAX 0.8.x);
-the collectives and model layers are written rank-centric and manage
+Replication checking is disabled (``check_vma``/``check_rep`` depending on
+the JAX version) because Pallas calls inside shard_map bodies cannot
+declare varying-mesh-axes on their ShapeDtypeStruct outputs; the
+collectives and model layers are written rank-centric and manage
 replication explicitly.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 
@@ -15,6 +14,12 @@ __all__ = ["shard_map"]
 
 
 def shard_map(f, *, mesh, in_specs, out_specs):
-    return jax.shard_map(
-        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+    if hasattr(jax, "shard_map"):  # JAX >= 0.6
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
     )

@@ -1,12 +1,29 @@
 """Pallas TPU kernels for the cuSZp-adapted block compressor.
 
-Three kernels, each tiled ``(TILE_ROWS, BLOCK)`` over a grid of block-rows:
+Six kernels, each tiled ``(TILE_ROWS, BLOCK)`` over a grid of block-rows:
 
   * ``quantize``          f32 -> zigzag codes + per-block bitwidth
   * ``dequantize``        codes -> f32 (per-block prefix-sum reconstruct)
   * ``dequantize_reduce`` codes + accumulator -> accumulator + f32
     (the paper's on-device reduction kernel, fused with decompression so the
     decompressed tensor never round-trips HBM)
+  * ``quantize_pack``     f32 -> packed uint32 words directly (DESIGN.md §3):
+    the full compression pipeline in ONE pass — the intermediate codes
+    array never exists and the separate jnp bitpack scatter pass (with its
+    global cumsum sync) is gone.
+  * ``unpack_dequantize_reduce``  packed words + acc -> reduced f32, the
+    exact inverse fusion for the receive side of a collective.
+  * ``unpack_dequantize``  the accumulator-free variant for pure
+    decompression (allgather/scatter receive paths).
+
+Fused-pack layout invariant: BLOCK is a multiple of 32, so every block's
+``BLOCK * bw_i`` bit payload is a whole number of uint32 words — block
+boundaries are always word-aligned.  That is what makes single-pass
+packing possible on a block-parallel grid: a tile of TILE_ROWS blocks
+emits exactly ``8 * sum(bw)`` words at a word offset carried across the
+sequential TPU grid in SMEM scratch (no global cumsum, no second pass).
+The byte stream is IDENTICAL to ``bitpack.pack(quantize(x))`` — oracle-
+tested in tests/test_fused_pipeline.py.
 
 TPU tiling notes (DESIGN.md §2): BLOCK=256 keeps each Lorenzo block two
 128-lane vregs wide; TILE_ROWS=8 gives an (8, 256) f32 tile = 8 KiB VMEM in,
@@ -26,9 +43,18 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK = 256
 TILE_ROWS = 8
+# Fused-pack geometry: BLOCK % 32 == 0 makes every block's packed payload a
+# whole number of words (bw words per 32 elements), so one (TILE_ROWS, BLOCK)
+# tile emits at most TILE_ROWS * BLOCK words (all blocks at bw=32).
+WORDS_PER_BIT = BLOCK // 32
+TILE_WORDS = TILE_ROWS * BLOCK
+# Window slack: a tile's clamped read-modify-write window is TILE_WORDS + 1
+# words (the +1 absorbs the always-zero straddle word of the last element).
+PACK_PAD_WORDS = TILE_WORDS + 1
 
 
 def _bitwidth(umax_keepdims: jnp.ndarray) -> jnp.ndarray:
@@ -37,18 +63,22 @@ def _bitwidth(umax_keepdims: jnp.ndarray) -> jnp.ndarray:
                    keepdims=True)
 
 
-def _quantize_kernel(x_ref, recip_ref, codes_ref, bw_ref, anchor_ref):
-    x = x_ref[...]
-    recip = recip_ref[0, 0]
+def _quantize_tile(x, recip):
+    """Shared quantization math: f32 tile -> (zigzag codes, bw col, anchor col)."""
     q = jnp.rint(x * recip).astype(jnp.int32)
     col = jax.lax.broadcasted_iota(jnp.int32, q.shape, 1)
     prev = jnp.where(col == 0, q, jnp.roll(q, 1, axis=1))
     d = q - prev  # first column is 0; absolute value goes out via anchor
     zig = ((d << 1) ^ (d >> 31)).astype(jnp.uint32)
-    codes_ref[...] = zig
     umax = jnp.max(zig, axis=1)  # (TILE_ROWS,)
-    bw_ref[...] = _bitwidth(umax[:, None])
-    anchor_ref[...] = q[:, :1]
+    return zig, _bitwidth(umax[:, None]), q[:, :1]
+
+
+def _quantize_kernel(x_ref, recip_ref, codes_ref, bw_ref, anchor_ref):
+    zig, bw, anchor = _quantize_tile(x_ref[...], recip_ref[0, 0])
+    codes_ref[...] = zig
+    bw_ref[...] = bw
+    anchor_ref[...] = anchor
 
 
 def _dequantize_kernel(codes_ref, anchor_ref, twoeb_ref, x_ref):
@@ -112,6 +142,234 @@ def dequantize(
         out_shape=jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.float32),
         interpret=interpret,
     )(codes, anchor[:, None], twoeb)
+
+
+# ---------------------------------------------------------------------------
+# Fused compression pipeline (DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+
+def _tile_pack_geometry(bw_col):
+    """Per-element word index / shift / width for one tile, tile-local.
+
+    ``bw_col``: (TILE_ROWS, 1) int32.  Returns (word, shift, bwu, words_per
+    _block) where ``word`` indexes into the tile's own word segment (blocks
+    are word-aligned, so the segment starts at word 0 of the tile).
+    """
+    bwf = bw_col[:, 0]
+    words_per_block = bwf * WORDS_PER_BIT
+    local_off = jnp.cumsum(words_per_block) - words_per_block  # exclusive
+    j = jax.lax.broadcasted_iota(jnp.int32, (TILE_ROWS, BLOCK), 1)
+    bitpos = local_off[:, None] * 32 + j * bwf[:, None]
+    word = bitpos >> 5
+    shift = (bitpos & 31).astype(jnp.uint32)
+    bwu = jnp.broadcast_to(bwf[:, None], (TILE_ROWS, BLOCK)).astype(jnp.uint32)
+    return word, shift, bwu, words_per_block
+
+
+def _width_mask(bwu):
+    return jnp.where(
+        bwu == 0,
+        jnp.uint32(0),
+        jnp.uint32(0xFFFFFFFF) >> jnp.minimum(32 - bwu, jnp.uint32(31)),
+    )
+
+
+def _quantize_pack_kernel(x_ref, recip_ref, packed_ref, bw_ref, anchor_ref,
+                          off_ref):
+    """quantize + zigzag + bitpack in one pass over the tile.
+
+    The word offset of the current tile is carried in SMEM scratch across
+    the sequential grid; the packed output block has a constant index map,
+    so it stays resident while every tile ORs its word-aligned segment in
+    (disjoint bit ranges => OR == ADD, same argument as bitpack.pack).
+    Overflow past the true capacity lands in the PACK_PAD_WORDS dump tail,
+    which the wrapper slices off — never silent corruption of valid words.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        packed_ref[...] = jnp.zeros_like(packed_ref[...])
+        off_ref[0] = 0
+
+    zig, bw, anchor = _quantize_tile(x_ref[...], recip_ref[0, 0])
+    bw_ref[...] = bw
+    anchor_ref[...] = anchor
+
+    word, shift, bwu, words_per_block = _tile_pack_geometry(bw)
+    u = zig & _width_mask(bwu)
+    lo = u << shift
+    hi = jnp.where(shift == 0, jnp.uint32(0),
+                   u >> jnp.minimum(32 - shift, jnp.uint32(31)))
+    # Tile-local dense segment: scatter-add over <= TILE_WORDS words.  The
+    # +1 slot absorbs the last element's always-zero straddle word.
+    fw = word.reshape(-1)
+    local = jnp.zeros((PACK_PAD_WORDS,), jnp.uint32)
+    local = local.at[fw].add(lo.reshape(-1))
+    local = local.at[fw + 1].add(hi.reshape(-1))
+
+    start = off_ref[0]
+    capacity = packed_ref.shape[0] - PACK_PAD_WORDS
+    s = jnp.minimum(start, capacity)  # overflowing tiles write the dump tail
+    window = packed_ref[pl.ds(s, PACK_PAD_WORDS)]
+    packed_ref[pl.ds(s, PACK_PAD_WORDS)] = window | local
+    off_ref[0] = start + jnp.sum(words_per_block)
+
+
+def _unpack_tile(packed_ref, bw, off_ref):
+    """Gather + unpack one tile's word-aligned segment from the resident
+    packed window, advancing the SMEM word-offset carry.  Returns the
+    tile's zigzag codes (TILE_ROWS, BLOCK) without materializing them in
+    HBM."""
+    word, shift, bwu, words_per_block = _tile_pack_geometry(bw)
+    start = off_ref[0]
+    capacity = packed_ref.shape[0] - PACK_PAD_WORDS
+    s = jnp.minimum(start, capacity)
+    window = packed_ref[pl.ds(s, PACK_PAD_WORDS)]
+    lo = window[word] >> shift
+    hi = jnp.where(shift == 0, jnp.uint32(0),
+                   window[word + 1] << jnp.minimum(32 - shift, jnp.uint32(31)))
+    off_ref[0] = start + jnp.sum(words_per_block)
+    return (lo | hi) & _width_mask(bwu)
+
+
+def _reconstruct(u, anchor_col, twoeb):
+    d = (u >> 1).astype(jnp.int32) ^ (-(u & 1).astype(jnp.int32))
+    q = anchor_col + jnp.cumsum(d, axis=1)
+    return q.astype(jnp.float32) * twoeb
+
+
+def _unpack_dequantize_reduce_kernel(packed_ref, bw_ref, anchor_ref, twoeb_ref,
+                                     acc_ref, out_ref, off_ref):
+    """Inverse fusion: packed words + acc -> acc + dequantize(unpack(words)).
+
+    Same SMEM word-offset carry as the pack kernel; the tile gathers its
+    word-aligned segment from a resident window, so the uint32 codes array
+    never materializes in HBM on the receive side either.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        off_ref[0] = 0
+
+    u = _unpack_tile(packed_ref, bw_ref[...], off_ref)
+    out_ref[...] = acc_ref[...] + _reconstruct(u, anchor_ref[...],
+                                               twoeb_ref[0, 0])
+
+
+def _unpack_dequantize_kernel(packed_ref, bw_ref, anchor_ref, twoeb_ref,
+                              out_ref, off_ref):
+    """Pure fused decompress (no accumulator): the allgather/scatter receive
+    path, which would otherwise pay a zero-accumulator materialization."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        off_ref[0] = 0
+
+    u = _unpack_tile(packed_ref, bw_ref[...], off_ref)
+    out_ref[...] = _reconstruct(u, anchor_ref[...], twoeb_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("capacity_words", "interpret"))
+def quantize_pack(
+    x2d: jnp.ndarray, eb: jnp.ndarray, capacity_words: int, *,
+    interpret: bool = True,
+):
+    """f32 (n_blocks, BLOCK) -> (packed uint32[capacity_words], bw, anchor).
+
+    Single pallas_call; byte stream identical to
+    ``bitpack.pack(*quantize(x2d, eb))`` on the first capacity_words words.
+    n_blocks must be a multiple of TILE_ROWS (ops.py pads).
+    """
+    n_blocks = x2d.shape[0]
+    recip = (1.0 / (2.0 * eb)).reshape(1, 1).astype(jnp.float32)
+    cap_pad = capacity_words + PACK_PAD_WORDS
+    packed, bw, anchor = pl.pallas_call(
+        _quantize_pack_kernel,
+        grid=(n_blocks // TILE_ROWS,),
+        in_specs=[_row_spec(BLOCK), _scalar_spec()],
+        out_specs=[
+            pl.BlockSpec((cap_pad,), lambda i: (0,)),
+            _row_spec(1),
+            _row_spec(1),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cap_pad,), jnp.uint32),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(x2d, recip)
+    return packed[:capacity_words], bw[:, 0], anchor[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def unpack_dequantize(
+    packed: jnp.ndarray,
+    bitwidth: jnp.ndarray,
+    anchor: jnp.ndarray,
+    eb: jnp.ndarray,
+    *,
+    interpret: bool = True,
+):
+    """Fused unpack + dequantize: packed stream -> f32 (n_blocks, BLOCK)."""
+    n_blocks = bitwidth.shape[0]
+    twoeb = (2.0 * eb).reshape(1, 1).astype(jnp.float32)
+    cap_pad = packed.shape[0] + PACK_PAD_WORDS
+    packed_pad = jnp.zeros((cap_pad,), jnp.uint32).at[: packed.shape[0]].set(packed)
+    return pl.pallas_call(
+        _unpack_dequantize_kernel,
+        grid=(n_blocks // TILE_ROWS,),
+        in_specs=[
+            pl.BlockSpec((cap_pad,), lambda i: (0,)),
+            _row_spec(1),
+            _row_spec(1),
+            _scalar_spec(),
+        ],
+        out_specs=_row_spec(BLOCK),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(packed_pad, bitwidth[:, None], anchor[:, None], twoeb)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def unpack_dequantize_reduce(
+    packed: jnp.ndarray,
+    bitwidth: jnp.ndarray,
+    anchor: jnp.ndarray,
+    eb: jnp.ndarray,
+    acc: jnp.ndarray,
+    *,
+    interpret: bool = True,
+):
+    """Fused unpack + dequantize + reduce: acc + decompress(packed stream).
+
+    ``packed``: uint32[capacity_words]; ``acc``: f32 (n_blocks, BLOCK).
+    """
+    n_blocks = acc.shape[0]
+    twoeb = (2.0 * eb).reshape(1, 1).astype(jnp.float32)
+    cap_pad = packed.shape[0] + PACK_PAD_WORDS
+    packed_pad = jnp.zeros((cap_pad,), jnp.uint32).at[: packed.shape[0]].set(packed)
+    return pl.pallas_call(
+        _unpack_dequantize_reduce_kernel,
+        grid=(n_blocks // TILE_ROWS,),
+        in_specs=[
+            pl.BlockSpec((cap_pad,), lambda i: (0,)),
+            _row_spec(1),
+            _row_spec(1),
+            _scalar_spec(),
+            _row_spec(BLOCK),
+        ],
+        out_specs=_row_spec(BLOCK),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(packed_pad, bitwidth[:, None], anchor[:, None], twoeb, acc)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -53,3 +53,36 @@ def dequantize_reduce(
 ) -> jnp.ndarray:
     eb = jnp.asarray(eb, jnp.float32)
     return lorenzo.dequantize_reduce(codes, anchor, eb, acc, interpret=_interpret())
+
+
+def quantize_pack(x2d: jnp.ndarray, eb, capacity_words: int):
+    """Fused f32 -> packed wire words (single pallas_call, no codes array).
+
+    -> (packed uint32 (capacity_words,), bw int32 (nb,), anchor int32 (nb,)).
+    Byte-identical to ``bitpack.pack(*quantize(x2d, eb)[:2], capacity)``.
+    """
+    eb = jnp.asarray(eb, jnp.float32)
+    return lorenzo.quantize_pack(
+        x2d, eb, int(capacity_words), interpret=_interpret()
+    )
+
+
+def unpack_dequantize(
+    packed: jnp.ndarray, bitwidth: jnp.ndarray, anchor: jnp.ndarray, eb
+) -> jnp.ndarray:
+    """Fused packed words -> decompressed f32 (nb, BLOCK), no accumulator."""
+    eb = jnp.asarray(eb, jnp.float32)
+    return lorenzo.unpack_dequantize(
+        packed, bitwidth, anchor, eb, interpret=_interpret()
+    )
+
+
+def unpack_dequantize_reduce(
+    packed: jnp.ndarray, bitwidth: jnp.ndarray, anchor: jnp.ndarray, eb,
+    acc2d: jnp.ndarray,
+) -> jnp.ndarray:
+    """Fused packed words + acc -> acc + decompressed f32 (nb, BLOCK)."""
+    eb = jnp.asarray(eb, jnp.float32)
+    return lorenzo.unpack_dequantize_reduce(
+        packed, bitwidth, anchor, eb, acc2d, interpret=_interpret()
+    )

@@ -31,6 +31,8 @@ __all__ = [
     "quantize_ref",
     "dequantize_ref",
     "dequantize_reduce_ref",
+    "quantize_pack_ref",
+    "unpack_dequantize_reduce_ref",
     "bitwidth_of",
 ]
 
@@ -72,6 +74,33 @@ def dequantize_reduce_ref(
 ) -> jnp.ndarray:
     """Fused decompress + elementwise reduce (paper's on-device reduction)."""
     return acc + dequantize_ref(codes, anchor, eb)
+
+
+def quantize_pack_ref(x2d: jnp.ndarray, eb: jnp.ndarray, capacity_words: int):
+    """Oracle for the fused quantize_pack kernel: the unfused composition.
+
+    -> (packed uint32 (capacity_words,), bw (nb,), anchor (nb,)); the fused
+    kernel must reproduce this byte stream exactly.
+    """
+    from repro.core import bitpack
+
+    codes, bw, anchor = quantize_ref(x2d, eb)
+    packed, _ = bitpack.pack(codes, bw, capacity_words)
+    return packed, bw, anchor
+
+
+def unpack_dequantize_reduce_ref(
+    packed: jnp.ndarray,
+    bitwidth: jnp.ndarray,
+    anchor: jnp.ndarray,
+    eb: jnp.ndarray,
+    acc: jnp.ndarray,
+) -> jnp.ndarray:
+    """Oracle for the fused receive-side kernel: unpack then dequant+reduce."""
+    from repro.core import bitpack
+
+    codes = bitpack.unpack(packed, bitwidth, acc.shape[1])
+    return dequantize_reduce_ref(codes, anchor, eb, acc)
 
 
 def attention_ref(q, k, v, *, causal=True, window=0):

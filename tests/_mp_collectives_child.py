@@ -102,6 +102,48 @@ assert err <= 1e-4 * 1.001 + np.abs(base[0]).max() * 2e-7, err
 assert np.abs(out - out[0:1]).max() == 0.0
 print(f"OK broadcast err={err:.2e}")
 
+# pipelined (chunked double-buffered) ring schedules: bitwise-identical to
+# the sequential schedule when the sequential chunking is piece-aligned
+# (DESIGN.md §4), and within budget always.
+from repro.kernels import ops as _ops
+
+D_ALIGNED = N * 2 * _ops.BLOCK * _ops.TILE_ROWS  # chunk = 2 whole-tile pieces
+base_al = np.cumsum(rng.normal(0, 0.01, (N, D_ALIGNED)), axis=1).astype(np.float32)
+outs = {}
+for pc in (1, 2):
+    cfg_p = GZConfig(eb=1e-4, algo="ring", capacity_factor=1.2, pipeline_chunks=pc)
+    f = shmap(
+        lambda x, c=cfg_p: gz_allreduce(x[0], "x", c, return_info=True)[0][None],
+        (P("x", None),), P("x", None),
+    )
+    outs[pc] = np.asarray(f(base_al))
+assert np.array_equal(outs[1], outs[2]), "pipelined ring != sequential (aligned)"
+err = np.abs(outs[2] - base_al.sum(axis=0)[None]).max()
+assert err <= 1e-4 * 1.05 + np.abs(base_al.sum(axis=0)).max() * 1e-6, err
+print(f"OK allreduce_ring_pipelined bitwise==sequential, err={err:.2e}")
+
+cfg_p = GZConfig(eb=1e-4, algo="ring", capacity_factor=1.2, pipeline_chunks=2)
+f = shmap(lambda x: gz_reduce_scatter(x[0], "x", cfg_p), (P("x", None),), P("x"))
+out = np.asarray(f(base)).reshape(N, D // N)
+err = np.abs(out - exact_sum.reshape(N, D // N)).max()
+assert err <= 1e-4 * 1.05 + np.abs(exact_sum).max() * 1e-6, err
+print(f"OK reduce_scatter_pipelined err={err:.2e}")
+
+f = shmap(
+    lambda x: gz_allgather(x[0], "x", cfg_p)[None], (P("x", None),), P("x", None)
+)
+out = np.asarray(f(chunks)).reshape(N, N * (D // N))
+err = np.abs(out - chunks.reshape(-1)[None]).max()
+assert err <= 1e-4 * 1.001 + np.abs(chunks).max() * 2e-7, err
+assert np.abs(out - out[0:1]).max() == 0.0
+print(f"OK allgather_pipelined err={err:.2e}")
+
+f = shmap(lambda x: gz_scatter(x[0], "x", cfg_p), (P("x", None),), P("x"))
+out = np.asarray(f(xin)).reshape(N, D)
+err = np.abs(out - full.reshape(N, D)).max()
+assert err <= 1e-4 * 1.001 + np.abs(full).max() * 2e-7, err
+print(f"OK scatter_pipelined err={err:.2e}")
+
 # all_to_all: compressed vs exact (one lossy hop)
 from repro.core.collectives import gz_all_to_all
 x_a2a = base[:, : N * 512].reshape(N, N * 512).copy()

@@ -2,6 +2,10 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e .[dev])"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core.compressor import ErrorBoundedLorenzo, FixedRate

@@ -1,5 +1,10 @@
 """Property tests: error-budget allocation is a sound end-to-end bound."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e .[dev])"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import error_budget, simulator
