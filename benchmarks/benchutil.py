@@ -1,7 +1,26 @@
 """Shared helpers for the benchmark suite."""
 from __future__ import annotations
 
+import time
+
 import numpy as np
+
+
+def time_it(fn, reps: int = 3) -> float:
+    """Min seconds per call after one warmup (jit cache + async drain).
+
+    Min-of-reps, not mean: scheduler noise only ever ADDS time, so the
+    minimum is the stable estimator a cross-run ratio check can trust.
+    """
+    import jax
+
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def noisy_images(n: int, h: int, w: int, seed: int = 0) -> list:

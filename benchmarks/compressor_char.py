@@ -22,6 +22,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from benchmarks.benchutil import time_it as _time_it
+
 from repro.core import cost_model as cm
 from repro.core.compressor import ErrorBoundedLorenzo
 
@@ -34,16 +36,12 @@ FUSED_SIZES_MB = [1, 4]
 BASELINE_PATH = pathlib.Path(__file__).parent / "BENCH_compress.json"
 
 
-def _time_it(fn, reps=3):
-    jax.block_until_ready(fn())  # warm the jit cache, drain async dispatch
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(fn())
-    return (time.perf_counter() - t0) / reps
+def run_fused_vs_unfused(csv_rows: list, record_baseline: bool = True) -> dict:
+    """Fused single-pass pipeline vs the two-pass composition.
 
-
-def run_fused_vs_unfused(csv_rows: list) -> dict:
-    """Fused single-pass pipeline vs the two-pass composition."""
+    ``record_baseline=False`` measures without overwriting the committed
+    BENCH_compress.json (the CI regression check compares against it).
+    """
     rng = np.random.default_rng(1)
     record = {}
     for mb in FUSED_SIZES_MB:
@@ -54,8 +52,8 @@ def run_fused_vs_unfused(csv_rows: list) -> dict:
         for fused in (False, True):
             comp = ErrorBoundedLorenzo(capacity_factor=1.1, fused=fused)
             c = comp.compress(x, 1e-4)
-            t_cmp = _time_it(lambda: comp.compress(x, 1e-4).packed)
-            t_red = _time_it(lambda: comp.decompress_reduce(c, acc))
+            t_cmp = _time_it(lambda: comp.compress(x, 1e-4).packed, reps=5)
+            t_red = _time_it(lambda: comp.decompress_reduce(c, acc), reps=5)
             key = "fused" if fused else "unfused"
             results[key] = {"compress_us": t_cmp * 1e6,
                             "decompress_reduce_us": t_red * 1e6}
@@ -72,17 +70,18 @@ def run_fused_vs_unfused(csv_rows: list) -> dict:
                 f"decred_speedup={speed_r:.2f}x",
             )
         )
-    BASELINE_PATH.write_text(
-        json.dumps(
-            {
-                "backend": jax.default_backend(),
-                "note": "CPU interpret-mode; op-count/memory-traffic proxy",
-                "fused_vs_unfused": record,
-            },
-            indent=2,
+    if record_baseline:
+        BASELINE_PATH.write_text(
+            json.dumps(
+                {
+                    "backend": jax.default_backend(),
+                    "note": "CPU interpret-mode; op-count/memory-traffic proxy",
+                    "fused_vs_unfused": record,
+                },
+                indent=2,
+            )
+            + "\n"
         )
-        + "\n"
-    )
     return record
 
 

@@ -1,0 +1,111 @@
+"""Per-hop microbenchmark: single-pass fused ring hop vs the PR 1
+two-kernel composition (ISSUE 2 acceptance).
+
+Two metrics per payload size:
+
+  * ``pallas_calls`` — kernel invocations per intermediate ring hop,
+    counted structurally in the jaxpr (2 for decompress_reduce + compress,
+    1 for the fused ``decompress_reduce_compress``).  This is the number
+    that matters on hardware: each invocation is a dispatch + pipeline
+    fill AND an HBM round-trip boundary for the f32 intermediate.
+  * ``us`` — CPU interpret-mode wall-clock (op-count / memory-traffic
+    proxy, not TPU time; same caveat as BENCH_compress.json).
+
+Records benchmarks/BENCH_hop.json so future PRs have a per-hop perf
+trajectory, and ASSERTS the structural 2 -> 1 kernel-count win (that part
+is exact, not a timing).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.benchutil import time_it as _time_it
+from repro.core.compressor import ErrorBoundedLorenzo
+
+SIZES_MB = [1, 4]
+BASELINE_PATH = pathlib.Path(__file__).parent / "BENCH_hop.json"
+
+
+def count_pallas_calls(fn, *args) -> int:
+    """Structural kernel-invocation count: pallas_call eqns in the jaxpr,
+    recursing through pjit/scan/cond sub-jaxprs."""
+    def _subjaxprs(v):
+        if isinstance(v, (tuple, list)):
+            for item in v:
+                yield from _subjaxprs(item)
+        elif hasattr(v, "jaxpr"):  # ClosedJaxpr
+            yield v.jaxpr
+        elif hasattr(v, "eqns"):  # raw Jaxpr
+            yield v
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                for sub in _subjaxprs(v):
+                    n += walk(sub)
+        return n
+
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def run(csv_rows: list, record_baseline: bool = True) -> dict:
+    rng = np.random.default_rng(2)
+    comp = ErrorBoundedLorenzo(capacity_factor=1.1, fused=True)
+    eb = 1e-4
+    record = {}
+    for mb in SIZES_MB:
+        n = int(mb * 1e6 / 4)
+        x = jnp.asarray(np.cumsum(rng.normal(0, 0.01, n)).astype(np.float32))
+        acc = jnp.asarray(rng.normal(0, 1, n).astype(np.float32))
+        c = comp.compress(x, eb)
+
+        def two_kernel_hop(c=c, acc=acc):
+            updated = comp.decompress_reduce(c, acc)
+            return comp.compress(updated, c.eb).packed
+
+        def fused_hop(c=c, acc=acc):
+            return comp.decompress_reduce_compress(c, acc)[0].packed
+
+        calls_two = count_pallas_calls(two_kernel_hop)
+        calls_fused = count_pallas_calls(fused_hop)
+        # The structural contract — exact, independent of timing noise.
+        assert calls_two == 2, calls_two
+        assert calls_fused == 1, calls_fused
+
+        t_two = _time_it(two_kernel_hop, reps=5)
+        t_fused = _time_it(fused_hop, reps=5)
+        record[f"{mb}MB"] = {
+            "two_kernel": {"us": t_two * 1e6, "pallas_calls": calls_two},
+            "fused": {"us": t_fused * 1e6, "pallas_calls": calls_fused},
+        }
+        csv_rows.append(
+            (
+                f"hop_fused_{mb}MB",
+                t_fused * 1e6,
+                f"two_kernel_us={t_two*1e6:.0f};"
+                f"kernels_per_hop={calls_fused}(was {calls_two});"
+                f"speedup={t_two/t_fused:.2f}x",
+            )
+        )
+    if record_baseline:
+        BASELINE_PATH.write_text(
+            json.dumps(
+                {
+                    "backend": jax.default_backend(),
+                    "note": "CPU interpret-mode; pallas_calls is the "
+                            "structural kernel count per intermediate ring hop",
+                    "hop": record,
+                },
+                indent=2,
+            )
+            + "\n"
+        )
+    return record

@@ -1,0 +1,104 @@
+"""CI perf-regression check: rerun the fused-vs-unfused and per-hop
+microbenchmarks and compare against the committed baselines
+(benchmarks/BENCH_compress.json, benchmarks/BENCH_hop.json).
+
+Absolute wall-clock is machine-specific (the baselines were recorded on a
+dev box, CI runs elsewhere), so the comparison is on the MACHINE-
+INDEPENDENT fused/unfused time ratio per metric: host speed cancels, and
+a ratio that worsens by more than THRESHOLD (default 20%) means the fused
+path lost ground structurally (op count / memory traffic), not that the
+runner is slow.  Regressions are reported as GitHub ``::warning::``
+annotations (report-only by default; ``--strict`` exits nonzero).  The
+structural per-hop kernel count (2 -> 1) cannot be timing noise and is
+always fatal: ``hop_bench.run`` asserts it before returning.
+
+Usage: PYTHONPATH=src python -m benchmarks.regression_check [--strict]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+THRESHOLD = 0.20
+
+
+def _ratios(record):
+    """{size: {fused metric: fused_us / reference_us}} for a benchmark
+    record shaped {size: {"fused": {..._us}, "unfused"|"two_kernel": {...}}}.
+    """
+    out = {}
+    for size, rec in record.items():
+        ref_key = "unfused" if "unfused" in rec else "two_kernel"
+        if "fused" not in rec or ref_key not in rec:
+            continue
+        for metric, fused_us in rec["fused"].items():
+            if not metric.endswith("us"):
+                continue
+            ref_us = float(rec[ref_key].get(metric, 0.0))
+            if ref_us > 0:
+                out[f"{size}/{metric}"] = float(fused_us) / ref_us
+    return out
+
+
+def _compare(name, baseline, current, threshold):
+    base, cur = _ratios(baseline), _ratios(current)
+    regressions = []
+    for path, base_ratio in sorted(base.items()):
+        if path not in cur:
+            # A silently vanished metric must not read as "no regression".
+            print(f"::warning::{name}:{path}: baseline metric missing from "
+                  f"current run (renamed or dropped?)")
+            continue
+        rel = cur[path] / base_ratio
+        status = "REGRESSION" if rel > 1 + threshold else "ok"
+        print(f"{name}:{path}: fused/ref ratio baseline={base_ratio:.2f} "
+              f"current={cur[path]:.2f} ({rel:.2f}x) {status}")
+        if rel > 1 + threshold:
+            regressions.append((f"{name}:{path}", rel))
+    return regressions
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on ratio regressions (default: report)")
+    ap.add_argument("--threshold", type=float, default=THRESHOLD)
+    args = ap.parse_args()
+
+    here = pathlib.Path(__file__).parent
+    from benchmarks import compressor_char, hop_bench
+
+    regressions = []
+
+    compress_base = json.loads((here / "BENCH_compress.json").read_text())
+    compress_now = compressor_char.run_fused_vs_unfused(
+        [], record_baseline=False
+    )
+    regressions += _compare(
+        "compress", compress_base["fused_vs_unfused"], compress_now,
+        args.threshold,
+    )
+
+    # run() asserts the structural 1-kernel-per-fused-hop contract — that
+    # check must fire even when no baseline exists to compare against.
+    hop_now = hop_bench.run([], record_baseline=False)
+    hop_path = here / "BENCH_hop.json"
+    if hop_path.exists():
+        hop_base = json.loads(hop_path.read_text())
+        regressions += _compare("hop", hop_base["hop"], hop_now, args.threshold)
+
+    for path, rel in regressions:
+        print(f"::warning::fused-path ratio regression >"
+              f"{args.threshold:.0%} at {path}: {rel:.2f}x baseline "
+              f"(interpret-mode wall-clock is noisy — treat as indicative; "
+              f"the kernel-count assert above is the authoritative signal)")
+    if regressions and args.strict:
+        sys.exit(1)
+    print(f"{len(regressions)} regression(s) above "
+          f"{args.threshold:.0%} threshold")
+
+
+if __name__ == "__main__":
+    main()

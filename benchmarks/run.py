@@ -12,6 +12,7 @@ from benchmarks import (
     allreduce_bench,
     breakdown,
     compressor_char,
+    hop_bench,
     image_stacking,
     moe_a2a_ablation,
     scatter_bench,
@@ -26,6 +27,7 @@ MODULES = [
     ("table1_compression_ratio", table1_ratio),
     ("table2_fig13_image_stacking", image_stacking),
     ("beyond_moe_a2a_ablation", moe_a2a_ablation),
+    ("issue2_fused_hop", hop_bench),
 ]
 
 

@@ -81,6 +81,17 @@ class GZConfig:
     ``fused`` routes compression through the single-pass Pallas pipeline
     (kernels/lorenzo.py quantize_pack); False keeps the two-pass oracle
     composition.  Wire bytes are identical either way.
+
+    ``fused_hop`` runs every intermediate ring/redoub reduce hop as ONE
+    ``unpack_reduce_repack`` kernel (DESIGN.md §3.1): the hop's received
+    piece is decompressed, reduced and re-compressed into the *next* hop's
+    wire stream in a single pass, so the updated f32 chunk never
+    round-trips HBM and each hop pays one kernel dispatch instead of two.
+    False keeps the PR 1 two-kernel hop schedule (decompress_reduce then a
+    separate compress).  Wire streams and results are bitwise identical
+    either way; only the kernel count and the cost model's pipeline-depth
+    planning differ (``t_hop_fused`` sees one ``cmp_overhead_us``, so
+    "auto" picks deeper pipelines when the fused hop is on).
     """
 
     eb: float = 1e-4
@@ -89,6 +100,7 @@ class GZConfig:
     worst_case_budget: bool = True
     pipeline_chunks: int = 1
     fused: bool = True
+    fused_hop: bool = True
 
     def compressor(self) -> ErrorBoundedLorenzo:
         return ErrorBoundedLorenzo(
@@ -112,6 +124,18 @@ def _ring_perm(n: int):
     return [(i, (i + 1) % n) for i in range(n)]
 
 
+def _or_across(ovf, axis_name):
+    """OR a per-rank overflow flag across the axis (one scalar psum).
+
+    Every collective's per-rank result embeds wire streams compressed on
+    OTHER ranks (ring hops, tree forwards, the scatter/broadcast root), so
+    a local flag alone can be silently False on a rank whose received data
+    was truncated elsewhere.  ``return_info=True`` therefore reports the
+    global OR: "did any piece of any hop anywhere overflow".
+    """
+    return lax.psum(ovf.astype(jnp.int32), axis_name) > 0
+
+
 def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
 
@@ -127,6 +151,13 @@ def _allreduce_redoub(x, axis_name, cfg: GZConfig):
     Per step: compress local running sum, exchange with the XOR partner,
     fused decompress+reduce into the local sum.  Full-message compression
     keeps the compressor saturated — the paper's core scalability insight.
+
+    With ``cfg.fused_hop`` every intermediate step runs as a single
+    ``decompress_reduce_compress`` pass: the received partner stream and
+    the local sum go in, the *next* step's outgoing stream comes out
+    (plus the updated f32 carry, which redoub genuinely needs); the last
+    step emits the plain f32 accumulator.  log2(N)+1 kernels instead of
+    2·log2(N), bitwise-identical results.
     """
     n = _axis_size(axis_name)
     comp = cfg.compressor()
@@ -136,6 +167,21 @@ def _allreduce_redoub(x, axis_name, cfg: GZConfig):
     steps = int(math.log2(n))
     acc = x
     overflow = jnp.zeros((), jnp.bool_)
+    if cfg.fused_hop:
+        c = comp.compress(acc, eb_stage)
+        overflow |= c.overflowed()
+        for k in range(steps):
+            dist = 1 << k
+            perm = [(i, i ^ dist) for i in range(n)]
+            c_recv = _ppermute(c, axis_name, perm)
+            if k < steps - 1:
+                c, acc = comp.decompress_reduce_compress(
+                    c_recv, acc, eb_stage, return_updated=True
+                )
+                overflow |= c.overflowed()
+            else:  # last hop: emit the plain f32 accumulator
+                acc = comp.decompress_reduce(c_recv, acc)
+        return acc, overflow
     for k in range(steps):
         dist = 1 << k
         perm = [(i, i ^ dist) for i in range(n)]
@@ -166,6 +212,14 @@ def _reduce_scatter_ring(x, axis_name, cfg: GZConfig, eb_stage, *, owner_offset=
     index (r + 1 + owner_offset) % N of its local acc.  (N-1) compressions
     of size D/N each — the regime where the paper shows compressor
     under-utilization.
+
+    Single-pass hop schedule (``cfg.fused_hop``): the chunk a hop reduces
+    into IS the chunk the next hop sends, so each intermediate hop runs ONE
+    ``decompress_reduce_compress`` kernel that turns the received stream +
+    the local chunk directly into the next outgoing stream — the updated
+    f32 never lands in ``acc`` (nothing ever reads it back; callers only
+    read the final chunk).  The LAST hop emits the plain f32 accumulator.
+    N kernels total instead of 2(N-1), byte-identical wire streams.
     """
     n = _axis_size(axis_name)
     comp = cfg.compressor()
@@ -174,6 +228,25 @@ def _reduce_scatter_ring(x, axis_name, cfg: GZConfig, eb_stage, *, owner_offset=
     perm = _ring_perm(n)
     overflow = jnp.zeros((), jnp.bool_)
     t = owner_offset
+
+    if cfg.fused_hop:
+        c = comp.compress(_chunk(acc, (r + t) % n, chunk_n), eb_stage)
+        overflow |= c.overflowed()
+
+        def body(s, carry):
+            c, overflow = carry
+            c_recv = _ppermute(c, axis_name, perm)
+            recv_idx = (r - s - 1 + t) % n
+            c_next, _ = comp.decompress_reduce_compress(
+                c_recv, _chunk(acc, recv_idx, chunk_n), eb_stage
+            )
+            return c_next, overflow | c_next.overflowed()
+
+        c, overflow = lax.fori_loop(0, n - 2, body, (c, overflow))
+        c_recv = _ppermute(c, axis_name, perm)
+        recv_idx = (r - (n - 2) - 1 + t) % n
+        updated = comp.decompress_reduce(c_recv, _chunk(acc, recv_idx, chunk_n))
+        return _set_chunk(acc, updated, recv_idx, chunk_n), chunk_n, overflow
 
     def body(s, carry):
         acc, overflow = carry
@@ -229,22 +302,43 @@ def _pad_for_pipeline(x, n, p):
 
 
 def plan_ring_pipeline_chunks(n_elems: int, n_ranks: int, *, ratio: float = 20.0,
-                              hw=None) -> int:
+                              hw=None, fused_hop: bool = True) -> int:
     """Cost-model pipeline depth for a ring over `n_elems` f32 elements,
     capped at what the payload can actually fill with whole-tile pieces.
 
     The one planner every entry point (gz_allreduce auto, grad_sync
     routing) shares, so identical messages get identical schedules.
+    ``fused_hop`` must match the schedule the collective will actually run
+    (GZConfig.fused_hop): the single-pass hop halves the per-piece kernel
+    overhead, so its optimum is deeper.
     """
     from repro.core import cost_model as cm
 
     chunks = cm.best_pipeline_chunks(
-        n_elems * 4, n_ranks, ratio, hw if hw is not None else cm.TPU_V5E
+        n_elems * 4, n_ranks, ratio, hw if hw is not None else cm.TPU_V5E,
+        fused_hop=fused_hop,
     )
     fill = n_elems // (n_ranks * PIECE_QUANTUM)
     while chunks > 1 and chunks > fill:
         chunks //= 2
     return chunks
+
+
+def _stack_trees(trees):
+    """Stack a list of identical pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _index_tree(tree, i):
+    return jax.tree.map(
+        lambda a: lax.dynamic_index_in_dim(a, i, 0, keepdims=False), tree
+    )
+
+
+def _update_tree(tree, val, i):
+    return jax.tree.map(
+        lambda a, v: lax.dynamic_update_index_in_dim(a, v, i, 0), tree, val
+    )
 
 
 def _reduce_scatter_ring_pipelined(x, axis_name, cfg: GZConfig, eb_stage, *,
@@ -255,6 +349,15 @@ def _reduce_scatter_ring_pipelined(x, axis_name, cfg: GZConfig, eb_stage, *,
     (every element is still requantized once per hop); only the schedule
     changes: compress(piece t+1) runs concurrently with ppermute(piece t).
     Returns (acc, chunk_n, overflow) with the same ownership convention.
+
+    With ``cfg.fused_hop`` the schedule keeps the same overlap shape but
+    each intermediate hop is ONE kernel: the fused hop that consumed piece
+    p at step s already produced the stream piece p sends at step s+1, so
+    the body only issues the next piece's ppermute (independent — its
+    stream was produced P-1 hops ago) alongside the current hop's fused
+    kernel.  The pending streams ride the loop carry as a stacked
+    ``Compressed`` (leading axis = piece); the last step's P hops drain to
+    the plain f32 accumulator.
     """
     n = _axis_size(axis_name)
     p_chunks = cfg.pipeline_chunks
@@ -265,6 +368,52 @@ def _reduce_scatter_ring_pipelined(x, axis_name, cfg: GZConfig, eb_stage, *,
     perm = _ring_perm(n)
     t0 = owner_offset
     T = (n - 1) * p_chunks
+
+    if cfg.fused_hop:
+        # Pipeline fill: step 0's send chunk, compressed as P pieces.
+        send0 = (r + t0) % n
+        overflow = jnp.zeros((), jnp.bool_)
+        pend = []
+        for p in range(p_chunks):
+            c = comp.compress(_piece(acc, send0, p, chunk_n, piece_n), eb_stage)
+            overflow |= c.overflowed()
+            pend.append(c)
+        pend = _stack_trees(pend)
+        c_fly = _ppermute(_index_tree(pend, 0), axis_name, perm)
+
+        def body(u, carry):
+            pend, c_fly, overflow = carry
+            # Wire the NEXT hop's stream while this hop's fused kernel
+            # runs: pend[(u+1) % P] was produced by hop u+1-P (or the
+            # fill), so the ppermute has no dependency on this hop.
+            c_fly_next = _ppermute(
+                _index_tree(pend, (u + 1) % p_chunks), axis_name, perm
+            )
+            s, p = u // p_chunks, u % p_chunks
+            recv_idx = (r - s - 1 + t0) % n
+            c_next, _ = comp.decompress_reduce_compress(
+                c_fly, _piece(acc, recv_idx, p, chunk_n, piece_n), eb_stage
+            )
+            pend = _update_tree(pend, c_next, p)
+            return pend, c_fly_next, overflow | c_next.overflowed()
+
+        # Fused hops cover steps 0..n-3; the last step drains below.
+        pend, c_fly, overflow = lax.fori_loop(
+            0, T - p_chunks, body, (pend, c_fly, overflow)
+        )
+        recv_last = (r - (n - 2) - 1 + t0) % n
+        for p in range(p_chunks):
+            if p + 1 < p_chunks:
+                c_fly_next = _ppermute(
+                    _index_tree(pend, p + 1), axis_name, perm
+                )
+            updated = comp.decompress_reduce(
+                c_fly, _piece(acc, recv_last, p, chunk_n, piece_n)
+            )
+            acc = _set_piece(acc, updated, recv_last, p, chunk_n, piece_n)
+            if p + 1 < p_chunks:
+                c_fly = c_fly_next
+        return acc, chunk_n, overflow
 
     def send_piece(acc, t):
         s, p = t // p_chunks, t % p_chunks
@@ -527,12 +676,15 @@ def gz_allreduce(
     if algo == "auto":
         from repro.core.selector import select_allreduce_plan
 
-        algo, _ = select_allreduce_plan(x.size * 4, n)
+        algo, _ = select_allreduce_plan(x.size * 4, n, fused_hop=cfg.fused_hop)
         # Plan the ring pipeline depth only when the caller left the knob
         # at its default — an explicit pipeline_chunks is always honored.
         if algo == "ring" and cfg.pipeline_chunks == 1:
             cfg = dataclasses.replace(
-                cfg, pipeline_chunks=plan_ring_pipeline_chunks(x.size, n)
+                cfg,
+                pipeline_chunks=plan_ring_pipeline_chunks(
+                    x.size, n, fused_hop=cfg.fused_hop
+                ),
             )
     shape, dtype = x.shape, x.dtype
     flat = x.reshape(-1).astype(jnp.float32)
@@ -545,7 +697,7 @@ def gz_allreduce(
     else:
         raise ValueError(f"unknown allreduce algo {algo!r}")
     out = out.reshape(shape).astype(dtype)
-    return (out, ovf) if return_info else out
+    return (out, _or_across(ovf, axis_name)) if return_info else out
 
 
 # ---------------------------------------------------------------------------
@@ -594,7 +746,7 @@ def gz_reduce_scatter(
             flat, axis_name, cfg, eb_stage, owner_offset=-1
         )
     out = _chunk(acc, r % n, chunk_n)[:chunk_in].astype(x.dtype)
-    return (out, ovf) if return_info else out
+    return (out, _or_across(ovf, axis_name)) if return_info else out
 
 
 def gz_allgather(
@@ -635,7 +787,9 @@ def gz_allgather(
         )
         out = out.reshape(n, chunk_n)[:, :n_orig].reshape(-1)
         out = out.reshape((n * x.shape[0],) + x.shape[1:]) if x.ndim else out
-        return (out.astype(dtype), ovf) if return_info else out.astype(dtype)
+        if return_info:
+            return out.astype(dtype), _or_across(ovf, axis_name)
+        return out.astype(dtype)
 
     chunk_n = n_orig
     out = jnp.zeros((n * chunk_n,), jnp.float32)
@@ -653,7 +807,9 @@ def gz_allgather(
 
     out, _ = lax.fori_loop(0, n - 1, body, (out, c_own))
     out = out.reshape((n * x.shape[0],) + x.shape[1:]) if x.ndim else out
-    return (out.astype(dtype), ovf) if return_info else out.astype(dtype)
+    if return_info:
+        return out.astype(dtype), _or_across(ovf, axis_name)
+    return out.astype(dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -754,6 +910,11 @@ def gz_scatter(
                 (held_packed, held_bw, held_anchor),
             )
 
+    # Only the root compresses significant data; the SPMD packs of the
+    # other ranks' local buffers are meaningless and must not pollute the
+    # global overflow OR below.
+    ovf &= r == 0
+
     # Decompress own chunk (the single lossy hop).
     my_pk = jnp.take(held_packed, r, axis=0)
     my_bw = jnp.take(held_bw, r, axis=0)
@@ -764,7 +925,7 @@ def gz_scatter(
         my_codes = bitpack.unpack(my_pk, my_bw, ops.BLOCK)
         x2d = ops.dequantize(my_codes, my_anchor, cfg.eb)
     out = ops.from_blocks(x2d, chunk_n).astype(dtype)
-    return (out, ovf) if return_info else out
+    return (out, _or_across(ovf, axis_name)) if return_info else out
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(1, 2))
@@ -864,7 +1025,9 @@ def gz_broadcast(
     r = lax.axis_index(axis_name)
     shape, dtype = x.shape, x.dtype
     c = comp.compress(x.reshape(-1).astype(jnp.float32), cfg.eb)
-    ovf = c.overflowed()
+    # Non-root ranks compress their (insignificant) local x in SPMD; only
+    # the root's stream travels, so only its flag is meaningful.
+    ovf = c.overflowed() & (r == 0)
     steps = int(math.log2(n))
     for k in range(steps):
         span = n >> (k + 1)
@@ -873,4 +1036,4 @@ def gz_broadcast(
         has = (r % (span * 2)) == span
         c = jax.tree.map(lambda new, old: jnp.where(has, new, old), c_recv, c)
     out = comp.decompress(c).reshape(shape).astype(dtype)
-    return (out, ovf) if return_info else out
+    return (out, _or_across(ovf, axis_name)) if return_info else out

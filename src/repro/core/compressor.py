@@ -77,6 +77,47 @@ class ErrorBoundedLorenzo:
             out2d = ops.dequantize_reduce(codes, c.anchor, c.eb, acc2d)
         return ops.from_blocks(out2d, c.n)
 
+    def decompress_reduce_compress(
+        self, c: Compressed, acc: jnp.ndarray, eb_out=None, *,
+        return_updated: bool = False,
+    ):
+        """Single-pass ring hop: ``compress(acc + decompress(c))`` in ONE
+        Pallas kernel (DESIGN.md §3.1) — the received wire stream plus the
+        local f32 chunk go in, the *next hop's* wire stream comes out, and
+        the updated f32 chunk never leaves VMEM.
+
+        ``acc`` is flat (n,) with ``n == c.n``; ``eb_out`` defaults to the
+        incoming stream's bound (ring/redoub hops reuse one stage budget).
+        Returns ``(Compressed, updated | None)``: ``updated`` (the plain
+        f32 accumulator) is materialized only when ``return_updated`` —
+        the recursive-doubling carry needs it; ring hops do not.
+
+        ``fused=False`` runs the decompress_reduce ∘ compress composition
+        (the PR 1 two-kernel path, kept as the oracle); both produce
+        byte-identical wire streams.
+        """
+        assert int(acc.size) == c.n, (acc.size, c.n)
+        eb_out = c.eb if eb_out is None else jnp.asarray(eb_out, jnp.float32)
+        if not self.fused:
+            updated = self.decompress_reduce(c, acc)
+            return self.compress(updated, eb_out), (
+                updated if return_updated else None
+            )
+        cap = capacity_words_for(c.n, self.capacity_factor, self.block)
+        acc2d = ops.to_blocks(acc)
+        res = ops.unpack_reduce_repack(
+            c.packed, c.bitwidth, c.anchor, c.eb, acc2d, eb_out, cap,
+            emit_f32=return_updated,
+        )
+        packed, bw, anchor = res[:3]
+        c_out = Compressed(
+            packed=packed, bitwidth=bw, anchor=anchor,
+            nwords=bitpack.packed_words(bw, self.block), eb=eb_out,
+            n=c.n, block=self.block,
+        )
+        updated = ops.from_blocks(res[3], c.n) if return_updated else None
+        return c_out, updated
+
 
 @dataclasses.dataclass(frozen=True)
 class FixedRate:
@@ -112,6 +153,17 @@ class FixedRate:
 
     def decompress_reduce(self, c: Compressed, acc: jnp.ndarray) -> jnp.ndarray:
         return acc + self.decompress(c)
+
+    def decompress_reduce_compress(
+        self, c: Compressed, acc: jnp.ndarray, eb_out=None, *,
+        return_updated: bool = False,
+    ):
+        """Composition fallback (fixed-rate has no fused hop kernel)."""
+        eb_out = c.eb if eb_out is None else jnp.asarray(eb_out, jnp.float32)
+        updated = self.decompress_reduce(c, acc)
+        return self.compress(updated, eb_out), (
+            updated if return_updated else None
+        )
 
 
 DEFAULT = ErrorBoundedLorenzo()

@@ -31,6 +31,7 @@ __all__ = [
     "TPU_V5E",
     "t_compress",
     "t_decompress",
+    "t_hop_fused",
     "allreduce_ring_gz",
     "allreduce_redoub_gz",
     "allreduce_intring_gz",
@@ -109,6 +110,23 @@ def t_decompress(size_bytes: float, hw: Hardware) -> float:
     return hw.cmp_overhead_us * 1e-6 + size_bytes / eff
 
 
+def t_hop_fused(size_bytes: float, hw: Hardware) -> float:
+    """One single-pass unpack→reduce→repack hop over a `size_bytes` piece.
+
+    The fused kernel streams the piece through VMEM once: decode + re-encode
+    at the piece size's utilization, ONE per-invocation overhead instead of
+    the two the decoupled composition pays, and no separate reduce term —
+    the add rides the same pass, so the f32 intermediate's HBM round-trip
+    (what ``t_reduce`` models) is gone.
+    """
+    if size_bytes <= 0:
+        return 0.0
+    u = _util(size_bytes, hw)
+    dec_eff = hw.dec_peak_gbps * 1e9 / 8 * u
+    cmp_eff = hw.cmp_peak_gbps * 1e9 / 8 * u
+    return hw.cmp_overhead_us * 1e-6 + size_bytes / dec_eff + size_bytes / cmp_eff
+
+
 def t_net(bytes_on_wire: float, hw: Hardware) -> float:
     return hw.net_alpha_us * 1e-6 + bytes_on_wire / (hw.net_gbps * 1e9 / 8)
 
@@ -138,9 +156,20 @@ def allreduce_ring_gz(D, N, R, hw: Hardware, overlap: float = 0.7) -> float:
     return (N - 1) * step_rs + t_compress(ch, hw) + (N - 1) * step_ag
 
 
-def allreduce_redoub_gz(D, N, R, hw: Hardware, overlap: float = 0.7) -> float:
-    """gZ-Allreduce (ReDoub): log2(N) full-message exchanges."""
+def allreduce_redoub_gz(
+    D, N, R, hw: Hardware, overlap: float = 0.7, *, fused_hop: bool = True
+) -> float:
+    """gZ-Allreduce (ReDoub): log2(N) full-message exchanges.
+
+    ``fused_hop`` models the single-pass schedule (one fill compression,
+    then one ``t_hop_fused`` kernel per step instead of the decoupled
+    compress + decompress+reduce pair) — keep it in sync with the ring's
+    fused costing so auto-selection compares like with like.
+    """
     steps = math.ceil(math.log2(N))
+    if fused_hop:
+        one = _overlapped(t_hop_fused(D, hw), t_net(D / R, hw), overlap)
+        return t_compress(D, hw) + steps * one
     one = _overlapped(
         t_compress(D, hw) + t_decompress(D, hw) + t_reduce(D, hw),
         t_net(D / R, hw),
@@ -194,16 +223,19 @@ def allreduce_ccoll(D, N, R, hw: Hardware) -> float:
 # The explicit per-chunk overlap model of the pipelined schedules in
 # core/collectives.py.  Unlike the fractional ``overlap`` discount above
 # (which credits an *assumed* multi-stream engine), this models the
-# schedule the implementation actually runs: each ring chunk is split into
-# ``chunks`` pieces that flow through the serial stage chain
-# compress -> wire -> decompress+reduce with one piece of double
-# buffering, so steady-state throughput is set by the slowest stage and
-# the ends pay a fill + drain of one full piece-chain.  chunks=1 is the
+# schedule the implementation actually runs, over TWO resources: the
+# device (where every codec kernel serializes — compress and
+# decompress+reduce cannot overlap each other) and the wire.  Each ring
+# chunk is split into ``chunks`` pieces double-buffered through the
+# [device, wire] chain, so steady-state throughput is set by the slower
+# resource and the ends pay a fill + drain of one piece.  chunks=1 is the
 # sequential schedule (zero overlap) — what the unpipelined code paths do.
-# The cost of pipelining is explicit too: every piece pays the
-# per-invocation compressor overhead and runs at the *piece* size's
-# utilization, which is why the selector's best chunk count falls back to
-# 1 below the saturation size.
+# The cost of pipelining is explicit too: every piece-hop pays the
+# per-invocation device overhead (TWO ``cmp_overhead_us`` on the
+# decoupled two-kernel hop, ONE on the fused single-pass hop) and runs at
+# the *piece* size's utilization — which is why the best chunk count
+# falls back to 1 below the saturation size, and why fusing the hop
+# moves the overhead-vs-overlap break-even toward deeper pipelines.
 
 
 def _pipeline_phase(stage_times, chunks: int) -> float:
@@ -212,25 +244,43 @@ def _pipeline_phase(stage_times, chunks: int) -> float:
     return sum(stage_times) + (chunks - 1) * max(stage_times)
 
 
-def allreduce_ring_gz_chunked(D, N, R, hw: Hardware, chunks: int = 1) -> float:
+def allreduce_ring_gz_chunked(
+    D, N, R, hw: Hardware, chunks: int = 1, *, fused_hop: bool = True
+) -> float:
     """gZ-Allreduce (Ring) under the chunked double-buffered schedule.
 
-    Per-chunk overlap terms: each of the (N-1) RS steps pipelines
-    [compress, wire, decompress+reduce] over `chunks` pieces of D/(N*chunks)
-    bytes; the AG stage pipelines [wire, decompress] plus the owner's
-    one-off piece-wise compression.
+    Each of the (N-1) RS steps pipelines `chunks` pieces of D/(N*chunks)
+    bytes over the [device, wire] resource pair; the AG stage does the
+    same with the forwarding decompress, plus the owner's one-off
+    piece-wise compression.
+
+    Per piece-hop the device stage is:
+
+      two-kernel hop (PR 1):  t_compress + t_decompress + t_reduce
+                              — TWO ``cmp_overhead_us`` plus the f32
+                              intermediate's HBM round-trip, every hop;
+      ``fused_hop``:          ``t_hop_fused`` — ONE overhead, one VMEM
+                              pass, preceded by a one-off pipeline fill
+                              (step 0's P piece compressions).
+
+    Pipelining hides wire time behind device time (or vice versa); its
+    price is the per-piece device overhead times depth.  Halving that
+    overhead via the fused hop is what moves ``best_pipeline_chunks``
+    deeper (DESIGN.md §4).
     """
     piece = D / N / chunks
-    rs_stages = [
-        t_compress(piece, hw),
-        t_net(piece / R, hw),
-        t_decompress(piece, hw) + t_reduce(piece, hw),
-    ]
-    step_rs = _pipeline_phase(rs_stages, chunks)
+    wire = t_net(piece / R, hw)
+    if fused_hop:
+        fill = chunks * t_compress(piece, hw)  # step 0's sends, up front
+        rs = fill + (N - 1) * _pipeline_phase(
+            [t_hop_fused(piece, hw), wire], chunks
+        )
+    else:
+        dev = t_compress(piece, hw) + t_decompress(piece, hw) + t_reduce(piece, hw)
+        rs = (N - 1) * _pipeline_phase([dev, wire], chunks)
     own = chunks * t_compress(piece, hw)  # owner compress, not overlappable
-    ag_stages = [t_net(piece / R, hw), t_decompress(piece, hw)]
-    step_ag = _pipeline_phase(ag_stages, chunks)
-    return (N - 1) * step_rs + own + (N - 1) * step_ag
+    step_ag = _pipeline_phase([wire, t_decompress(piece, hw)], chunks)
+    return rs + own + (N - 1) * step_ag
 
 
 def scatter_binomial_gz_chunked(D, N, R, hw: Hardware, chunks: int = 1) -> float:
@@ -256,11 +306,19 @@ PIPELINE_CHUNK_CANDIDATES = (1, 2, 4, 8, 16)
 
 
 def best_pipeline_chunks(
-    D, N, R, hw: Hardware, candidates=PIPELINE_CHUNK_CANDIDATES
+    D, N, R, hw: Hardware, candidates=PIPELINE_CHUNK_CANDIDATES, *,
+    fused_hop: bool = True,
 ) -> int:
-    """Chunk count minimizing the chunked-ring model (1 == don't pipeline)."""
+    """Chunk count minimizing the chunked-ring model (1 == don't pipeline).
+
+    With ``fused_hop`` the per-piece fixed cost is one kernel overhead
+    instead of two, so the optimum is deeper (or equal) at every (D, N).
+    """
     return min(
-        candidates, key=lambda c: allreduce_ring_gz_chunked(D, N, R, hw, c)
+        candidates,
+        key=lambda c: allreduce_ring_gz_chunked(
+            D, N, R, hw, c, fused_hop=fused_hop
+        ),
     )
 
 

@@ -75,7 +75,9 @@ def _plan_cfg(cfg: GZConfig, sync: "SyncConfig", n_elems: int, ax) -> GZConfig:
     if cfg.algo == "ring" and cfg.pipeline_chunks == 1:
         from repro.core.collectives import plan_ring_pipeline_chunks
 
-        chunks = plan_ring_pipeline_chunks(n_elems, _axis_size(ax))
+        chunks = plan_ring_pipeline_chunks(
+            n_elems, _axis_size(ax), fused_hop=cfg.fused_hop
+        )
         return dataclasses.replace(cfg, pipeline_chunks=chunks)
     return cfg  # "auto" plans inside gz_allreduce; explicit depth honored
 

@@ -26,10 +26,19 @@ def select_allreduce(
     *,
     allow_beyond_paper: bool = False,
 ) -> str:
-    """Return 'ring' | 'redoub' (| 'intring' when beyond-paper allowed)."""
+    """Return 'ring' | 'redoub' (| 'intring' when beyond-paper allowed).
+
+    This is the PAPER's selector: both algorithms are costed under the
+    paper's two-kernel multi-stream-overlap models (no fused hop on
+    either side — `allreduce_ring_gz` has none, so redoub must not get
+    one either or the crossover is biased).  The production planner with
+    the fused-hop schedule is :func:`select_allreduce_plan`.
+    """
     costs = {
         "ring": cm.allreduce_ring_gz(d_bytes, n_ranks, ratio, hw),
-        "redoub": cm.allreduce_redoub_gz(d_bytes, n_ranks, ratio, hw),
+        "redoub": cm.allreduce_redoub_gz(
+            d_bytes, n_ranks, ratio, hw, fused_hop=False
+        ),
     }
     if allow_beyond_paper:
         costs["intring"] = cm.allreduce_intring_gz(d_bytes, n_ranks, ratio, hw)
@@ -44,6 +53,7 @@ def select_allreduce_plan(
     *,
     allow_beyond_paper: bool = False,
     chunk_candidates=cm.PIPELINE_CHUNK_CANDIDATES,
+    fused_hop: bool = True,
 ) -> tuple[str, int]:
     """Pick (algo, pipeline_chunks) from the explicit per-chunk cost model.
 
@@ -54,15 +64,22 @@ def select_allreduce_plan(
     degrades to the sequential schedule (chunks == 1).  ReDoub compresses
     full messages — its overlap is already a single long chain, so it takes
     no chunk knob (returned chunks apply to ring only).
+
+    ``fused_hop`` costs BOTH algorithms' hops as single-pass
+    ``t_hop_fused`` kernels (one ``cmp_overhead_us`` per hop instead of
+    two — the collectives run fused hops for ring and redoub alike), and
+    pushes the ring's best chunk count deeper.
     """
     ring_chunks = cm.best_pipeline_chunks(
-        d_bytes, n_ranks, ratio, hw, chunk_candidates
+        d_bytes, n_ranks, ratio, hw, chunk_candidates, fused_hop=fused_hop
     )
     costs = {
         ("ring", ring_chunks): cm.allreduce_ring_gz_chunked(
-            d_bytes, n_ranks, ratio, hw, ring_chunks
+            d_bytes, n_ranks, ratio, hw, ring_chunks, fused_hop=fused_hop
         ),
-        ("redoub", 1): cm.allreduce_redoub_gz(d_bytes, n_ranks, ratio, hw),
+        ("redoub", 1): cm.allreduce_redoub_gz(
+            d_bytes, n_ranks, ratio, hw, fused_hop=fused_hop
+        ),
     }
     if allow_beyond_paper:
         costs[("intring", 1)] = cm.allreduce_intring_gz(

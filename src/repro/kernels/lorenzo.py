@@ -15,6 +15,9 @@ Six kernels, each tiled ``(TILE_ROWS, BLOCK)`` over a grid of block-rows:
     exact inverse fusion for the receive side of a collective.
   * ``unpack_dequantize``  the accumulator-free variant for pure
     decompression (allgather/scatter receive paths).
+  * ``unpack_reduce_repack``  the single-pass ring hop: received packed
+    words + local f32 chunk -> the NEXT hop's packed words, in one pass —
+    the updated f32 chunk never leaves VMEM (DESIGN.md §3.1).
 
 Fused-pack layout invariant: BLOCK is a multiple of 32, so every block's
 ``BLOCK * bw_i`` bit payload is a whole number of uint32 words — block
@@ -175,9 +178,9 @@ def _width_mask(bwu):
     )
 
 
-def _quantize_pack_kernel(x_ref, recip_ref, packed_ref, bw_ref, anchor_ref,
-                          off_ref):
-    """quantize + zigzag + bitpack in one pass over the tile.
+def _pack_tile(zig, bw, packed_ref, off_ref):
+    """Pack one tile's zigzag codes into the resident packed-output window,
+    advancing the SMEM word-offset carry.
 
     The word offset of the current tile is carried in SMEM scratch across
     the sequential grid; the packed output block has a constant index map,
@@ -186,17 +189,6 @@ def _quantize_pack_kernel(x_ref, recip_ref, packed_ref, bw_ref, anchor_ref,
     Overflow past the true capacity lands in the PACK_PAD_WORDS dump tail,
     which the wrapper slices off — never silent corruption of valid words.
     """
-    i = pl.program_id(0)
-
-    @pl.when(i == 0)
-    def _():
-        packed_ref[...] = jnp.zeros_like(packed_ref[...])
-        off_ref[0] = 0
-
-    zig, bw, anchor = _quantize_tile(x_ref[...], recip_ref[0, 0])
-    bw_ref[...] = bw
-    anchor_ref[...] = anchor
-
     word, shift, bwu, words_per_block = _tile_pack_geometry(bw)
     u = zig & _width_mask(bwu)
     lo = u << shift
@@ -215,6 +207,22 @@ def _quantize_pack_kernel(x_ref, recip_ref, packed_ref, bw_ref, anchor_ref,
     window = packed_ref[pl.ds(s, PACK_PAD_WORDS)]
     packed_ref[pl.ds(s, PACK_PAD_WORDS)] = window | local
     off_ref[0] = start + jnp.sum(words_per_block)
+
+
+def _quantize_pack_kernel(x_ref, recip_ref, packed_ref, bw_ref, anchor_ref,
+                          off_ref):
+    """quantize + zigzag + bitpack in one pass over the tile."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        packed_ref[...] = jnp.zeros_like(packed_ref[...])
+        off_ref[0] = 0
+
+    zig, bw, anchor = _quantize_tile(x_ref[...], recip_ref[0, 0])
+    bw_ref[...] = bw
+    anchor_ref[...] = anchor
+    _pack_tile(zig, bw, packed_ref, off_ref)
 
 
 def _unpack_tile(packed_ref, bw, off_ref):
@@ -271,6 +279,113 @@ def _unpack_dequantize_kernel(packed_ref, bw_ref, anchor_ref, twoeb_ref,
 
     u = _unpack_tile(packed_ref, bw_ref[...], off_ref)
     out_ref[...] = _reconstruct(u, anchor_ref[...], twoeb_ref[0, 0])
+
+
+def _unpack_reduce_repack_kernel(emit_f32, packed_in_ref, bw_in_ref,
+                                 anchor_in_ref, twoeb_ref, acc_ref, recip_ref,
+                                 *refs):
+    """The single-pass ring hop (DESIGN.md §3.1): per tile, gather the
+    received packed segment from the resident input window, unpack +
+    un-zigzag + prefix-sum + dequantize, add the local accumulator chunk,
+    then immediately re-quantize, zigzag and pack the updated chunk into
+    the resident outgoing wire window.  The f32 intermediate lives only in
+    VMEM (unless ``emit_f32`` — the redoub carry needs it); the outgoing
+    per-block bitwidths/anchors come out of the same pass.  Two SMEM
+    word-offset carries: one walking the received stream, one walking the
+    outgoing stream.
+    """
+    if emit_f32:
+        (packed_out_ref, bw_out_ref, anchor_out_ref, x_out_ref,
+         off_in_ref, off_out_ref) = refs
+    else:
+        (packed_out_ref, bw_out_ref, anchor_out_ref,
+         off_in_ref, off_out_ref) = refs
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        packed_out_ref[...] = jnp.zeros_like(packed_out_ref[...])
+        off_in_ref[0] = 0
+        off_out_ref[0] = 0
+
+    u = _unpack_tile(packed_in_ref, bw_in_ref[...], off_in_ref)
+    x = acc_ref[...] + _reconstruct(u, anchor_in_ref[...], twoeb_ref[0, 0])
+    zig, bw, anchor = _quantize_tile(x, recip_ref[0, 0])
+    bw_out_ref[...] = bw
+    anchor_out_ref[...] = anchor
+    if emit_f32:
+        x_out_ref[...] = x
+    _pack_tile(zig, bw, packed_out_ref, off_out_ref)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity_words", "emit_f32", "interpret")
+)
+def unpack_reduce_repack(
+    packed: jnp.ndarray,
+    bitwidth: jnp.ndarray,
+    anchor: jnp.ndarray,
+    eb_in: jnp.ndarray,
+    acc: jnp.ndarray,
+    eb_out: jnp.ndarray,
+    capacity_words: int,
+    *,
+    emit_f32: bool = False,
+    interpret: bool = True,
+):
+    """Fused unpack + dequantize + reduce + re-quantize + re-pack.
+
+    One ``pallas_call`` per ring hop: consumes the received wire stream
+    (``packed``/``bitwidth``/``anchor`` at ``eb_in``) plus the local f32
+    chunk ``acc`` (n_blocks, BLOCK), and emits the *next hop's* wire stream
+    at ``eb_out`` — byte-identical to
+    ``quantize_pack(unpack_dequantize_reduce(...))`` without the f32
+    intermediate ever leaving VMEM.  With ``emit_f32`` the updated f32
+    chunk is also written out (the recursive-doubling carry).
+
+    Returns (packed_out uint32[capacity_words], bw_out, anchor_out[,
+    updated f32 (n_blocks, BLOCK)]).
+    """
+    n_blocks = acc.shape[0]
+    twoeb = (2.0 * eb_in).reshape(1, 1).astype(jnp.float32)
+    recip = (1.0 / (2.0 * eb_out)).reshape(1, 1).astype(jnp.float32)
+    cap_in_pad = packed.shape[0] + PACK_PAD_WORDS
+    packed_pad = jnp.zeros((cap_in_pad,), jnp.uint32).at[: packed.shape[0]].set(packed)
+    cap_out_pad = capacity_words + PACK_PAD_WORDS
+    out_specs = [
+        pl.BlockSpec((cap_out_pad,), lambda i: (0,)),
+        _row_spec(1),
+        _row_spec(1),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((cap_out_pad,), jnp.uint32),
+        jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32),
+        jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32),
+    ]
+    if emit_f32:
+        out_specs.append(_row_spec(BLOCK))
+        out_shape.append(jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.float32))
+    res = pl.pallas_call(
+        functools.partial(_unpack_reduce_repack_kernel, emit_f32),
+        grid=(n_blocks // TILE_ROWS,),
+        in_specs=[
+            pl.BlockSpec((cap_in_pad,), lambda i: (0,)),
+            _row_spec(1),
+            _row_spec(1),
+            _scalar_spec(),
+            _row_spec(BLOCK),
+            _scalar_spec(),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32), pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(packed_pad, bitwidth[:, None], anchor[:, None], twoeb, acc, recip)
+    if emit_f32:
+        packed_out, bw, anchor_out, x = res
+        return packed_out[:capacity_words], bw[:, 0], anchor_out[:, 0], x
+    packed_out, bw, anchor_out = res
+    return packed_out[:capacity_words], bw[:, 0], anchor_out[:, 0]
 
 
 @functools.partial(jax.jit, static_argnames=("capacity_words", "interpret"))

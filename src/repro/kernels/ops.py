@@ -86,3 +86,21 @@ def unpack_dequantize_reduce(
     return lorenzo.unpack_dequantize_reduce(
         packed, bitwidth, anchor, eb, acc2d, interpret=_interpret()
     )
+
+
+def unpack_reduce_repack(
+    packed: jnp.ndarray, bitwidth: jnp.ndarray, anchor: jnp.ndarray, eb_in,
+    acc2d: jnp.ndarray, eb_out, capacity_words: int, *, emit_f32: bool = False,
+):
+    """Single-pass ring hop: received wire stream + local f32 chunk -> the
+    next hop's wire stream (packed_out, bw_out, anchor_out[, updated f32]).
+
+    Byte-identical to ``quantize_pack(unpack_dequantize_reduce(...))``; the
+    f32 intermediate stays in VMEM unless ``emit_f32``.
+    """
+    eb_in = jnp.asarray(eb_in, jnp.float32)
+    eb_out = jnp.asarray(eb_out, jnp.float32)
+    return lorenzo.unpack_reduce_repack(
+        packed, bitwidth, anchor, eb_in, acc2d, eb_out, int(capacity_words),
+        emit_f32=emit_f32, interpret=_interpret(),
+    )

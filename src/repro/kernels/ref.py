@@ -33,6 +33,7 @@ __all__ = [
     "dequantize_reduce_ref",
     "quantize_pack_ref",
     "unpack_dequantize_reduce_ref",
+    "unpack_reduce_repack_ref",
     "bitwidth_of",
 ]
 
@@ -101,6 +102,24 @@ def unpack_dequantize_reduce_ref(
 
     codes = bitpack.unpack(packed, bitwidth, acc.shape[1])
     return dequantize_reduce_ref(codes, anchor, eb, acc)
+
+
+def unpack_reduce_repack_ref(
+    packed: jnp.ndarray,
+    bitwidth: jnp.ndarray,
+    anchor: jnp.ndarray,
+    eb_in: jnp.ndarray,
+    acc: jnp.ndarray,
+    eb_out: jnp.ndarray,
+    capacity_words: int,
+):
+    """Oracle for the fused single-pass ring hop: the unfused composition
+    decompress_reduce ∘ compress.  -> (packed_out, bw_out, anchor_out,
+    updated f32); the fused kernel must reproduce the byte stream exactly.
+    """
+    x = unpack_dequantize_reduce_ref(packed, bitwidth, anchor, eb_in, acc)
+    packed_out, bw_out, anchor_out = quantize_pack_ref(x, eb_out, capacity_words)
+    return packed_out, bw_out, anchor_out, x
 
 
 def attention_ref(q, k, v, *, causal=True, window=0):

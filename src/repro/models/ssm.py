@@ -128,14 +128,19 @@ def ssm_train(h, w, cfg: ModelConfig, ctx: ParallelCtx):
     dtc = padq(dt).reshape(b, n_chunks, q, h_local)
 
     lc = jnp.cumsum(dac, axis=2)  # within-chunk cumulative log decay
-    # within-chunk (diagonal block) term
-    att = jnp.exp(
-        lc[:, :, :, None, :] - lc[:, :, None, :, :]
-    )  # (b, nc, q_i, q_j, h)
+    # within-chunk (diagonal block) term.  Mask BEFORE the exp: for j > i
+    # the exponent lc_i - lc_j = -sum(da over (i, j]) is >= 0 and grows
+    # with the decay magnitude, so exp overflows to inf once the trained
+    # dt/A push any within-chunk decay past ~88 — and inf * 0 (the causal
+    # mask) is NaN, which is exactly the mamba2 step-3 divergence.  With
+    # -inf substituted first, exp gives an exact 0 and the masked entries
+    # contribute nothing to value or gradient.
     iota_i = jnp.arange(q)
-    causal = (iota_i[:, None] >= iota_i[None, :]).astype(jnp.float32)
+    causal = iota_i[:, None] >= iota_i[None, :]
+    seg = lc[:, :, :, None, :] - lc[:, :, None, :, :]  # (b, nc, q_i, q_j, h)
+    att = jnp.exp(jnp.where(causal[None, None, :, :, None], seg, -jnp.inf))
     cb = jnp.einsum("bkin,bkjn->bkij", cc, bc)  # (b, nc, q, q)
-    w_att = cb[:, :, :, :, None] * att * causal[None, None, :, :, None]
+    w_att = cb[:, :, :, :, None] * att
     y_diag = jnp.einsum(
         "bkijh,bkjh,bkjhp->bkihp", w_att, dtc, xc.astype(jnp.float32)
     )

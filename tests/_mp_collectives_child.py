@@ -144,6 +144,59 @@ err = np.abs(out - full.reshape(N, D)).max()
 assert err <= 1e-4 * 1.001 + np.abs(full).max() * 2e-7, err
 print(f"OK scatter_pipelined err={err:.2e}")
 
+# Single-pass fused hop (ISSUE 2): the fused_hop=True schedules must be
+# bitwise identical to the PR 1 two-kernel hop composition — same wire
+# bytes at every hop implies the same f32 at every rank.  Checked on the
+# sequential ring, the pipelined ring, redoub, and reduce_scatter.
+
+def _run_allreduce(data, algo, fused_hop, pc=1):
+    c = GZConfig(eb=1e-4, algo=algo, capacity_factor=1.2,
+                 pipeline_chunks=pc, fused_hop=fused_hop)
+    f = shmap(lambda x: gz_allreduce(x[0], "x", c)[None],
+              (P("x", None),), P("x", None))
+    return np.asarray(f(data))
+
+for algo, pc, data in (("ring", 1, base), ("redoub", 1, base),
+                       ("ring", 2, base_al), ("ring", 4, base_al)):
+    a = _run_allreduce(data, algo, True, pc)
+    b = _run_allreduce(data, algo, False, pc)
+    assert np.array_equal(a, b), f"fused hop != two-kernel: {algo} P={pc}"
+    print(f"OK fused_hop bitwise == two-kernel ({algo}, P={pc})")
+
+cfg_fh = {}
+for fh in (True, False):
+    c = GZConfig(eb=1e-4, capacity_factor=1.2, pipeline_chunks=2, fused_hop=fh)
+    f = shmap(lambda x, c=c: gz_reduce_scatter(x[0], "x", c), (P("x", None),), P("x"))
+    cfg_fh[fh] = np.asarray(f(base))
+assert np.array_equal(cfg_fh[True], cfg_fh[False])
+print("OK fused_hop bitwise == two-kernel (reduce_scatter pipelined)")
+
+# Overflow-flag propagation (ISSUE 2 satellite): a starved capacity_factor
+# must trip the overflow bit on SOME hop of the pipelined schedules, and
+# return_info must OR it across pieces and hops on every rank.  Rough
+# (incompressible) data guarantees the streams genuinely overflow.
+rough = rng.normal(0, 100.0, (N, D_ALIGNED)).astype(np.float32)
+for algo, pc in (("ring", 2), ("ring", 1), ("redoub", 1)):
+    cfg_tiny = GZConfig(eb=1e-6, algo=algo, capacity_factor=0.02,
+                        pipeline_chunks=pc)
+    f = shmap(
+        lambda x, c=cfg_tiny: gz_allreduce(x[0], "x", c, return_info=True)[1][None],
+        (P("x", None),), P("x", None),
+    )
+    ovf = np.asarray(f(rough))
+    assert ovf.all(), f"overflow not propagated: {algo} P={pc}"
+    print(f"OK overflow propagated ({algo}, P={pc})")
+
+cfg_tiny = GZConfig(eb=1e-6, capacity_factor=0.02, pipeline_chunks=2)
+xin_rough = np.zeros((N, N * D), np.float32)
+xin_rough[0] = rng.normal(0, 100.0, N * D).astype(np.float32)
+f = shmap(
+    lambda x: gz_scatter(x[0], "x", cfg_tiny, return_info=True)[1][None],
+    (P("x", None),), P("x", None),
+)
+assert np.asarray(f(xin_rough)).all(), "scatter overflow not propagated"
+print("OK overflow propagated (scatter pipelined)")
+
 # all_to_all: compressed vs exact (one lossy hop)
 from repro.core.collectives import gz_all_to_all
 x_a2a = base[:, : N * 512].reshape(N, N * 512).copy()

@@ -1,0 +1,28 @@
+"""Hypothesis property test for the single-pass ring hop (ISSUE 2).
+
+∀ (shape, error bounds, piece alignment, data distribution): the fused
+``decompress_reduce_compress`` and the decompress_reduce ∘ compress
+composition emit byte-identical wire streams and bitwise-identical f32
+accumulators.  Deterministic spot checks of the same contract live in
+tests/test_fused_hop.py (they run even without hypothesis installed).
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e .[dev])"
+)
+from hypothesis import given, settings, strategies as st
+
+from test_fused_hop import QUANTUM, _assert_hop_identical
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=3 * QUANTUM + 511),
+    eb_in=st.sampled_from([1e-2, 1e-3, 1e-4, 3e-4]),
+    eb_out=st.sampled_from([1e-2, 1e-3, 1e-4, 3e-4]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    kind=st.sampled_from(["smooth", "boundary", "spiky"]),
+)
+def test_property_fused_hop_byte_identical(n, eb_in, eb_out, seed, kind):
+    _assert_hop_identical(n, eb_in, eb_out, seed, kind)
