@@ -33,6 +33,9 @@ def run(grad_gz):
     cfg = registry.get("minitron-8b", smoke=True)
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     opt = AdamWConfig(lr=6e-4, total_steps=STEPS, warmup_steps=3)
+    # make_setup binds a resolve-once GZCommunicator to the "data" axis
+    # (core/comm.py); the gradient allreduce plan is memoized, not
+    # re-derived inside the jitted step
     setup = make_setup(cfg, mesh, opt=opt, grad_gz=grad_gz)
     shape = InputShape("ex", SEQ, BATCH, "train")
     _, bspecs = train_specs(cfg, shape, mesh)

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.collectives import GZConfig, gz_scatter
+from repro.core.collectives import GZConfig
+from repro.core.comm import GZCommunicator
 from repro.core.shmap import shard_map
 
 N = 8
@@ -33,11 +34,14 @@ def main():
     xin = np.zeros((N, N * CHUNK), np.float32)
     xin[0] = full  # only the root's row is significant
 
-    cfg = GZConfig(eb=1e-4, capacity_factor=0.6)
+    # Bind the axis + knobs once; the frozen Plan (per-stage eb, capacity,
+    # wire accounting) is resolved outside the traced region (DESIGN.md §5).
+    comm = GZCommunicator("x", config=GZConfig(eb=1e-4, capacity_factor=0.6),
+                          axis_size=N)
 
     def body(x):
-        out, ovf = gz_scatter(x[0], "x", cfg, return_info=True)
-        return out, ovf[None]
+        res = comm.scatter(x[0])
+        return res.value, res.overflow[None]
 
     f = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("x", None),),
                           out_specs=(P("x"), P("x"))))
@@ -45,8 +49,11 @@ def main():
     out = np.asarray(out).reshape(N, CHUNK)
     assert not np.asarray(ovf).any(), "capacity overflow"
     err = np.abs(out - full.reshape(N, CHUNK)).max()
+    plan = comm.plan("scatter", N * CHUNK)
     print(f"scattered {full.nbytes/1e6:.1f} MB to {N} ranks, "
           f"max err {err:.2e} (eb=1e-4)")
+    print(f"plan: algo={plan.algo} wire={plan.wire_bytes/1e6:.2f} MB/rank "
+          f"provisioned-ratio {plan.ratio:.1f}x")
     assert err <= 1e-4 + np.abs(full).max() * 2e-7
     print("every rank received its chunk through ONE lossy hop")
 

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from benchmarks.benchutil import noisy_images
-from repro.core.collectives import GZConfig, gz_allreduce
+from repro.core.collectives import GZConfig
+from repro.core.comm import GZCommunicator
 from repro.core.shmap import shard_map
 
 N, H, W = 8, 256, 256
@@ -43,11 +44,15 @@ def main():
     eb = 1e-4 * float(np.abs(exact).max())
 
     for algo in ["redoub", "ring", "intring"]:
-        cfg = GZConfig(eb=eb, algo=algo, capacity_factor=1.2,
-                       worst_case_budget=False)
+        comm = GZCommunicator(
+            "x",
+            config=GZConfig(eb=eb, algo=algo, capacity_factor=1.2,
+                            worst_case_budget=False),
+            axis_size=N,
+        )
 
         def body(x):
-            return gz_allreduce(x[0], "x", cfg)[None]
+            return comm.allreduce(x[0]).value[None]
 
         f = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("x", None),),
                               out_specs=P("x", None)))

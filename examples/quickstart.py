@@ -55,9 +55,13 @@ def main():
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     opt = AdamWConfig(lr=6e-4, total_steps=args.steps,
                       warmup_steps=args.steps // 10)
-    # gradient sync through the paper's recursive-doubling gZ-Allreduce
+    # gradient sync through the paper's recursive-doubling gZ-Allreduce;
+    # make_setup binds one resolve-once GZCommunicator per dp axis
+    # (core/comm.py) — pass grad_policy="auto"/"paper"/"throughput"/
+    # "accuracy" to change how open choices are planned
     setup = make_setup(cfg, mesh, opt=opt,
-                       grad_gz=GZConfig(eb=1e-5, algo="redoub"))
+                       grad_gz=GZConfig(eb=1e-5, algo="redoub"),
+                       grad_policy="auto")
     shape = InputShape("quickstart", args.seq, args.batch, "train")
     _, bspecs = train_specs(cfg, shape, mesh)
     step_fn = make_train_step(setup, bspecs)

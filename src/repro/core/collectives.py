@@ -3,7 +3,20 @@
 Every collective here is written *rank-centric*: it is per-device code that
 runs inside a ``jax.shard_map`` body over a named mesh axis, moving
 ``Compressed`` pytrees with ``jax.lax.ppermute``.  This is the TPU-native
-translation of the paper's MPI send/recv patterns (DESIGN.md §2):
+translation of the paper's MPI send/recv patterns (DESIGN.md §2).
+
+Layering (DESIGN.md §5): this module holds the EXECUTE layer — the
+``_execute_*`` functions run a fully-resolved schedule (concrete
+algorithm, concrete pipeline depth) and contain zero selector logic.
+Plan resolution (algorithm choice, pipeline depth, per-stage budgets,
+wire accounting) lives in :mod:`repro.core.comm` behind
+``GZCommunicator.plan`` and is memoized outside the traced region.  The
+public ``gz_*`` functions below are thin back-compat wrappers over a
+one-shot communicator; new code should hold a ``GZCommunicator`` and use
+its methods, which return the uniform ``CollectiveResult`` stats channel
+instead of the legacy ``return_info`` tuple convention.
+
+Algorithms:
 
   gz_allreduce  algo="redoub"   recursive doubling — log2(N) full-message
                                  compressions (paper's headline gZ-Allreduce)
@@ -35,7 +48,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Any
 
 import jax
@@ -656,6 +668,38 @@ def _allreduce_intring(x, axis_name, cfg: GZConfig):
     return out[:n_orig], overflow
 
 
+def _execute_allreduce(x, axis_name, cfg: GZConfig):
+    """EXECUTE layer: run a fully-resolved allreduce schedule.
+
+    ``cfg.algo`` must be concrete — ``"auto"`` is a plan-time concern and
+    lives in core/comm.py (``GZCommunicator.plan``); nothing in here may
+    consult the selector or the cost model.  Returns
+    ``(out, local_overflow)``; the caller owns the cross-axis OR.
+    """
+    n = _axis_size(axis_name)
+    assert _is_pow2(n), f"axis {axis_name!r} size {n} must be a power of two"
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    if cfg.algo == "redoub":
+        out, ovf = _allreduce_redoub(flat, axis_name, cfg)
+    elif cfg.algo == "ring":
+        out, ovf = _allreduce_ring(flat, axis_name, cfg)
+    elif cfg.algo == "intring":
+        out, ovf = _allreduce_intring(flat, axis_name, cfg)
+    else:
+        raise ValueError(
+            f"unresolved allreduce algo {cfg.algo!r} reached the execute "
+            "layer — resolve a Plan via GZCommunicator.plan first"
+        )
+    return out.reshape(shape).astype(dtype), ovf
+
+
+def _comm_for(axis_name, cfg: GZConfig):
+    from repro.core.comm import GZCommunicator
+
+    return GZCommunicator.for_config(axis_name, cfg)
+
+
 def gz_allreduce(
     x: jnp.ndarray,
     axis_name,
@@ -667,37 +711,14 @@ def gz_allreduce(
 
     Call inside a shard_map body.  ``x`` may have any shape/float dtype;
     compression runs on the f32 flat view and the result is cast back.
-    """
-    n = _axis_size(axis_name)
-    if n == 1:
-        return (x, jnp.zeros((), jnp.bool_)) if return_info else x
-    assert _is_pow2(n), f"axis {axis_name!r} size {n} must be a power of two"
-    algo = cfg.algo
-    if algo == "auto":
-        from repro.core.selector import select_allreduce_plan
 
-        algo, _ = select_allreduce_plan(x.size * 4, n, fused_hop=cfg.fused_hop)
-        # Plan the ring pipeline depth only when the caller left the knob
-        # at its default — an explicit pipeline_chunks is always honored.
-        if algo == "ring" and cfg.pipeline_chunks == 1:
-            cfg = dataclasses.replace(
-                cfg,
-                pipeline_chunks=plan_ring_pipeline_chunks(
-                    x.size, n, fused_hop=cfg.fused_hop
-                ),
-            )
-    shape, dtype = x.shape, x.dtype
-    flat = x.reshape(-1).astype(jnp.float32)
-    if algo == "redoub":
-        out, ovf = _allreduce_redoub(flat, axis_name, cfg)
-    elif algo == "ring":
-        out, ovf = _allreduce_ring(flat, axis_name, cfg)
-    elif algo == "intring":
-        out, ovf = _allreduce_intring(flat, axis_name, cfg)
-    else:
-        raise ValueError(f"unknown allreduce algo {algo!r}")
-    out = out.reshape(shape).astype(dtype)
-    return (out, _or_across(ovf, axis_name)) if return_info else out
+    Back-compat wrapper over a one-shot :class:`~repro.core.comm.
+    GZCommunicator` (bitwise-identical to ``comm.allreduce(x).value``);
+    ``return_info=True`` unpacks the ``CollectiveResult`` into the legacy
+    ``(value, overflow)`` tuple.  New code should hold a communicator.
+    """
+    res = _comm_for(axis_name, cfg).allreduce(x)
+    return (res.value, res.overflow) if return_info else res.value
 
 
 # ---------------------------------------------------------------------------
@@ -705,17 +726,9 @@ def gz_allreduce(
 # ---------------------------------------------------------------------------
 
 
-def gz_reduce_scatter(
-    x: jnp.ndarray, axis_name, cfg: GZConfig = GZConfig(), *, return_info: bool = False
-):
-    """Ring reduce-scatter: rank r returns the summed chunk r (flat view).
-
-    x: (n*chunk,) per rank (same on-wire layout as lax.psum_scatter with
-    tiled=True over a flat array).
-    """
+def _execute_reduce_scatter(x, axis_name, cfg: GZConfig):
+    """EXECUTE layer for the ring reduce-scatter (concrete schedule)."""
     n = _axis_size(axis_name)
-    if n == 1:
-        return (x, jnp.zeros((), jnp.bool_)) if return_info else x
     assert _is_pow2(n)
     assert x.ndim == 1 and x.shape[0] % n == 0
     eb_stage = error_budget.allocate(
@@ -745,22 +758,26 @@ def gz_reduce_scatter(
         acc, chunk_n, ovf = _reduce_scatter_ring(
             flat, axis_name, cfg, eb_stage, owner_offset=-1
         )
-    out = _chunk(acc, r % n, chunk_n)[:chunk_in].astype(x.dtype)
-    return (out, _or_across(ovf, axis_name)) if return_info else out
+    return _chunk(acc, r % n, chunk_n)[:chunk_in].astype(x.dtype), ovf
 
 
-def gz_allgather(
+def gz_reduce_scatter(
     x: jnp.ndarray, axis_name, cfg: GZConfig = GZConfig(), *, return_info: bool = False
 ):
-    """Ring allgather: compress once, forward compressed N-1 times.
+    """Ring reduce-scatter: rank r returns the summed chunk r (flat view).
 
-    x: (chunk,) per rank -> returns (n*chunk,) with rank j's data at slot j.
-    Exactly one lossy hop end-to-end (data-movement framework): the returned
-    slot j holds decompress(compress(x_j)) on *every* rank including j.
+    x: (n*chunk,) per rank (same on-wire layout as lax.psum_scatter with
+    tiled=True over a flat array).  Back-compat wrapper over the one-shot
+    communicator — ``comm.reduce_scatter`` returns the full
+    ``CollectiveResult``.
     """
+    res = _comm_for(axis_name, cfg).reduce_scatter(x)
+    return (res.value, res.overflow) if return_info else res.value
+
+
+def _execute_allgather(x, axis_name, cfg: GZConfig):
+    """EXECUTE layer for the ring allgather (concrete schedule)."""
     n = _axis_size(axis_name)
-    if n == 1:
-        return (x, jnp.zeros((), jnp.bool_)) if return_info else x
     assert _is_pow2(n)
     comp = cfg.compressor()
     r = lax.axis_index(axis_name)
@@ -787,9 +804,7 @@ def gz_allgather(
         )
         out = out.reshape(n, chunk_n)[:, :n_orig].reshape(-1)
         out = out.reshape((n * x.shape[0],) + x.shape[1:]) if x.ndim else out
-        if return_info:
-            return out.astype(dtype), _or_across(ovf, axis_name)
-        return out.astype(dtype)
+        return out.astype(dtype), ovf
 
     chunk_n = n_orig
     out = jnp.zeros((n * chunk_n,), jnp.float32)
@@ -807,9 +822,21 @@ def gz_allgather(
 
     out, _ = lax.fori_loop(0, n - 1, body, (out, c_own))
     out = out.reshape((n * x.shape[0],) + x.shape[1:]) if x.ndim else out
-    if return_info:
-        return out.astype(dtype), _or_across(ovf, axis_name)
-    return out.astype(dtype)
+    return out.astype(dtype), ovf
+
+
+def gz_allgather(
+    x: jnp.ndarray, axis_name, cfg: GZConfig = GZConfig(), *, return_info: bool = False
+):
+    """Ring allgather: compress once, forward compressed N-1 times.
+
+    x: (chunk,) per rank -> returns (n*chunk,) with rank j's data at slot j.
+    Exactly one lossy hop end-to-end (data-movement framework): the returned
+    slot j holds decompress(compress(x_j)) on *every* rank including j.
+    Back-compat wrapper over the one-shot communicator.
+    """
+    res = _comm_for(axis_name, cfg).allgather(x)
+    return (res.value, res.overflow) if return_info else res.value
 
 
 # ---------------------------------------------------------------------------
@@ -817,25 +844,9 @@ def gz_allgather(
 # ---------------------------------------------------------------------------
 
 
-def gz_scatter(
-    x_full: jnp.ndarray,
-    axis_name,
-    cfg: GZConfig = GZConfig(),
-    *,
-    root: int = 0,
-    return_info: bool = False,
-):
-    """Binomial-tree compressed scatter (gZ-Scatter).
-
-    ``x_full``: (n*chunk,) — significant on the root rank only.  Each of the
-    N chunks is compressed *individually* (compressed streams are not
-    splittable — paper §3.3.4), in ONE batched quantize call: the
-    multi-stream analog.  Blocks travel compressed through the tree and are
-    decompressed exactly once by their final owner.
-    """
+def _execute_scatter(x_full, axis_name, cfg: GZConfig, *, root: int = 0):
+    """EXECUTE layer for the binomial-tree scatter (concrete schedule)."""
     n = _axis_size(axis_name)
-    if n == 1:
-        return (x_full, jnp.zeros((), jnp.bool_)) if return_info else x_full
     assert _is_pow2(n) and root == 0, "power-of-two axis, root 0"
     assert x_full.shape[0] % n == 0
     comp = cfg.compressor()
@@ -924,11 +935,30 @@ def gz_scatter(
     else:
         my_codes = bitpack.unpack(my_pk, my_bw, ops.BLOCK)
         x2d = ops.dequantize(my_codes, my_anchor, cfg.eb)
-    out = ops.from_blocks(x2d, chunk_n).astype(dtype)
-    return (out, _or_across(ovf, axis_name)) if return_info else out
+    return ops.from_blocks(x2d, chunk_n).astype(dtype), ovf
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def gz_scatter(
+    x_full: jnp.ndarray,
+    axis_name,
+    cfg: GZConfig = GZConfig(),
+    *,
+    root: int = 0,
+    return_info: bool = False,
+):
+    """Binomial-tree compressed scatter (gZ-Scatter).
+
+    ``x_full``: (n*chunk,) — significant on the root rank only.  Each of the
+    N chunks is compressed *individually* (compressed streams are not
+    splittable — paper §3.3.4), in ONE batched quantize call: the
+    multi-stream analog.  Blocks travel compressed through the tree and are
+    decompressed exactly once by their final owner.  Back-compat wrapper
+    over the one-shot communicator.
+    """
+    res = _comm_for(axis_name, cfg).scatter(x_full, root=root)
+    return (res.value, res.overflow) if return_info else res.value
+
+
 def gz_all_to_all(x: jnp.ndarray, axis_name, cfg: GZConfig = GZConfig()):
     """Compressed all-to-all (beyond-paper; motivated by the MoE-dispatch
     ablation in benchmarks/moe_a2a_ablation.py).
@@ -940,19 +970,19 @@ def gz_all_to_all(x: jnp.ndarray, axis_name, cfg: GZConfig = GZConfig()):
     decompresses what it received.  Exactly one lossy hop per element.
     Returns (n*chunk, ...) with the received chunks stacked in rank order.
 
-    Differentiable via custom_vjp: this rank-exchange layout is
-    self-inverse (chunk r of rank p lands at rank r, slot p), so the
-    transpose is the same exchange applied to the cotangent — compressed
-    too, straight-through the quantizer.
+    Differentiable (straight-through the quantizer): the rank-exchange
+    layout is self-inverse, so the transpose is the same compressed
+    exchange applied to the cotangent — the custom_vjp lives on the
+    plan-dispatched ``comm._a2a_planned``.  Back-compat wrapper over the
+    one-shot communicator; ``comm.all_to_all`` also reports overflow/wire
+    stats via ``CollectiveResult``.
     """
-    out, _ = _gz_all_to_all_impl(x, axis_name, cfg)
-    return out
+    return _comm_for(axis_name, cfg).all_to_all(x).value
 
 
-def _gz_all_to_all_impl(x, axis_name, cfg, return_info: bool = True):
+def _execute_all_to_all(x, axis_name, cfg: GZConfig):
+    """EXECUTE layer for the compressed rank exchange (one lossy hop)."""
     n = _axis_size(axis_name)
-    if n == 1:
-        return x, jnp.zeros((), jnp.bool_)
     assert x.shape[0] % n == 0
     shape, dtype = x.shape, x.dtype
     chunk_rows = x.shape[0] // n
@@ -996,30 +1026,9 @@ def _gz_all_to_all_impl(x, axis_name, cfg, return_info: bool = True):
     return out, ovf
 
 
-def _gz_a2a_fwd(x, axis_name, cfg):
-    return gz_all_to_all(x, axis_name, cfg), None
-
-
-def _gz_a2a_bwd(axis_name, cfg, _, g):
-    return (gz_all_to_all(g, axis_name, cfg),)
-
-
-gz_all_to_all.defvjp(_gz_a2a_fwd, _gz_a2a_bwd)
-
-
-def gz_broadcast(
-    x: jnp.ndarray,
-    axis_name,
-    cfg: GZConfig = GZConfig(),
-    *,
-    root: int = 0,
-    return_info: bool = False,
-):
-    """Binomial-tree compressed broadcast: compress once at root, forward
-    the compressed stream down the tree, decompress once per rank."""
+def _execute_broadcast(x, axis_name, cfg: GZConfig, *, root: int = 0):
+    """EXECUTE layer for the binomial-tree broadcast (concrete schedule)."""
     n = _axis_size(axis_name)
-    if n == 1:
-        return (x, jnp.zeros((), jnp.bool_)) if return_info else x
     assert _is_pow2(n) and root == 0
     comp = cfg.compressor()
     r = lax.axis_index(axis_name)
@@ -1035,5 +1044,19 @@ def gz_broadcast(
         c_recv = _ppermute(c, axis_name, perm)
         has = (r % (span * 2)) == span
         c = jax.tree.map(lambda new, old: jnp.where(has, new, old), c_recv, c)
-    out = comp.decompress(c).reshape(shape).astype(dtype)
-    return (out, _or_across(ovf, axis_name)) if return_info else out
+    return comp.decompress(c).reshape(shape).astype(dtype), ovf
+
+
+def gz_broadcast(
+    x: jnp.ndarray,
+    axis_name,
+    cfg: GZConfig = GZConfig(),
+    *,
+    root: int = 0,
+    return_info: bool = False,
+):
+    """Binomial-tree compressed broadcast: compress once at root, forward
+    the compressed stream down the tree, decompress once per rank.
+    Back-compat wrapper over the one-shot communicator."""
+    res = _comm_for(axis_name, cfg).broadcast(x, root=root)
+    return (res.value, res.overflow) if return_info else res.value

@@ -1,0 +1,826 @@
+"""Plan-then-execute communicator surface for the gZ collectives.
+
+The paper's §3 premise is that compression-accelerated collectives are a
+*framework*: one place coordinates algorithm choice, overlap depth, and
+accuracy-aware per-stage error budgets.  Before this module that
+coordination was smeared across call sites — every ``gz_*`` call
+re-derived its plan at trace time and callers hand-assembled ``GZConfig``
+knob-bags.  ZCCL frames exactly this as a communicator-level concern, and
+NCCLZ argues for a plan-then-execute surface rather than per-call knobs;
+this module is that surface for the shard_map collectives:
+
+  * :class:`GZCommunicator` binds ONE mesh axis (name + size) and the
+    static knobs (eb, capacity, policy, hardware model) once.
+  * ``comm.plan(op, shape, dtype)`` resolves a frozen, hashable
+    :class:`Plan` — concrete algorithm, pipeline depth, per-stage eb,
+    capacity words, provisioned wire bytes — OUTSIDE the traced region,
+    memoized module-wide per ``(op, nbytes, dtype, axis_size, eb)`` plus
+    the policy knobs.  Repeated jitted calls (and re-traces) hit the
+    cache; the cost model runs exactly once per distinct key.
+  * The collectives are methods (``allreduce``/``reduce_scatter``/
+    ``allgather``/``scatter``/``broadcast``/``all_to_all``) that dispatch
+    on the Plan with zero in-trace selector logic, and every one of them
+    returns the same :class:`CollectiveResult` stats channel — no more
+    ``return_info: bool`` tuple convention.
+
+Static vs traced (DESIGN.md §5): everything in a ``Plan`` is static
+Python — algorithm strings, chunk counts, byte counts, floats.  The only
+traced values are the payload itself and the ``CollectiveResult.overflow``
+flag (a global OR across the axis, one scalar psum).  Plans can therefore
+be resolved eagerly outside ``jit``, closed over, or resolved lazily at
+trace time — either way the resolution is a dict lookup after the first
+call.
+
+Policies (the registry is extensible via :func:`register_policy`):
+
+  ``auto``        cost-model selection under the production (fused-hop,
+                  chunked double-buffered) schedules; ring gets its
+                  pipeline depth from ``best_pipeline_chunks`` capped by
+                  what the payload can fill.  The default, and exactly
+                  what ``gz_allreduce(algo="auto")`` always did.
+  ``paper``       the paper's §3.3.3 selector: ring vs recursive doubling
+                  under the two-kernel multi-stream cost models,
+                  sequential schedule — reproduces the published
+                  crossover.
+  ``throughput``  like ``auto`` but also allowed to pick the
+                  beyond-paper integer ring when it models fastest.
+  ``accuracy``    the bitwise-rank-consistent integer ring (single
+                  quantization grid, no stacked requantization noise)
+                  regardless of modeled speed.
+
+Calibration: :func:`fit_hardware` fits ``cost_model.Hardware`` codec
+parameters (throughput + per-invocation overhead) from measured
+``(size, seconds)`` samples — ``measure_codec`` produces them with the
+same timing discipline as the microbenchmark suite — and
+``comm.calibrate()`` returns a communicator whose plans use the fitted
+model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model, error_budget
+from repro.core.compressed import capacity_words_for
+from repro.kernels import ops
+
+__all__ = [
+    "Plan",
+    "CollectiveResult",
+    "GZCommunicator",
+    "register_policy",
+    "policy_names",
+    "plan_cache_stats",
+    "clear_plan_cache",
+    "fit_hardware",
+    "measure_codec",
+]
+
+OPS = (
+    "allreduce",
+    "reduce_scatter",
+    "allgather",
+    "scatter",
+    "broadcast",
+    "all_to_all",
+)
+
+# Fixed algorithm per data-movement op (only allreduce has a real choice).
+_OP_ALGO = {
+    "reduce_scatter": "ring",
+    "allgather": "ring",
+    "scatter": "binomial",
+    "broadcast": "binomial",
+    "all_to_all": "direct",
+}
+
+
+# ---------------------------------------------------------------------------
+# Plan & CollectiveResult
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A frozen, hashable execution plan for one collective call.
+
+    Every field is static Python (hashable — the plan is a valid
+    ``custom_vjp`` nondiff argument and a valid dict key).  ``eb_stage``,
+    ``capacity_words``, ``wire_bytes`` and ``ratio`` are *derived*
+    observability fields: execution re-derives the same quantities from
+    the same inputs (single source of truth is ``error_budget`` /
+    ``capacity_words_for``), so a Plan can never disagree with what runs.
+    """
+
+    op: str               # one of OPS
+    algo: str             # concrete algorithm — never "auto"
+    n_elems: int          # flat f32 element count of the per-rank payload
+    nbytes: int           # n_elems * 4 (collectives run on the f32 view)
+    dtype: str            # caller dtype (cast back on the way out)
+    axis_size: int
+    eb: float             # end-to-end absolute error bound
+    eb_stage: float       # per-stage bound from error_budget.allocate
+    pipeline_chunks: int  # concrete depth (>= 1)
+    fused: bool
+    fused_hop: bool
+    capacity_factor: float
+    worst_case_budget: bool
+    capacity_words: int   # provisioned uint32 words per wire stream
+    wire_bytes: int       # provisioned bytes shipped per rank (upper bound)
+    ratio: float          # uncompressed-equivalent bytes / wire_bytes
+    policy: str
+
+    def as_config(self):
+        """The concrete GZConfig the execute layer dispatches on."""
+        from repro.core.collectives import GZConfig
+
+        return GZConfig(
+            eb=self.eb,
+            capacity_factor=self.capacity_factor,
+            algo=self.algo,
+            worst_case_budget=self.worst_case_budget,
+            pipeline_chunks=self.pipeline_chunks,
+            fused=self.fused,
+            fused_hop=self.fused_hop,
+        )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CollectiveResult:
+    """Uniform result-and-stats channel of every communicator method.
+
+    ``value``/``overflow`` are traced; ``wire_bytes``/``ratio`` are static
+    (pytree aux data) so the container flows through ``jit``/``shard_map``
+    like a 2-leaf pytree.
+
+    ``overflow`` is the global OR across the axis ("did any piece of any
+    hop anywhere exceed its provisioned capacity") — the per-rank local
+    flag alone can be silently False on a rank whose *received* data was
+    truncated elsewhere.
+
+    ``wire_bytes`` is the statically provisioned payload a rank ships for
+    the whole collective (XLA moves provisioned capacity, not the ragged
+    true stream — DESIGN.md §2.1); ``ratio`` is the uncompressed
+    equivalent divided by that, i.e. the wire reduction this plan achieves
+    on the static-shape transport.
+    """
+
+    value: jnp.ndarray
+    overflow: jnp.ndarray
+    wire_bytes: int = dataclasses.field(metadata=dict(static=True))
+    ratio: float = dataclasses.field(metadata=dict(static=True))
+
+    def astuple(self):
+        return self.value, self.overflow, self.wire_bytes, self.ratio
+
+
+# ---------------------------------------------------------------------------
+# Provisioned wire accounting (static, from the plan inputs alone)
+# ---------------------------------------------------------------------------
+
+
+def _stream_bytes(n_elems: int, capacity_factor: float) -> int:
+    """Wire bytes of one provisioned ``Compressed`` stream for n f32."""
+    cap = capacity_words_for(n_elems, capacity_factor, ops.BLOCK)
+    n_blocks = ops.n_blocks_for(n_elems)
+    return cap * 4 + 2 * n_blocks * 4 + 8  # packed + bitwidth + anchor + meta
+
+
+def _int_stream_bytes(n_elems_padded: int, capacity_factor: float) -> int:
+    """intring hop payload: packed codes + per-block bitwidth + anchor.
+
+    ``n_elems_padded`` must already be whole blocks (the execute layer
+    pads each chunk to whole row-tiles before quantizing)."""
+    cap = capacity_words_for(n_elems_padded, capacity_factor, ops.BLOCK)
+    rows = n_elems_padded // ops.BLOCK
+    return cap * 4 + 2 * rows * 4
+
+
+# Elements per compressor row-tile — the pipelined schedules' piece quantum
+# (same constant as collectives.PIECE_QUANTUM; duplicated here to keep the
+# module import-cycle-free).
+_PIECE_QUANTUM = ops.BLOCK * ops.TILE_ROWS
+
+
+def _ring_piece_sizes(n_elems, n, chunks):
+    """(chunk, piece) the ring schedules actually run: pipelined rings pad
+    the payload so each of the n chunks is `chunks` whole-tile pieces
+    (collectives._pad_for_pipeline)."""
+    p = max(chunks, 1)
+    if p > 1:
+        quantum = n * p * _PIECE_QUANTUM
+        total = -(-n_elems // quantum) * quantum
+        return total // n, total // (n * p)
+    chunk = -(-n_elems // n)
+    return chunk, chunk
+
+
+def _wire_accounting(op, algo, n_elems, n, capacity_factor, chunks):
+    """(capacity_words, wire_bytes, uncompressed_bytes) for one call.
+
+    Per-rank send bytes, upper bound (tree collectives report the busiest
+    rank).  Mirrors the hop structure AND the padding of the execute layer
+    in core/collectives.py — including the pipelined schedules'
+    whole-tile piece quantum — so the reported provisioning matches the
+    buffers XLA actually ships.  ``raw`` is the uncompressed-equivalent
+    payload (no padding): what the lax.* collective would move.
+    """
+    p = max(chunks, 1)
+    if op == "allreduce":
+        if algo == "redoub":
+            steps = max(int(math.log2(max(n, 2))), 1)
+            cap = capacity_words_for(n_elems, capacity_factor, ops.BLOCK)
+            wire = steps * _stream_bytes(n_elems, capacity_factor)
+            raw = steps * n_elems * 4
+            return cap, wire, raw
+        if algo == "intring":
+            # execute pads each chunk to whole row-tiles of int codes
+            chunk = ops.n_blocks_for(-(-n_elems // n)) * ops.BLOCK
+            cap = capacity_words_for(chunk, capacity_factor, ops.BLOCK)
+            wire = 2 * (n - 1) * _int_stream_bytes(chunk, capacity_factor)
+            raw = 2 * (n - 1) * (-(-n_elems // n)) * 4
+            return cap, wire, raw
+        chunk, piece = _ring_piece_sizes(n_elems, n, chunks)
+        cap = capacity_words_for(piece, capacity_factor, ops.BLOCK)
+        wire = 2 * (n - 1) * p * _stream_bytes(piece, capacity_factor)
+        raw = 2 * (n - 1) * (-(-n_elems // n)) * 4
+        return cap, wire, raw
+    if op == "reduce_scatter":
+        chunk_in = -(-n_elems // n)
+        if p > 1:  # execute pads each chunk to p whole-tile pieces
+            quantum = p * _PIECE_QUANTUM
+            piece = (-(-chunk_in // quantum) * quantum) // p
+        else:
+            piece = chunk_in
+        cap = capacity_words_for(piece, capacity_factor, ops.BLOCK)
+        wire = (n - 1) * p * _stream_bytes(piece, capacity_factor)
+        raw = (n - 1) * chunk_in * 4
+        return cap, wire, raw
+    if op == "allgather":
+        if p > 1:  # execute pads the own chunk to p whole-tile pieces
+            quantum = p * _PIECE_QUANTUM
+            piece = (-(-n_elems // quantum) * quantum) // p
+        else:
+            piece = n_elems
+        cap = capacity_words_for(piece, capacity_factor, ops.BLOCK)
+        wire = (n - 1) * p * _stream_bytes(piece, capacity_factor)
+        raw = (n - 1) * n_elems * 4
+        return cap, wire, raw
+    if op == "scatter":
+        chunk = -(-n_elems // n)
+        cap = capacity_words_for(chunk, capacity_factor, ops.BLOCK)
+        wire = (n - 1) * _stream_bytes(chunk, capacity_factor)  # root's sends
+        raw = (n - 1) * chunk * 4
+        return cap, wire, raw
+    if op == "broadcast":
+        steps = max(int(math.log2(max(n, 2))), 1)
+        cap = capacity_words_for(n_elems, capacity_factor, ops.BLOCK)
+        wire = steps * _stream_bytes(n_elems, capacity_factor)  # root's sends
+        raw = steps * n_elems * 4
+        return cap, wire, raw
+    if op == "all_to_all":
+        chunk = -(-n_elems // n)
+        cap = capacity_words_for(chunk, capacity_factor, ops.BLOCK)
+        wire = n * _stream_bytes(chunk, capacity_factor)
+        raw = n * chunk * 4
+        return cap, wire, raw
+    raise ValueError(f"unknown op {op!r}")
+
+
+def _eb_stage(op, algo, eb, n, worst_case):
+    if op == "allreduce":
+        if algo == "intring":
+            return eb  # single quantization grid; n addends share it
+        key = f"allreduce_{algo}"
+        return error_budget.allocate(eb, key, n, worst_case=worst_case)
+    if op == "reduce_scatter":
+        return error_budget.allocate(
+            eb, "reduce_scatter_ring", n, worst_case=worst_case
+        )
+    return eb  # data-movement ops: exactly one lossy hop
+
+
+# ---------------------------------------------------------------------------
+# Policy registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanRequest:
+    """Everything a policy may inspect when choosing (algo, chunks)."""
+
+    op: str
+    n_elems: int
+    nbytes: int
+    axis_size: int
+    requested_algo: Optional[str]  # None == "pick for me"
+    requested_chunks: int          # 0 == "plan the ring depth for me"
+    fused_hop: bool
+    ratio: float                   # assumed compression ratio for costing
+    hw: cost_model.Hardware
+
+
+PolicyFn = Callable[[PlanRequest], tuple]
+_POLICIES: dict = {}
+
+
+def register_policy(name: str, fn: PolicyFn) -> None:
+    """Add/replace a named plan policy: fn(PlanRequest) -> (algo, chunks)."""
+    _POLICIES[name] = fn
+
+
+def policy_names() -> tuple:
+    return tuple(sorted(_POLICIES))
+
+
+def _ring_depth(req: PlanRequest) -> int:
+    from repro.core.collectives import plan_ring_pipeline_chunks
+
+    return plan_ring_pipeline_chunks(
+        req.n_elems, req.axis_size, ratio=req.ratio, hw=req.hw,
+        fused_hop=req.fused_hop,
+    )
+
+
+def _policy_auto(req: PlanRequest):
+    """Production default — the selection gz_allreduce(algo="auto") ran.
+
+    Algorithm from the fused-hop chunked cost model; ring pipeline depth
+    from ``best_pipeline_chunks`` capped by whole-tile fill.  An explicit
+    requested algo or depth is always honored; ``requested_chunks == 0``
+    asks for the planned ring depth even under an explicit ring (the
+    grad-sync routing convention).
+    """
+    if req.op != "allreduce":
+        return _OP_ALGO[req.op], max(req.requested_chunks, 1)
+    algo, chunks = req.requested_algo, req.requested_chunks
+    if algo is None:
+        from repro.core.selector import select_allreduce_plan
+
+        algo, _ = select_allreduce_plan(
+            req.nbytes, req.axis_size, req.ratio, req.hw,
+            fused_hop=req.fused_hop,
+        )
+        if algo == "ring" and chunks in (0, 1):
+            chunks = _ring_depth(req)
+    elif algo == "ring" and chunks == 0:
+        chunks = _ring_depth(req)
+    return algo, max(chunks, 1)
+
+
+def _policy_paper(req: PlanRequest):
+    """The paper's §3.3.3 crossover: two-kernel cost models, sequential
+    schedule — what the published figures compare."""
+    if req.op != "allreduce":
+        return _OP_ALGO[req.op], max(req.requested_chunks, 1)
+    algo = req.requested_algo
+    if algo is None:
+        from repro.core.selector import select_allreduce
+
+        algo = select_allreduce(req.nbytes, req.axis_size, req.ratio, req.hw)
+    return algo, max(req.requested_chunks, 1)
+
+
+def _policy_throughput(req: PlanRequest):
+    """Fastest modeled plan, beyond-paper algorithms allowed.
+
+    Same explicit-knob contract as ``auto``: a requested algorithm or
+    depth is honored verbatim; only ``requested_chunks == 0`` (or an
+    auto-resolved ring at the default depth) triggers depth planning.
+    """
+    if req.op != "allreduce":
+        return _OP_ALGO[req.op], max(req.requested_chunks, 1)
+    algo, chunks = req.requested_algo, req.requested_chunks
+    if algo is None:
+        from repro.core.selector import select_allreduce_plan
+
+        algo, _ = select_allreduce_plan(
+            req.nbytes, req.axis_size, req.ratio, req.hw,
+            allow_beyond_paper=True, fused_hop=req.fused_hop,
+        )
+        if algo == "ring" and chunks in (0, 1):
+            chunks = _ring_depth(req)
+    elif algo == "ring" and chunks == 0:
+        chunks = _ring_depth(req)
+    return algo, max(chunks, 1)
+
+
+def _policy_accuracy(req: PlanRequest):
+    """Bitwise rank-consistent integer ring: one quantization grid, no
+    stacked requantization noise (core/collectives.py consistency note)."""
+    if req.op != "allreduce":
+        return _OP_ALGO[req.op], max(req.requested_chunks, 1)
+    return req.requested_algo or "intring", max(req.requested_chunks, 1)
+
+
+register_policy("auto", _policy_auto)
+register_policy("paper", _policy_paper)
+register_policy("throughput", _policy_throughput)
+register_policy("accuracy", _policy_accuracy)
+
+
+# ---------------------------------------------------------------------------
+# Memoized plan resolution
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: dict = {}
+_PLAN_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_stats() -> dict:
+    """{'hits', 'misses', 'entries', 'keys'} — observability for tests and
+    the acceptance criterion "exactly one cache entry per distinct
+    (op, nbytes, dtype, axis_size, eb)"."""
+    return {
+        "hits": _PLAN_STATS["hits"],
+        "misses": _PLAN_STATS["misses"],
+        "entries": len(_PLAN_CACHE),
+        "keys": tuple(_PLAN_CACHE),
+    }
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+    _COMM_CACHE.clear()  # the memoized one-shot communicators, too
+    _PLAN_STATS["hits"] = 0
+    _PLAN_STATS["misses"] = 0
+
+
+def _resolve_plan(
+    op, n_elems, dtype, axis_size, eb, *, policy, requested_algo,
+    requested_chunks, capacity_factor, worst_case_budget, fused, fused_hop,
+    ratio, hw,
+) -> Plan:
+    key = (
+        # The canonical identity of a plan...
+        op, n_elems * 4, str(dtype), axis_size, eb,
+        # ...plus the communicator knobs that parameterize resolution.
+        policy, requested_algo, requested_chunks, capacity_factor,
+        worst_case_budget, fused, fused_hop, ratio, hw,
+    )
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None:
+        _PLAN_STATS["hits"] += 1
+        return hit
+    _PLAN_STATS["misses"] += 1
+    if op not in OPS:
+        raise ValueError(f"unknown collective op {op!r}")
+    try:
+        policy_fn = _POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {policy!r}; registered: {policy_names()}"
+        ) from None
+    req = PlanRequest(
+        op=op, n_elems=n_elems, nbytes=n_elems * 4, axis_size=axis_size,
+        requested_algo=requested_algo, requested_chunks=requested_chunks,
+        fused_hop=fused_hop, ratio=ratio, hw=hw,
+    )
+    algo, chunks = policy_fn(req)
+    cap, wire, raw = _wire_accounting(
+        op, algo, n_elems, axis_size, capacity_factor, chunks
+    )
+    plan = Plan(
+        op=op, algo=algo, n_elems=n_elems, nbytes=n_elems * 4,
+        dtype=str(dtype), axis_size=axis_size, eb=eb,
+        eb_stage=_eb_stage(op, algo, eb, axis_size, worst_case_budget),
+        pipeline_chunks=chunks, fused=fused, fused_hop=fused_hop,
+        capacity_factor=capacity_factor, worst_case_budget=worst_case_budget,
+        capacity_words=cap, wire_bytes=wire,
+        ratio=(raw / wire) if wire else 1.0, policy=policy,
+    )
+    _PLAN_CACHE[key] = plan
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Differentiable all-to-all on a frozen plan
+# ---------------------------------------------------------------------------
+#
+# The rank-exchange layout is self-inverse (chunk r of rank p lands at rank
+# r, slot p), so the transpose is the same exchange applied to the
+# cotangent — compressed too, straight-through the quantizer.  The Plan is
+# hashable, hence a valid nondiff argument.
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _a2a_planned(x, axis_name, plan: Plan):
+    from repro.core.collectives import _execute_all_to_all
+
+    return _execute_all_to_all(x, axis_name, plan.as_config())
+
+
+def _a2a_planned_fwd(x, axis_name, plan):
+    return _a2a_planned(x, axis_name, plan), None
+
+
+def _a2a_planned_bwd(axis_name, plan, _, g):
+    g_out, _g_ovf = g
+    return (_a2a_planned(g_out, axis_name, plan)[0],)
+
+
+_a2a_planned.defvjp(_a2a_planned_fwd, _a2a_planned_bwd)
+
+
+# ---------------------------------------------------------------------------
+# The communicator
+# ---------------------------------------------------------------------------
+
+
+class GZCommunicator:
+    """Resolve-once communicator bound to one mesh axis.
+
+    Construct OUTSIDE the traced region with the static knobs; call the
+    collective methods inside shard_map bodies.  ``axis_size`` may be
+    passed explicitly (e.g. from the mesh shape) or left None to be read
+    from the surrounding shard_map trace on first use — axis sizes are
+    static either way, so plan resolution never touches a tracer.
+
+    ``config`` is the same knob dataclass the legacy wrappers take
+    (``GZConfig``): eb, capacity_factor, algo (``"auto"`` delegates to
+    the policy), worst_case_budget, pipeline_chunks, fused, fused_hop.
+    """
+
+    def __init__(
+        self,
+        axis_name,
+        *,
+        config=None,
+        policy: str = "auto",
+        hw: cost_model.Hardware = cost_model.TPU_V5E,
+        ratio: float = 20.0,
+        axis_size: Optional[int] = None,
+        _auto_depth: bool = False,
+    ):
+        from repro.core.collectives import GZConfig
+
+        self.axis_name = axis_name
+        self.config = config if config is not None else GZConfig()
+        if policy not in _POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; registered: {policy_names()}"
+            )
+        self.policy = policy
+        self.hw = hw
+        self.ratio = ratio
+        self._axis_size = axis_size
+        # grad-sync routing convention: ring depth is planned even when the
+        # algorithm was requested explicitly (requested_chunks == 0).
+        self._auto_depth = _auto_depth
+
+    # -- construction helpers ------------------------------------------------
+
+    @classmethod
+    def for_config(cls, axis_name, config, *, policy: str = "auto",
+                   hw: cost_model.Hardware = cost_model.TPU_V5E,
+                   ratio: float = 20.0, axis_size: Optional[int] = None,
+                   auto_depth: bool = False) -> "GZCommunicator":
+        """Memoized one-shot communicator — the legacy ``gz_*`` wrappers'
+        entry point (one instance per distinct (axis, knobs))."""
+        return _communicator_cache(
+            cls, axis_name, config, policy, hw, ratio, axis_size, auto_depth
+        )
+
+    def calibrate(self, *, sizes=(1 << 16, 1 << 18, 1 << 20), reps: int = 3,
+                  interpret: Optional[bool] = None) -> "GZCommunicator":
+        """Return a communicator whose cost model is fitted to THIS host.
+
+        Times the actual codec (``measure_codec``) at ``sizes`` elements
+        and least-squares-fits the Hardware throughput/overhead terms the
+        planner evaluates.  Network terms are kept from the current model
+        (they need a multi-host fabric to measure).
+        """
+        samples_c, samples_d = measure_codec(
+            self.config, sizes=sizes, reps=reps, interpret=interpret
+        )
+        hw = fit_hardware(samples_c, samples_d, base=self.hw)
+        return GZCommunicator(
+            self.axis_name, config=self.config, policy=self.policy, hw=hw,
+            ratio=self.ratio, axis_size=self._axis_size,
+            _auto_depth=self._auto_depth,
+        )
+
+    # -- plan resolution -----------------------------------------------------
+
+    def axis_size(self) -> int:
+        """Static axis size: the bound value, or — when constructed with
+        ``axis_size=None`` — the size read fresh from the surrounding
+        shard_map trace at every call.  Never cached on the instance: a
+        memoized ``for_config`` communicator outlives any one mesh, and
+        the same axis name can be bound to different sizes across traces
+        in one process."""
+        if self._axis_size is not None:
+            return self._axis_size
+        from repro.core.collectives import _axis_size
+
+        return int(_axis_size(self.axis_name))
+
+    def plan(self, op: str, shape, dtype=jnp.float32) -> Plan:
+        """Resolve the frozen Plan for ``op`` over a payload of ``shape``.
+
+        ``shape`` is a shape tuple or an element count; resolution is a
+        cache lookup after the first call with a given key (see
+        :func:`plan_cache_stats`).
+        """
+        n_elems = int(np.prod(shape)) if not isinstance(shape, int) else shape
+        cfg = self.config
+        requested_algo = None if cfg.algo == "auto" else cfg.algo
+        requested_chunks = cfg.pipeline_chunks
+        if self._auto_depth and requested_chunks == 1:
+            requested_chunks = 0
+        return _resolve_plan(
+            op, n_elems, jnp.dtype(dtype).name, self.axis_size(), cfg.eb,
+            policy=self.policy, requested_algo=requested_algo,
+            requested_chunks=requested_chunks,
+            capacity_factor=cfg.capacity_factor,
+            worst_case_budget=cfg.worst_case_budget, fused=cfg.fused,
+            fused_hop=cfg.fused_hop, ratio=self.ratio, hw=self.hw,
+        )
+
+    # -- collectives ---------------------------------------------------------
+
+    def _trivial(self, x) -> CollectiveResult:
+        return CollectiveResult(x, jnp.zeros((), jnp.bool_), 0, 1.0)
+
+    def _result(self, out, ovf, plan: Plan) -> CollectiveResult:
+        from repro.core.collectives import _or_across
+
+        return CollectiveResult(
+            out, _or_across(ovf, self.axis_name), plan.wire_bytes, plan.ratio
+        )
+
+    def allreduce(self, x, *, plan: Optional[Plan] = None) -> CollectiveResult:
+        """Compressed sum-allreduce of ``x`` over the bound axis."""
+        if self.axis_size() == 1:
+            return self._trivial(x)
+        plan = plan or self.plan("allreduce", x.shape, x.dtype)
+        from repro.core.collectives import _execute_allreduce
+
+        out, ovf = _execute_allreduce(x, self.axis_name, plan.as_config())
+        return self._result(out, ovf, plan)
+
+    def reduce_scatter(self, x, *, plan: Optional[Plan] = None) -> CollectiveResult:
+        """Ring reduce-scatter: rank r returns summed chunk r (flat view)."""
+        if self.axis_size() == 1:
+            return self._trivial(x)
+        plan = plan or self.plan("reduce_scatter", x.shape, x.dtype)
+        from repro.core.collectives import _execute_reduce_scatter
+
+        out, ovf = _execute_reduce_scatter(x, self.axis_name, plan.as_config())
+        return self._result(out, ovf, plan)
+
+    def allgather(self, x, *, plan: Optional[Plan] = None) -> CollectiveResult:
+        """Ring allgather: compress once, forward compressed N-1 times."""
+        if self.axis_size() == 1:
+            return self._trivial(x)
+        plan = plan or self.plan("allgather", x.shape, x.dtype)
+        from repro.core.collectives import _execute_allgather
+
+        out, ovf = _execute_allgather(x, self.axis_name, plan.as_config())
+        return self._result(out, ovf, plan)
+
+    def scatter(self, x_full, *, root: int = 0,
+                plan: Optional[Plan] = None) -> CollectiveResult:
+        """Binomial-tree compressed scatter from ``root`` (root 0 only)."""
+        if self.axis_size() == 1:
+            return self._trivial(x_full)
+        plan = plan or self.plan("scatter", x_full.shape, x_full.dtype)
+        from repro.core.collectives import _execute_scatter
+
+        out, ovf = _execute_scatter(
+            x_full, self.axis_name, plan.as_config(), root=root
+        )
+        return self._result(out, ovf, plan)
+
+    def broadcast(self, x, *, root: int = 0,
+                  plan: Optional[Plan] = None) -> CollectiveResult:
+        """Binomial-tree broadcast: compress once at root."""
+        if self.axis_size() == 1:
+            return self._trivial(x)
+        plan = plan or self.plan("broadcast", x.shape, x.dtype)
+        from repro.core.collectives import _execute_broadcast
+
+        out, ovf = _execute_broadcast(
+            x, self.axis_name, plan.as_config(), root=root
+        )
+        return self._result(out, ovf, plan)
+
+    def all_to_all(self, x, *, plan: Optional[Plan] = None) -> CollectiveResult:
+        """Compressed rank-exchange; differentiable (straight-through the
+        quantizer, compressed cotangent — see ``_a2a_planned``)."""
+        if self.axis_size() == 1:
+            return self._trivial(x)
+        plan = plan or self.plan("all_to_all", x.shape, x.dtype)
+        out, ovf = _a2a_planned(x, self.axis_name, plan)
+        return self._result(out, ovf, plan)
+
+    def __repr__(self):
+        return (
+            f"GZCommunicator(axis={self.axis_name!r}, n={self._axis_size}, "
+            f"policy={self.policy!r}, eb={self.config.eb}, hw={self.hw.name})"
+        )
+
+
+def _communicator_cache(cls, axis_name, config, policy, hw, ratio, axis_size,
+                        auto_depth):
+    key = (cls, axis_name, config, policy, hw, ratio, axis_size, auto_depth)
+    comm = _COMM_CACHE.get(key)
+    if comm is None:
+        comm = cls(
+            axis_name, config=config, policy=policy, hw=hw, ratio=ratio,
+            axis_size=axis_size, _auto_depth=auto_depth,
+        )
+        _COMM_CACHE[key] = comm
+    return comm
+
+
+_COMM_CACHE: dict = {}
+
+
+# ---------------------------------------------------------------------------
+# Calibration: fit cost_model.Hardware from measured codec timings
+# ---------------------------------------------------------------------------
+#
+# t(size) = overhead + size / (peak * util(size)), util(s) = s/(s+sat)
+#         = (overhead + sat_bytes/peak) + size/peak            [linear!]
+# so a least-squares line through (size, seconds) gives peak = 1/slope and
+# overhead = intercept - sat_bytes/peak, with the saturation knee kept
+# from the base model (separating knee from overhead needs sub-knee
+# resolution that timing noise on small inputs does not give).
+
+
+def fit_hardware(samples_compress, samples_decompress=None, *,
+                 base: cost_model.Hardware = cost_model.TPU_V5E,
+                 name: Optional[str] = None) -> cost_model.Hardware:
+    """Fit codec throughput/overhead from ``[(size_bytes, seconds), ...]``.
+
+    Returns a new ``Hardware`` with ``cmp_peak_gbps``/``cmp_overhead_us``
+    (and ``dec_peak_gbps`` when decompress samples are given) replaced by
+    the fitted values; network/reduce terms are inherited from ``base``.
+    """
+    def _fit(samples):
+        pts = np.asarray(sorted(samples), dtype=np.float64)
+        if pts.ndim != 2 or pts.shape[0] < 2:
+            raise ValueError("need >= 2 (size_bytes, seconds) samples")
+        slope, intercept = np.polyfit(pts[:, 0], pts[:, 1], 1)
+        peak = 1.0 / max(slope, 1e-18)  # bytes/s
+        sat_bytes = base.cmp_saturation_mb * 1e6
+        overhead_s = max(intercept - sat_bytes / peak, 0.0)
+        return peak * 8 / 1e9, overhead_s * 1e6  # (gbps, us)
+
+    cmp_gbps, cmp_us = _fit(samples_compress)
+    kw = dict(cmp_peak_gbps=cmp_gbps, cmp_overhead_us=cmp_us)
+    if samples_decompress:
+        dec_gbps, _ = _fit(samples_decompress)
+        kw["dec_peak_gbps"] = dec_gbps
+    return dataclasses.replace(
+        base, name=name or f"{base.name}-calibrated", **kw
+    )
+
+
+def measure_codec(config=None, *, sizes=(1 << 16, 1 << 18, 1 << 20),
+                  reps: int = 3, interpret: Optional[bool] = None):
+    """Time compress/decompress at ``sizes`` elements on this host.
+
+    Returns ``(samples_compress, samples_decompress)`` as
+    ``[(size_bytes, seconds), ...]`` — feed to :func:`fit_hardware`.  Uses
+    the min-of-reps discipline of benchmarks/benchutil.py (noise only ever
+    adds time).  ``interpret`` is accepted for symmetry with the kernel
+    entry points; the compressor picks its own mode per backend.
+    """
+    import time
+
+    from repro.core.collectives import GZConfig
+
+    cfg = config if config is not None else GZConfig()
+    comp = cfg.compressor()
+    del interpret  # kernels select interpret mode from the backend
+
+    def _time(fn):
+        jax.block_until_ready(fn())
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    samples_c, samples_d = [], []
+    for n in sizes:
+        x = jnp.asarray(
+            np.cumsum(np.random.default_rng(0).normal(0, 0.01, n)),
+            jnp.float32,
+        )
+        compress = jax.jit(lambda v: comp.compress(v, cfg.eb))
+        c = compress(x)
+        samples_c.append((n * 4, _time(lambda: compress(x))))
+        decompress = jax.jit(comp.decompress)
+        samples_d.append((n * 4, _time(lambda: decompress(c))))
+    return samples_c, samples_d

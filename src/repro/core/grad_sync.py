@@ -12,6 +12,13 @@ Three entry points, all rank-centric (call inside shard_map bodies):
     with gZ error control.
   * ``fsdp_reduce_scatter``  — the standalone gradient-shard path.
 
+All compressed traffic goes through per-axis ``GZCommunicator``s
+(core/comm.py): the plan — algorithm, ring pipeline depth, per-stage eb —
+is resolved once per (op, bytes, axis) and memoized, so the scan body
+below contains zero selector logic.  ``SyncConfig.pipeline_chunks == 0``
+(the default) asks the communicator to plan the ring depth from the cost
+model; > 0 forces that depth.
+
 Gradients are scale-free, so the error bound can be made *relative*: with
 ``relative_eb=True`` the absolute eb is eb * global RMS of the tensor
 (one scalar psum — cheap, and identical on every rank so quantization
@@ -33,13 +40,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.flatten_util import ravel_pytree
 
-from repro.core.collectives import (
-    GZConfig,
-    _axis_size,
-    gz_allgather,
-    gz_allreduce,
-    gz_reduce_scatter,
-)
+from repro.core.collectives import GZConfig, _axis_size
+from repro.core.comm import GZCommunicator
 
 __all__ = ["SyncConfig", "dp_allreduce_grads", "fsdp_all_gather", "fsdp_reduce_scatter"]
 
@@ -50,11 +52,11 @@ CHUNK = 4 * 1024 * 1024  # elements per compression call (f32: 16 MiB)
 class SyncConfig:
     """How gradients cross the wire.
 
-    ``pipeline_chunks``: 0 (default) auto-selects the ring pipeline depth
-    from the cost model per (chunk bytes, axis size) — the chunked
-    double-buffered schedule of DESIGN.md §4; > 0 forces that depth; the
-    knob is ignored by non-ring algorithms (redoub/intring take no chunk
-    schedule).
+    ``pipeline_chunks``: 0 (default) lets the communicator plan the ring
+    pipeline depth from the cost model per (chunk bytes, axis size) — the
+    chunked double-buffered schedule of DESIGN.md §4; > 0 forces that
+    depth; the knob is ignored by non-ring algorithms (redoub/intring
+    take no chunk schedule).
     """
 
     gz: GZConfig | None = GZConfig(eb=1e-4, algo="redoub", worst_case_budget=False)
@@ -63,23 +65,30 @@ class SyncConfig:
     pipeline_chunks: int = 0
 
     def with_algo(self, algo: str) -> "SyncConfig":
+        if self.gz is None:
+            raise ValueError(
+                "SyncConfig.with_algo: this SyncConfig has gz=None "
+                "(uncompressed psum sync) — there is no GZConfig to set an "
+                "algorithm on; construct one explicitly, e.g. "
+                "SyncConfig(gz=GZConfig(algo=...))"
+            )
         return dataclasses.replace(
             self, gz=dataclasses.replace(self.gz, algo=algo)
         )
 
 
-def _plan_cfg(cfg: GZConfig, sync: "SyncConfig", n_elems: int, ax) -> GZConfig:
-    """Resolve the per-axis pipeline depth for the gradient allreduce."""
-    if sync.pipeline_chunks > 0:
-        return dataclasses.replace(cfg, pipeline_chunks=sync.pipeline_chunks)
-    if cfg.algo == "ring" and cfg.pipeline_chunks == 1:
-        from repro.core.collectives import plan_ring_pipeline_chunks
+def _comm(axis_name, sync: "SyncConfig") -> GZCommunicator:
+    """The per-axis communicator for this sync policy (memoized).
 
-        chunks = plan_ring_pipeline_chunks(
-            n_elems, _axis_size(ax), fused_hop=cfg.fused_hop
-        )
-        return dataclasses.replace(cfg, pipeline_chunks=chunks)
-    return cfg  # "auto" plans inside gz_allreduce; explicit depth honored
+    A forced ``sync.pipeline_chunks`` is written into the knobs; otherwise
+    ``auto_depth`` asks the plan to pick the ring depth even when the
+    algorithm was requested explicitly (the grad-sync routing rule).
+    """
+    cfg = sync.gz
+    if sync.pipeline_chunks > 0:
+        cfg = dataclasses.replace(cfg, pipeline_chunks=sync.pipeline_chunks)
+        return GZCommunicator.for_config(axis_name, cfg)
+    return GZCommunicator.for_config(axis_name, cfg, auto_depth=True)
 
 
 def _global_rms(flat: jnp.ndarray, axis_names) -> jnp.ndarray:
@@ -96,7 +105,6 @@ def _allreduce_flat(flat: jnp.ndarray, axis_names, sync: SyncConfig) -> jnp.ndar
         for ax in axis_names:
             flat = lax.psum(flat, ax)
         return flat
-    cfg = sync.gz
     if sync.relative_eb:
         scale = jnp.maximum(_global_rms(flat, axis_names), 1e-30)
         # eb must be a static trace-time constant shape; keep it as a traced
@@ -106,11 +114,12 @@ def _allreduce_flat(flat: jnp.ndarray, axis_names, sync: SyncConfig) -> jnp.ndar
     chunk = min(sync.chunk, n)
     n_chunks = -(-n // chunk)
     padded = jnp.zeros((n_chunks * chunk,), flat.dtype).at[:n].set(flat)
+    comms = [_comm(ax, sync) for ax in axis_names]
 
     def body(carry, xc):
         out = xc
-        for ax in axis_names:  # hierarchical: data first, then pod
-            out = gz_allreduce(out, ax, _plan_cfg(cfg, sync, chunk, ax))
+        for comm in comms:  # hierarchical: data first, then pod
+            out = comm.allreduce(out).value
         return carry, out
 
     _, synced = lax.scan(body, (), padded.reshape(n_chunks, chunk))
@@ -153,7 +162,7 @@ def _fsdp_gather_impl(x, axis_name, sync):
         return lax.all_gather(x, axis_name, tiled=True)
     shape = x.shape
     flat = x.reshape(-1)
-    out = gz_allgather(flat.astype(jnp.float32), axis_name, sync.gz)
+    out = _comm(axis_name, sync).allgather(flat.astype(jnp.float32)).value
     n = _axis_size(axis_name)
     return out.astype(x.dtype).reshape((n * shape[0],) + shape[1:])
 
@@ -178,5 +187,5 @@ def fsdp_reduce_scatter(
     n = _axis_size(axis_name)
     shape = g.shape
     flat = g.astype(jnp.float32).reshape(n, -1).reshape(-1)
-    out = gz_reduce_scatter(flat, axis_name, sync.gz)
+    out = _comm(axis_name, sync).reduce_scatter(flat).value
     return out.astype(g.dtype).reshape((shape[0] // n,) + shape[1:])

@@ -42,10 +42,10 @@ def _opt_shapes(pshapes):
 
 def lower_cost(cfg, shape, mesh, *, grad_gz=None, fsdp_gz=None, remat="full",
                unroll: int = 1, want_mem: bool = False, fsdp: bool = True,
-               cache_dtype="float32") -> dict:
+               cache_dtype="float32", policy: str = "auto") -> dict:
     """Lower+compile one configuration; return raw cost terms."""
     setup = make_setup(cfg, mesh, grad_gz=grad_gz, fsdp_gz=fsdp_gz, remat=remat,
-                       fsdp=fsdp)
+                       fsdp=fsdp, grad_policy=policy)
     if unroll != 1:
         setup = dataclasses.replace(
             setup, ctx=dataclasses.replace(setup.ctx, scan_unroll=unroll)
@@ -91,7 +91,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             capacity_factor: float = 0.6, skip_correction: bool = False,
             fsdp: bool = True, mla_dense: bool = False,
             cache_dtype: str = "float32", parallel_block: bool = False,
-            loss_chunk: int = 0, moe_gz_eb: float = 0.0) -> dict:
+            loss_chunk: int = 0, moe_gz_eb: float = 0.0,
+            policy: str = "auto") -> dict:
     cfg = registry.get(arch)
     if mla_dense:
         cfg = dataclasses.replace(cfg, mla_chunk=0)
@@ -110,7 +111,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     fgz = GZConfig(eb=eb, algo="ring", capacity_factor=capacity_factor) \
         if fsdp_gz else None
     kw = dict(grad_gz=gz, fsdp_gz=fgz, remat=remat, fsdp=fsdp,
-              cache_dtype=cache_dtype)
+              cache_dtype=cache_dtype, policy=policy)
 
     main = lower_cost(cfg, shape, mesh, want_mem=True, **kw)
 
@@ -188,7 +189,11 @@ def main():
     ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--grad-gz", default=None,
-                    choices=["redoub", "ring", "intring"])
+                    choices=["auto", "redoub", "ring", "intring"])
+    ap.add_argument("--policy", default="auto",
+                    choices=["auto", "paper", "throughput", "accuracy"],
+                    help="communicator plan policy (core/comm.py) used "
+                         "when --grad-gz auto leaves the algorithm open")
     ap.add_argument("--fsdp-gz", action="store_true")
     ap.add_argument("--remat", default="full", choices=["full", "none"])
     ap.add_argument("--eb", type=float, default=1e-4)
@@ -217,7 +222,7 @@ def main():
         skip_correction=args.skip_correction, fsdp=not args.no_fsdp,
         mla_dense=args.mla_dense, cache_dtype=args.cache_dtype,
         parallel_block=args.parallel_block, loss_chunk=args.loss_chunk,
-        moe_gz_eb=args.moe_gz_eb,
+        moe_gz_eb=args.moe_gz_eb, policy=args.policy,
     )
     os.makedirs(args.out, exist_ok=True)
     mesh_tag = "multi" if args.multi_pod else "single"

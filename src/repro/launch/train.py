@@ -37,7 +37,11 @@ def train(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--grad-gz", default=None,
-                    choices=["redoub", "ring", "intring"])
+                    choices=["auto", "redoub", "ring", "intring"])
+    ap.add_argument("--policy", default="auto",
+                    choices=["auto", "paper", "throughput", "accuracy"],
+                    help="communicator plan policy when --grad-gz leaves "
+                         "the algorithm open (core/comm.py)")
     ap.add_argument("--eb", type=float, default=1e-4)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -57,7 +61,7 @@ def train(argv=None):
     gz = GZConfig(eb=args.eb, algo=args.grad_gz) if args.grad_gz else None
     opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
                       warmup_steps=max(args.steps // 20, 1))
-    setup = make_setup(cfg, mesh, opt=opt, grad_gz=gz)
+    setup = make_setup(cfg, mesh, opt=opt, grad_gz=gz, grad_policy=args.policy)
     shape = InputShape("cli", args.seq, args.batch, "train")
     _, bspecs = train_specs(cfg, shape, mesh)
     step_fn = make_train_step(setup, bspecs)

@@ -11,8 +11,9 @@ shard_map body over the production mesh:
     psum every grad leaf over each mesh axis ABSENT from its spec; the
     differentiated loss is pre-scaled by 1/(tp * n_dp) to cancel
     shard_map's sum-over-ranks semantics,
-  * cross-pod / small-leaf gradient reduction through gz_allreduce (the
-    paper's headline collective) when a GZConfig is set,
+  * cross-pod / small-leaf gradient reduction through per-axis
+    ``GZCommunicator``s (the paper's headline collective behind the
+    plan-then-execute surface of core/comm.py) when a GZConfig is set,
   * AdamW with sharded f32 moments.
 """
 from __future__ import annotations
@@ -26,7 +27,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.collectives import GZConfig, gz_allreduce
+from repro.core.collectives import GZConfig
+from repro.core.comm import GZCommunicator
 from repro.core.grad_sync import SyncConfig
 from repro.models.attention import KVCacheSpec
 from repro.models.config import ModelConfig
@@ -47,7 +49,11 @@ class TrainSetup:
     defs: dict
     specs: dict
     opt: AdamWConfig
-    grad_gz: Optional[GZConfig]  # gz for cross-pod/small-leaf grad allreduce
+    grad_gz: Optional[GZConfig]  # gz knobs for the dp-axis grad allreduce
+    # resolve-once communicators, one per data-parallel axis, bound to the
+    # mesh axis sizes at setup time (plan resolution is a cache hit inside
+    # the traced step body) — empty when gradient sync is plain psum
+    grad_comms: tuple = ()
 
     def opt_specs(self):
         return {
@@ -82,13 +88,26 @@ def make_setup(
     opt: AdamWConfig = AdamWConfig(),
     fsdp_gz: Optional[GZConfig] = None,
     grad_gz: Optional[GZConfig] = None,
+    grad_policy: str = "auto",
     remat: str = "full",
     fsdp: bool = True,
 ) -> TrainSetup:
     """``fsdp=False`` replicates parameters over the data axis (no per-layer
-    gathers) — the weights-resident serving mode (§Perf hillclimb 1)."""
+    gathers) — the weights-resident serving mode (§Perf hillclimb 1).
+
+    ``grad_policy`` names the communicator plan policy ("auto" | "paper" |
+    "throughput" | "accuracy" — core/comm.py) used when ``grad_gz`` leaves
+    the algorithm choice open.
+    """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     dp_axes = tuple(ax for ax in mesh.axis_names if ax in ("pod", "data"))
+    grad_comms = ()
+    if grad_gz is not None:
+        grad_comms = tuple(
+            (ax, GZCommunicator.for_config(
+                ax, grad_gz, policy=grad_policy, axis_size=sizes.get(ax, 1)))
+            for ax in dp_axes
+        )
     fsdp_sync = SyncConfig(gz=fsdp_gz, relative_eb=False) if fsdp_gz else None
     ctx = ParallelCtx(
         tp_axis="model",
@@ -110,6 +129,7 @@ def make_setup(
     return TrainSetup(
         cfg=cfg, ctx=ctx, model=model, mesh=mesh, defs=defs,
         specs=param_specs(defs), opt=opt, grad_gz=grad_gz,
+        grad_comms=grad_comms,
     )
 
 
@@ -117,11 +137,12 @@ def _axes_in_spec(spec: P) -> set:
     return set(jax.tree.leaves(tuple(spec)))
 
 
-def _sync_grads(grads, specs, mesh_axes, grad_gz: Optional[GZConfig]):
+def _sync_grads(grads, specs, mesh_axes, grad_comms: dict):
     """psum each leaf over every mesh axis absent from its spec.
 
-    With a GZConfig, reductions over dp axes ("pod"/"data") go through the
-    compressed gz_allreduce; the tiny "model"-axis cases stay psum.
+    Reductions over dp axes with a bound communicator go through the
+    compressed ``comm.allreduce`` (plan pre-resolved at setup time); the
+    tiny "model"-axis cases stay psum.
     """
 
     def sync(g, s):
@@ -129,8 +150,9 @@ def _sync_grads(grads, specs, mesh_axes, grad_gz: Optional[GZConfig]):
         for ax in mesh_axes:
             if ax in present:
                 continue
-            if grad_gz is not None and ax in ("pod", "data"):
-                g = gz_allreduce(g, ax, grad_gz)
+            comm = grad_comms.get(ax)
+            if comm is not None:
+                g = comm.allreduce(g).value
             else:
                 g = lax.psum(g, ax)
         return g
@@ -175,7 +197,7 @@ def make_train_step(setup: TrainSetup, batch_specs):
         loss = loss / scale
         for ax in ctx.dp_axes:
             loss = lax.pmean(loss, ax)
-        grads = _sync_grads(grads, specs, mesh_axes, setup.grad_gz)
+        grads = _sync_grads(grads, specs, mesh_axes, dict(setup.grad_comms))
         gnorm = _global_grad_norm(grads, specs, sizes)
         params, opt_state, om = adamw_update(
             params, grads, opt_state, setup.opt, grad_norm=gnorm

@@ -154,13 +154,19 @@ def moe_block(h, w, cfg: ModelConfig, ctx: ParallelCtx, *, positions,
         positions=positions, causal=causal, window=window,
     )
     h = h + a
-    dgz = None
+    dcomm = None
     if cfg.moe_dispatch_gz_eb:
         from repro.core.collectives import GZConfig
+        from repro.core.comm import GZCommunicator
 
-        dgz = GZConfig(eb=cfg.moe_dispatch_gz_eb, capacity_factor=0.8)
+        # Memoized one-shot communicator bound to the TP axis: every layer
+        # shares one instance and the dispatch plan is resolved once.
+        dcomm = GZCommunicator.for_config(
+            ctx.tp_axis,
+            GZConfig(eb=cfg.moe_dispatch_gz_eb, capacity_factor=0.8),
+        )
     m, aux = moe.moe_ffn(rms_norm(h, w["ln2"], cfg.norm_eps), w["moe"], cfg,
-                         ctx, dispatch_gz=dgz)
+                         ctx, dispatch_comm=dcomm)
     return h + m, aux
 
 

@@ -8,16 +8,19 @@ loss is returned to the caller.
 Note on gZCCL applicability (DESIGN.md §4): the dispatch all_to_all stays
 uncompressed by default; the size-dependent ablation
 (benchmarks/moe_a2a_ablation.py) shows compression pays at train shapes
-and hurts at decode — pass ``dispatch_gz=GZConfig(...)`` to route the
-dispatch through the compressed gz_all_to_all (one lossy hop, eb control).
+and hurts at decode — pass a ``dispatch_comm=GZCommunicator(...)`` bound
+to the TP axis to route the dispatch through the compressed all-to-all
+(one lossy hop, eb control, plan resolved once per payload shape).
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.collectives import GZConfig, gz_all_to_all
+from repro.core.comm import GZCommunicator
 from repro.models.config import ModelConfig
 from repro.models.parallel import ParallelCtx
 
@@ -38,7 +41,7 @@ def moe_ffn(
     w: dict,
     cfg: ModelConfig,
     ctx: ParallelCtx,
-    dispatch_gz: GZConfig | None = None,
+    dispatch_comm: Optional[GZCommunicator] = None,
 ):
     """h: (B, S, d) local tokens.
 
@@ -100,14 +103,14 @@ def moe_ffn(
     if tp > 1:
         # ship slots to expert owners: (e, cap, d) -> (e_local, tp*cap, d)
         # (tiled: split the expert dim across ranks, stack received slots
-        # along the capacity dim in rank order).  With dispatch_gz the
+        # along the capacity dim in rank order).  With dispatch_comm the
         # payload goes through the compressed all-to-all (the ablation in
         # benchmarks/moe_a2a_ablation.py models a ~1.7x win at train
         # shapes; exactly one lossy hop with eb control).
-        if dispatch_gz is not None and e_local == 1:
-            expert_in = gz_all_to_all(
-                expert_in.reshape(tp, cap * d), ctx.tp_axis, dispatch_gz
-            ).reshape(e_local, tp * cap, d)
+        if dispatch_comm is not None and e_local == 1:
+            expert_in = dispatch_comm.all_to_all(
+                expert_in.reshape(tp, cap * d)
+            ).value.reshape(e_local, tp * cap, d)
         else:
             expert_in = lax.all_to_all(
                 expert_in, ctx.tp_axis, split_axis=0, concat_axis=1, tiled=True
@@ -123,10 +126,10 @@ def moe_ffn(
     expert_out = jnp.einsum("ecf,efd->ecd", hmid, wo.astype(jnp.float32))
 
     if tp > 1:
-        if dispatch_gz is not None and e_local == 1:
-            expert_out = gz_all_to_all(
-                expert_out.reshape(tp, cap * d), ctx.tp_axis, dispatch_gz
-            ).reshape(e, cap, d)
+        if dispatch_comm is not None and e_local == 1:
+            expert_out = dispatch_comm.all_to_all(
+                expert_out.reshape(tp, cap * d)
+            ).value.reshape(e, cap, d)
         else:
             expert_out = lax.all_to_all(
                 expert_out, ctx.tp_axis, split_axis=1, concat_axis=0, tiled=True

@@ -5,8 +5,9 @@ is rank-centric, receives *local* parameter shards, and uses
 
   * ``ParallelCtx.tp_*``   — Megatron-style tensor parallel over "model",
   * ``fsdp_gather``        — ZeRO-3 gather over "data" (optionally through
-                             the gZ compressed allgather: the paper's
-                             technique in the training loop's hot path),
+                             the gZ compressed allgather via the per-axis
+                             ``GZCommunicator`` — core/comm.py — the
+                             paper's technique in the training hot path),
   * ``dp_axes``            — gradient-sync axes (("pod","data") multi-pod).
 
 ``ParamDef`` carries the GLOBAL shape, its PartitionSpec, and an init; the

@@ -210,4 +210,113 @@ err = np.abs(got - want).max()
 assert err <= 1e-4 * 1.001 + np.abs(want).max() * 2e-7, err
 print(f"OK all_to_all err={err:.2e}")
 
+# ---------------------------------------------------------------------------
+# Communicator/Plan surface (ISSUE 3): every legacy gz_* wrapper must be
+# bitwise-identical to the corresponding GZCommunicator method, the plan
+# cache must hold exactly one entry per distinct core key across repeated
+# jitted calls AND re-traces, and no selector/planner call may run inside
+# a traced body once the plan is cached.
+# ---------------------------------------------------------------------------
+import repro.core.collectives as coll
+import repro.core.selector as selector
+from repro.core.comm import GZCommunicator, clear_plan_cache, plan_cache_stats
+
+clear_plan_cache()
+comm = GZCommunicator("x", config=cfg, axis_size=N)
+comm_p = GZCommunicator("x", config=cfg_p, axis_size=N)  # pipelined ring
+
+parity = [
+    ("allreduce",
+     lambda x: gz_allreduce(x[0], "x", cfg)[None],
+     lambda x: comm.allreduce(x[0]).value[None], base),
+    ("allreduce_pipelined",
+     lambda x: gz_allreduce(x[0], "x", cfg_p)[None],
+     lambda x: comm_p.allreduce(x[0]).value[None], base_al),
+    ("reduce_scatter",
+     lambda x: gz_reduce_scatter(x[0], "x", cfg)[None],
+     lambda x: comm.reduce_scatter(x[0]).value[None], base),
+    ("allgather",
+     lambda x: gz_allgather(x[0], "x", cfg)[None],
+     lambda x: comm.allgather(x[0]).value[None], chunks),
+    ("scatter",
+     lambda x: gz_scatter(x[0], "x", cfg)[None],
+     lambda x: comm.scatter(x[0]).value[None], xin),
+    ("broadcast",
+     lambda x: gz_broadcast(x[0], "x", cfg)[None],
+     lambda x: comm.broadcast(x[0]).value[None], xb),
+    ("all_to_all",
+     lambda x: gz_all_to_all(x[0], "x", cfg)[None],
+     lambda x: comm.all_to_all(x[0]).value[None], x_a2a),
+]
+for name, legacy, method, data in parity:
+    a = np.asarray(shmap(legacy, (P("x", None),), P("x", None))(data))
+    b = np.asarray(shmap(method, (P("x", None),), P("x", None))(data))
+    assert np.array_equal(a, b), f"wrapper != communicator: {name}"
+    print(f"OK parity gz vs comm ({name})")
+
+# Exactly one cache entry per distinct (op, nbytes, dtype, axis_size, eb):
+# the wrapper and the method above shared every plan.
+keys = plan_cache_stats()["keys"]
+core = [k[:5] for k in keys]
+assert len(core) == len(set(core)), "duplicate core plan key"
+n_ar = sum(1 for k in core
+           if k[:5] == ("allreduce", base.shape[1] * 4, "float32", N, 1e-4))
+assert n_ar == 1, f"expected 1 allreduce plan entry for the core key, {n_ar}"
+
+# Re-tracing (a fresh jit wrapper) must hit the cache, and once cached no
+# selector/planner call may execute — patch them to explode and re-trace.
+auto_cfg = GZConfig(eb=1e-4, capacity_factor=1.2, algo="auto")
+f1 = shmap(lambda x: gz_allreduce(x[0], "x", auto_cfg)[None],
+           (P("x", None),), P("x", None))
+np.asarray(f1(base))  # resolves + caches the auto plan
+misses0 = plan_cache_stats()["misses"]
+
+
+def _boom(*a, **k):
+    raise AssertionError("plan resolution ran inside a traced body")
+
+
+orig_sel, orig_plan = selector.select_allreduce_plan, coll.plan_ring_pipeline_chunks
+selector.select_allreduce_plan = _boom
+coll.plan_ring_pipeline_chunks = _boom
+try:
+    f2 = shmap(lambda x: gz_allreduce(x[0], "x", auto_cfg)[None],
+               (P("x", None),), P("x", None))  # fresh jit -> full re-trace
+    np.asarray(f2(base))
+finally:
+    selector.select_allreduce_plan = orig_sel
+    coll.plan_ring_pipeline_chunks = orig_plan
+assert plan_cache_stats()["misses"] == misses0, "re-trace re-resolved the plan"
+print("OK plan cache: one entry per key; re-trace is selector-free")
+
+# CollectiveResult stats channel out of a shard_map body: overflow is the
+# global OR, wire accounting is static and beats the uncompressed payload.
+def res_body(x):
+    r = comm.allreduce(x[0])
+    return r.value[None], r.overflow[None]
+
+
+v, o = shmap(res_body, (P("x", None),), (P("x", None), P("x")))(base)
+assert not np.asarray(o).any()
+plan = comm.plan("allreduce", base.shape[1])
+assert plan.wire_bytes > 0 and plan.ratio > 0
+print(f"OK CollectiveResult wire={plan.wire_bytes}B ratio={plan.ratio:.2f}")
+
+# Rebinding the same axis NAME to a different size must not reuse a stale
+# resolved size from the memoized one-shot communicators: the wrapper path
+# already ran "x" at size 8 above; now run "x" at size 2 in the same
+# process and demand the true 2-rank sum.
+mesh2 = jax.make_mesh((2, 4), ("x", "y"))
+f2ax = jax.jit(shard_map(
+    lambda x: gz_allreduce(x[0], "x", cfg)[None],
+    mesh=mesh2, in_specs=(P(("x", "y"), None),), out_specs=P(("x", "y"), None),
+))
+x8 = base  # 8 rows -> 2 "x" groups of 4 "y" rows; sum over "x" pairs rows
+out2 = np.asarray(f2ax(x8))
+want2 = x8.reshape(2, 4, -1).sum(axis=0)  # the true sum over the "x" axis
+err2 = np.abs(out2.reshape(2, 4, -1) - want2[None]).max()
+assert err2 <= 1e-4 * 1.05 + np.abs(want2).max() * 1e-6, \
+    f"stale axis-size plan reused across meshes: err {err2}"
+print("OK same axis name at a different mesh size replans correctly")
+
 print("ALL OK")
