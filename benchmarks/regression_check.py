@@ -24,6 +24,20 @@ import sys
 THRESHOLD = 0.20
 
 
+def check_step_count_consistency() -> None:
+    """Plan-layer wire accounting and the cost model must agree on step
+    counts for EVERY axis size (the PR 4 floor-vs-ceil regression: plans
+    under-reported non-power-of-two wire bytes and mis-ranked algorithms).
+    Structural, not timing — always fatal, like the kernel-count assert.
+    The single authoritative loop lives next to the accounting it guards
+    (comm.assert_step_count_consistency); tests/test_comm.py runs it too.
+    """
+    from repro.core.comm import assert_step_count_consistency
+
+    assert_step_count_consistency()
+    print("step-count consistency: plan accounting == cost model for n in 2..33")
+
+
 def _ratios(record):
     """{size: {fused metric: fused_us / reference_us}} for a benchmark
     record shaped {size: {"fused": {..._us}, "unfused"|"two_kernel": {...}}}.
@@ -69,6 +83,9 @@ def main() -> None:
 
     here = pathlib.Path(__file__).parent
     from benchmarks import compressor_char, hop_bench
+
+    # Structural invariant, independent of timing noise: fatal on mismatch.
+    check_step_count_consistency()
 
     regressions = []
 

@@ -34,9 +34,17 @@ Algorithms:
                 analog — one pallas_call covers what N CUDA streams did)
   gz_broadcast  binomial tree, compress once at root
 
-Axis sizes must be powers of two (the production meshes are 16/16/2); the
-paper's non-power-of-two remainder stage is not needed on pod-shaped
-meshes and is not implemented.
+Axis sizes are ARBITRARY (paper §3.2.3, DESIGN.md §7).  The ring schedules
+generalize to any N directly; the log-depth schedules handle
+non-power-of-two axes with the paper's remainder stage: recursive doubling
+folds the n - 2**floor(log2 n) extra ranks into a partner in a compressed
+pre-hop, runs the doubling over the remaining power-of-two participants,
+and unfolds the result in a compressed post-hop; the binomial
+scatter/broadcast trees run ceil(log2 n) rounds over a virtual
+power-of-two rank space with the out-of-range exchanges dropped.  The
+remainder hops are lossy and are charged to the per-stage error budget
+(core/error_budget.py: redoub's worst-case hop count is n-1 on
+power-of-two axes and n otherwise).
 
 Consistency note (recorded in DESIGN.md): like the paper's gZ-Allreduce,
 "redoub" and "ring" produce rank-wise results that agree only within the
@@ -55,7 +63,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import bitpack, error_budget
+from repro.core import bitpack, cost_model, error_budget
 from repro.core.compressed import Compressed, capacity_words_for
 from repro.core.compressor import DEFAULT, ErrorBoundedLorenzo
 from repro.kernels import ops
@@ -114,6 +122,18 @@ class GZConfig:
     fused: bool = True
     fused_hop: bool = True
 
+    def __post_init__(self):
+        # Fail at construction time with an actionable message, not via a
+        # bare assert buried in an execute-layer tree loop (which would
+        # also vanish under `python -O`).
+        if self.pipeline_chunks < 1 or not _is_pow2(self.pipeline_chunks):
+            raise ValueError(
+                "GZConfig.pipeline_chunks must be a power of two >= 1 "
+                "(the chunked double-buffered schedules split ring chunks "
+                f"and tree slabs in half repeatedly); got "
+                f"{self.pipeline_chunks!r}"
+            )
+
     def compressor(self) -> ErrorBoundedLorenzo:
         return ErrorBoundedLorenzo(
             capacity_factor=self.capacity_factor, fused=self.fused
@@ -157,50 +177,123 @@ def _is_pow2(n: int) -> bool:
 # ---------------------------------------------------------------------------
 
 
+def _redoub_layout(n: int):
+    """Remainder-stage layout for recursive doubling over ``n`` ranks
+    (paper §3.2.3, DESIGN.md §7).
+
+    ``p = 2**floor(log2 n)`` ranks participate in the XOR doubling; the
+    ``rem = n - p`` surplus ranks pair up with a neighbour in a pre-hop:
+    each even physical rank ``2i < 2*rem`` folds its data into ``2i + 1``
+    and sits out, and gets the result back in a post-hop.  ``phys`` maps a
+    virtual participant rank to its physical rank (the odd halves of the
+    folded pairs first, then the untouched tail).
+    """
+    p = 1 << (max(n, 1).bit_length() - 1)
+    rem = n - p
+
+    def phys(v: int) -> int:
+        return 2 * v + 1 if v < rem else v + rem
+
+    return p, rem, phys
+
+
 def _allreduce_redoub(x, axis_name, cfg: GZConfig):
-    """Recursive-doubling gZ-Allreduce: log2(N) full-message compressions.
+    """Recursive-doubling gZ-Allreduce: ~log2(N) full-message compressions.
 
     Per step: compress local running sum, exchange with the XOR partner,
     fused decompress+reduce into the local sum.  Full-message compression
     keeps the compressor saturated — the paper's core scalability insight.
 
+    Non-power-of-two axes run the paper's remainder stage around the
+    doubling (``_redoub_layout``): a compressed pre-hop folds each surplus
+    rank into its partner, the doubling runs over the power-of-two
+    participants (idle ranks ride along SPMD-style: their ``ppermute``
+    slots are unaddressed, so they receive zero streams that decompress to
+    0.0 and leave their accumulator untouched), and a compressed post-hop
+    unfolds the result.  Both remainder hops are ordinary lossy exchanges
+    charged to the stage budget (``error_budget.lossy_hops`` counts n
+    instead of n-1), and overflow flags are masked to streams that
+    actually travel so an idle rank's dead compression can never trip the
+    global OR.
+
     With ``cfg.fused_hop`` every intermediate step runs as a single
     ``decompress_reduce_compress`` pass: the received partner stream and
     the local sum go in, the *next* step's outgoing stream comes out
     (plus the updated f32 carry, which redoub genuinely needs); the last
-    step emits the plain f32 accumulator.  log2(N)+1 kernels instead of
-    2·log2(N), bitwise-identical results.
+    step emits the plain f32 accumulator — except on a remainder axis,
+    where the last step's fused kernel directly emits the post-hop's
+    outgoing stream alongside the carry (the unfold payload IS the
+    compressed updated accumulator).  ceil(log2 N)+1 kernels instead of
+    2·ceil(log2 N) (+1 on remainder axes), bitwise-identical results.
     """
     n = _axis_size(axis_name)
     comp = cfg.compressor()
     eb_stage = error_budget.allocate(
         cfg.eb, "allreduce_redoub", n, worst_case=cfg.worst_case_budget
     )
-    steps = int(math.log2(n))
+    p, rem, phys = _redoub_layout(n)
+    steps = p.bit_length() - 1  # == log2(p)
+    r = lax.axis_index(axis_name)
+    # Remainder-stage masks (all False / trivially true when rem == 0).
+    in_pair = r < 2 * rem
+    is_fold_src = in_pair & (r % 2 == 0)   # folds into partner, then idles
+    is_fold_dst = in_pair & (r % 2 == 1)   # absorbs partner, sends back
+    is_participant = ~is_fold_src
+    pre_perm = [(2 * i, 2 * i + 1) for i in range(rem)]
+    post_perm = [(2 * i + 1, 2 * i) for i in range(rem)]
+    step_perms = [
+        [(phys(v), phys(v ^ (1 << k))) for v in range(p)] for k in range(steps)
+    ]
     acc = x
     overflow = jnp.zeros((), jnp.bool_)
+
     if cfg.fused_hop:
         c = comp.compress(acc, eb_stage)
-        overflow |= c.overflowed()
+        # The initial stream travels on the pre-hop (fold sources) on a
+        # remainder axis, on step 0 (everyone) otherwise.
+        overflow |= c.overflowed() & (is_fold_src if rem else True)
+        if rem:
+            c_recv = _ppermute(c, axis_name, pre_perm)
+            c, acc = comp.decompress_reduce_compress(
+                c_recv, acc, eb_stage, return_updated=True
+            )
+            overflow |= c.overflowed() & is_participant
         for k in range(steps):
-            dist = 1 << k
-            perm = [(i, i ^ dist) for i in range(n)]
-            c_recv = _ppermute(c, axis_name, perm)
+            c_recv = _ppermute(c, axis_name, step_perms[k])
             if k < steps - 1:
                 c, acc = comp.decompress_reduce_compress(
                     c_recv, acc, eb_stage, return_updated=True
                 )
-                overflow |= c.overflowed()
+                overflow |= c.overflowed() & is_participant
+            elif rem:
+                # Last hop + post-stage compress in one fused pass: the
+                # unfold payload is the stream of the updated accumulator.
+                c, acc = comp.decompress_reduce_compress(
+                    c_recv, acc, eb_stage, return_updated=True
+                )
+                overflow |= c.overflowed() & is_fold_dst
             else:  # last hop: emit the plain f32 accumulator
                 acc = comp.decompress_reduce(c_recv, acc)
+        if rem:
+            c_back = _ppermute(c, axis_name, post_perm)
+            acc = jnp.where(is_fold_src, comp.decompress(c_back), acc)
         return acc, overflow
-    for k in range(steps):
-        dist = 1 << k
-        perm = [(i, i ^ dist) for i in range(n)]
+
+    if rem:
         c = comp.compress(acc, eb_stage)
-        overflow |= c.overflowed()
-        c_recv = _ppermute(c, axis_name, perm)
+        overflow |= c.overflowed() & is_fold_src
+        c_recv = _ppermute(c, axis_name, pre_perm)
         acc = comp.decompress_reduce(c_recv, acc)
+    for k in range(steps):
+        c = comp.compress(acc, eb_stage)
+        overflow |= c.overflowed() & is_participant
+        c_recv = _ppermute(c, axis_name, step_perms[k])
+        acc = comp.decompress_reduce(c_recv, acc)
+    if rem:
+        c = comp.compress(acc, eb_stage)
+        overflow |= c.overflowed() & is_fold_dst
+        c_back = _ppermute(c, axis_name, post_perm)
+        acc = jnp.where(is_fold_src, comp.decompress(c_back), acc)
     return acc, overflow
 
 
@@ -324,11 +417,9 @@ def plan_ring_pipeline_chunks(n_elems: int, n_ranks: int, *, ratio: float = 20.0
     (GZConfig.fused_hop): the single-pass hop halves the per-piece kernel
     overhead, so its optimum is deeper.
     """
-    from repro.core import cost_model as cm
-
-    chunks = cm.best_pipeline_chunks(
-        n_elems * 4, n_ranks, ratio, hw if hw is not None else cm.TPU_V5E,
-        fused_hop=fused_hop,
+    chunks = cost_model.best_pipeline_chunks(
+        n_elems * 4, n_ranks, ratio,
+        hw if hw is not None else cost_model.TPU_V5E, fused_hop=fused_hop,
     )
     fill = n_elems // (n_ranks * PIECE_QUANTUM)
     while chunks > 1 and chunks > fill:
@@ -541,7 +632,6 @@ def _allreduce_ring(x, axis_name, cfg: GZConfig):
     r = lax.axis_index(axis_name)
 
     if cfg.pipeline_chunks > 1:
-        assert _is_pow2(cfg.pipeline_chunks), "pipeline_chunks must be 2**k"
         acc, chunk_n, overflow = _reduce_scatter_ring_pipelined(
             x, axis_name, cfg, eb_stage
         )
@@ -676,8 +766,6 @@ def _execute_allreduce(x, axis_name, cfg: GZConfig):
     consult the selector or the cost model.  Returns
     ``(out, local_overflow)``; the caller owns the cross-axis OR.
     """
-    n = _axis_size(axis_name)
-    assert _is_pow2(n), f"axis {axis_name!r} size {n} must be a power of two"
     shape, dtype = x.shape, x.dtype
     flat = x.reshape(-1).astype(jnp.float32)
     if cfg.algo == "redoub":
@@ -729,8 +817,12 @@ def gz_allreduce(
 def _execute_reduce_scatter(x, axis_name, cfg: GZConfig):
     """EXECUTE layer for the ring reduce-scatter (concrete schedule)."""
     n = _axis_size(axis_name)
-    assert _is_pow2(n)
-    assert x.ndim == 1 and x.shape[0] % n == 0
+    if x.ndim != 1 or x.shape[0] % n != 0:
+        raise ValueError(
+            f"gz_reduce_scatter over axis {axis_name!r} (size {n}): the "
+            "payload must be flat with length divisible by the axis size "
+            f"(rank r returns summed chunk r); got shape {tuple(x.shape)}"
+        )
     eb_stage = error_budget.allocate(
         cfg.eb, "reduce_scatter_ring", n, worst_case=cfg.worst_case_budget
     )
@@ -738,7 +830,6 @@ def _execute_reduce_scatter(x, axis_name, cfg: GZConfig):
     flat = x.astype(jnp.float32)
     chunk_in = x.shape[0] // n
     if cfg.pipeline_chunks > 1:
-        assert _is_pow2(cfg.pipeline_chunks)
         # Chunk boundaries are caller semantics: pad each chunk (not the
         # flat tail) so every chunk is pipeline_chunks whole-tile pieces.
         quantum = cfg.pipeline_chunks * PIECE_QUANTUM
@@ -778,7 +869,6 @@ def gz_reduce_scatter(
 def _execute_allgather(x, axis_name, cfg: GZConfig):
     """EXECUTE layer for the ring allgather (concrete schedule)."""
     n = _axis_size(axis_name)
-    assert _is_pow2(n)
     comp = cfg.compressor()
     r = lax.axis_index(axis_name)
     dtype = x.dtype
@@ -786,7 +876,6 @@ def _execute_allgather(x, axis_name, cfg: GZConfig):
     n_orig = flat.shape[0]
 
     if cfg.pipeline_chunks > 1:
-        assert _is_pow2(cfg.pipeline_chunks)
         quantum = cfg.pipeline_chunks * PIECE_QUANTUM
         chunk_n = -(-n_orig // quantum) * quantum
         piece_n = chunk_n // cfg.pipeline_chunks
@@ -845,10 +934,31 @@ def gz_allgather(
 
 
 def _execute_scatter(x_full, axis_name, cfg: GZConfig, *, root: int = 0):
-    """EXECUTE layer for the binomial-tree scatter (concrete schedule)."""
+    """EXECUTE layer for the binomial-tree scatter (concrete schedule).
+
+    Arbitrary axis sizes run the tree over a VIRTUAL power-of-two rank
+    space of ``2**ceil(log2 n)`` chunk slots (DESIGN.md §7): held buffers
+    are padded with zero streams, rounds whose receiver does not exist are
+    dropped from the ``ppermute``, and slab indexing wraps modulo the
+    virtual size.  Every real rank's ancestor chain stays inside the real
+    ranks (a receiver ``i + span < n`` always has sender ``i < n``), so
+    coverage is unchanged; the cost is that a round's slab may carry some
+    padding chunks — priced by the plan layer's wire accounting.
+    """
     n = _axis_size(axis_name)
-    assert _is_pow2(n) and root == 0, "power-of-two axis, root 0"
-    assert x_full.shape[0] % n == 0
+    if root != 0:
+        raise ValueError(
+            f"gz_scatter over axis {axis_name!r} (size {n}): only root 0 "
+            f"is supported (the binomial tree is rooted at rank 0); got "
+            f"root={root}.  Roll the payload so the source rank is 0."
+        )
+    if x_full.shape[0] % n != 0:
+        raise ValueError(
+            f"gz_scatter over axis {axis_name!r} (size {n}): the full "
+            "payload's leading dim must be divisible by the axis size "
+            f"(each rank receives one chunk); got shape "
+            f"{tuple(x_full.shape)}"
+        )
     comp = cfg.compressor()
     r = lax.axis_index(axis_name)
     dtype = x_full.dtype
@@ -874,9 +984,20 @@ def _execute_scatter(x_full, axis_name, cfg: GZConfig, *, root: int = 0):
         )
         pk_list.append(pk)
         ovf |= nw > cap
-    held_packed = jnp.stack(pk_list)  # (n, cap)
-    held_bw = bw.reshape(n, rows)
-    held_anchor = anchor.reshape(n, rows)
+    # Virtual power-of-two rank space: pad the held chunk-stream buffers
+    # with zero streams so the tree's slab arithmetic is uniform; perms
+    # below drop exchanges whose receiver does not exist.  The round
+    # count comes from the same authority the plan layer prices
+    # (ceil(log2 n)), so schedule and accounting cannot drift.
+    steps = cost_model.steps_for("binomial", n)
+    n_virt = 1 << steps
+    packed0 = jnp.stack(pk_list)  # (n, cap)
+    held_packed = jnp.zeros((n_virt,) + packed0.shape[1:], packed0.dtype
+                            ).at[:n].set(packed0)
+    held_bw = jnp.zeros((n_virt, rows), bw.dtype).at[:n].set(
+        bw.reshape(n, rows))
+    held_anchor = jnp.zeros((n_virt, rows), anchor.dtype).at[:n].set(
+        anchor.reshape(n, rows))
 
     # Binomial tree: round k (from top) ships 2**k chunks from each sender
     # i (i % 2**(k+1) == 0) to i + 2**k.  Payload shrinks by half each
@@ -886,13 +1007,11 @@ def _execute_scatter(x_full, axis_name, cfg: GZConfig, *, root: int = 0):
     # divide the slab): the install of piece g overlaps the wire time of
     # piece g+1 — the chunked double-buffered analog of the paper's
     # multi-stream scatter.
-    steps = int(math.log2(n))
-    if cfg.pipeline_chunks > 1:
-        assert _is_pow2(cfg.pipeline_chunks)
     for k in reversed(range(steps)):
         span = 1 << k
-        perm = [(i, i + span) for i in range(n) if i % (span * 2) == 0]
-        start = (r + span) % n  # sender's outgoing slab start (own rank + span)
+        perm = [(i, i + span) for i in range(0, n_virt, span * 2)
+                if i + span < n]
+        start = (r + span) % n_virt  # sender's outgoing slab start
         is_recv = (r % (span * 2)) == span
         groups = min(max(cfg.pipeline_chunks, 1), span)
         sub = span // groups
@@ -900,7 +1019,7 @@ def _execute_scatter(x_full, axis_name, cfg: GZConfig, *, root: int = 0):
             piece = jax.tree.map(
                 lambda h: lax.dynamic_slice(
                     h,
-                    ((start + g * sub) % n,) + (0,) * (h.ndim - 1),
+                    ((start + g * sub) % n_virt,) + (0,) * (h.ndim - 1),
                     (sub,) + h.shape[1:],
                 ),
                 (held_packed, held_bw, held_anchor),
@@ -983,7 +1102,12 @@ def gz_all_to_all(x: jnp.ndarray, axis_name, cfg: GZConfig = GZConfig()):
 def _execute_all_to_all(x, axis_name, cfg: GZConfig):
     """EXECUTE layer for the compressed rank exchange (one lossy hop)."""
     n = _axis_size(axis_name)
-    assert x.shape[0] % n == 0
+    if x.shape[0] % n != 0:
+        raise ValueError(
+            f"gz_all_to_all over axis {axis_name!r} (size {n}): the leading "
+            "dim must be divisible by the axis size (slot buffers grouped "
+            f"by destination rank); got shape {tuple(x.shape)}"
+        )
     shape, dtype = x.shape, x.dtype
     chunk_rows = x.shape[0] // n
     chunk_n = chunk_rows * int(np.prod(shape[1:])) if len(shape) > 1 else chunk_rows
@@ -1027,9 +1151,20 @@ def _execute_all_to_all(x, axis_name, cfg: GZConfig):
 
 
 def _execute_broadcast(x, axis_name, cfg: GZConfig, *, root: int = 0):
-    """EXECUTE layer for the binomial-tree broadcast (concrete schedule)."""
+    """EXECUTE layer for the binomial-tree broadcast (concrete schedule).
+
+    Arbitrary axis sizes: ``ceil(log2 n)`` rounds of halving spans with
+    exchanges whose receiver does not exist dropped from the ``ppermute``
+    (DESIGN.md §7) — every real rank's sender chain stays inside the real
+    ranks, so coverage and the one-lossy-hop property are unchanged.
+    """
     n = _axis_size(axis_name)
-    assert _is_pow2(n) and root == 0
+    if root != 0:
+        raise ValueError(
+            f"gz_broadcast over axis {axis_name!r} (size {n}): only root 0 "
+            f"is supported (the binomial tree is rooted at rank 0); got "
+            f"root={root}."
+        )
     comp = cfg.compressor()
     r = lax.axis_index(axis_name)
     shape, dtype = x.shape, x.dtype
@@ -1037,10 +1172,11 @@ def _execute_broadcast(x, axis_name, cfg: GZConfig, *, root: int = 0):
     # Non-root ranks compress their (insignificant) local x in SPMD; only
     # the root's stream travels, so only its flag is meaningful.
     ovf = c.overflowed() & (r == 0)
-    steps = int(math.log2(n))
+    # Same step-count authority as the plan layer's wire accounting.
+    steps = cost_model.steps_for("binomial", n)
     for k in range(steps):
-        span = n >> (k + 1)
-        perm = [(i, i + span) for i in range(n) if i % (span * 2) == 0]
+        span = 1 << (steps - 1 - k)
+        perm = [(i, i + span) for i in range(0, n, 2 * span) if i + span < n]
         c_recv = _ppermute(c, axis_name, perm)
         has = (r % (span * 2)) == span
         c = jax.tree.map(lambda new, old: jnp.where(has, new, old), c_recv, c)

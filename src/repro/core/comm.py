@@ -58,7 +58,6 @@ model.
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import partial
 from typing import Callable, Optional
 
@@ -74,6 +73,7 @@ __all__ = [
     "Plan",
     "CollectiveResult",
     "GZCommunicator",
+    "assert_step_count_consistency",
     "register_policy",
     "policy_names",
     "plan_cache_stats",
@@ -228,14 +228,18 @@ def _wire_accounting(op, algo, n_elems, n, capacity_factor, chunks):
     Per-rank send bytes, upper bound (tree collectives report the busiest
     rank).  Mirrors the hop structure AND the padding of the execute layer
     in core/collectives.py — including the pipelined schedules'
-    whole-tile piece quantum — so the reported provisioning matches the
-    buffers XLA actually ships.  ``raw`` is the uncompressed-equivalent
-    payload (no padding): what the lax.* collective would move.
+    whole-tile piece quantum and the non-power-of-two remainder stage /
+    virtual tree — so the reported provisioning matches the buffers XLA
+    actually ships.  Step counts come from ``cost_model.steps_for``, the
+    single authority the cost model evaluates too (ceil(log2 n) for the
+    log-depth schedules), so wire accounting can never disagree with the
+    costing again.  ``raw`` is the uncompressed-equivalent payload (no
+    padding): what the lax.* collective would move.
     """
     p = max(chunks, 1)
     if op == "allreduce":
         if algo == "redoub":
-            steps = max(int(math.log2(max(n, 2))), 1)
+            steps = cost_model.steps_for("redoub", n)
             cap = capacity_words_for(n_elems, capacity_factor, ops.BLOCK)
             wire = steps * _stream_bytes(n_elems, capacity_factor)
             raw = steps * n_elems * 4
@@ -276,11 +280,15 @@ def _wire_accounting(op, algo, n_elems, n, capacity_factor, chunks):
     if op == "scatter":
         chunk = -(-n_elems // n)
         cap = capacity_words_for(chunk, capacity_factor, ops.BLOCK)
-        wire = (n - 1) * _stream_bytes(chunk, capacity_factor)  # root's sends
+        # The root ships one stream per virtual-tree slot below it:
+        # 2**ceil(log2 n) - 1 chunk streams (== n-1 on power-of-two axes;
+        # includes the padding chunks of the virtual tree otherwise).
+        streams = (1 << cost_model.steps_for("binomial", n)) - 1
+        wire = streams * _stream_bytes(chunk, capacity_factor)
         raw = (n - 1) * chunk * 4
         return cap, wire, raw
     if op == "broadcast":
-        steps = max(int(math.log2(max(n, 2))), 1)
+        steps = cost_model.steps_for("binomial", n)
         cap = capacity_words_for(n_elems, capacity_factor, ops.BLOCK)
         wire = steps * _stream_bytes(n_elems, capacity_factor)  # root's sends
         raw = steps * n_elems * 4
@@ -292,6 +300,45 @@ def _wire_accounting(op, algo, n_elems, n, capacity_factor, chunks):
         raw = n * chunk * 4
         return cap, wire, raw
     raise ValueError(f"unknown op {op!r}")
+
+
+def assert_step_count_consistency(n_range=range(2, 34), n_elems: int = 4096,
+                                  capacity_factor: float = 0.6) -> None:
+    """Structural self-check: the wire accounting's implied step counts
+    equal ``cost_model.steps_for`` for every axis size in ``n_range`` —
+    the PR 4 floor-vs-ceil regression (plans silently under-reported
+    non-power-of-two wire bytes while the cost model used ceil, so
+    planning could mis-rank algorithms).  Raises AssertionError naming
+    the first disagreeing (op, n).  Called by tests/test_comm.py and, on
+    every CI run, by benchmarks/regression_check.py.  Raises explicitly
+    (not via ``assert`` statements, which vanish under ``python -O`` —
+    this is the check that must never silently pass).
+    """
+    def _require(cond, msg):
+        if not cond:
+            raise AssertionError(msg)
+
+    stream = _stream_bytes(n_elems, capacity_factor)
+    for n in n_range:
+        ceil_steps = max(n - 1, 1).bit_length()
+        for algo in ("redoub", "binomial"):
+            _require(cost_model.steps_for(algo, n) == ceil_steps,
+                     f"steps_for({algo!r}, {n}) != ceil(log2 n)")
+        _, wire, raw = _wire_accounting(
+            "allreduce", "redoub", n_elems, n, capacity_factor, 1)
+        _require(wire == ceil_steps * stream,
+                 f"redoub wire accounting disagrees with the cost model at n={n}")
+        _require(raw == ceil_steps * n_elems * 4, f"redoub raw bytes at n={n}")
+        _, wire, _ = _wire_accounting(
+            "broadcast", "binomial", n_elems, n, capacity_factor, 1)
+        _require(wire == ceil_steps * stream,
+                 f"broadcast wire accounting disagrees with the cost model at n={n}")
+        chunk = -(-n_elems // n)
+        _, wire, _ = _wire_accounting(
+            "scatter", "binomial", n_elems, n, capacity_factor, 1)
+        _require(
+            wire == ((1 << ceil_steps) - 1) * _stream_bytes(chunk, capacity_factor),
+            f"scatter wire accounting disagrees with the virtual tree at n={n}")
 
 
 def _eb_stage(op, algo, eb, n, worst_case):

@@ -29,6 +29,7 @@ __all__ = [
     "Hardware",
     "A100_SLINGSHOT",
     "TPU_V5E",
+    "steps_for",
     "t_compress",
     "t_decompress",
     "t_hop_fused",
@@ -88,6 +89,38 @@ TPU_V5E = Hardware(
     net_alpha_us=1.0,
     reduce_gbps=819.0 * 8,
 )
+
+
+def steps_for(algo: str, n: int) -> int:
+    """Wire-exchange count per (busiest) rank, exactly as the execute
+    layer schedules it — the ONE step-count authority shared by this cost
+    model, the plan layer's wire accounting (``comm._wire_accounting``)
+    and the policy selectors, so floor-vs-ceil drift between planning and
+    costing cannot recur (PR 4 regression; checked over n in 2..33 by
+    tests/test_comm.py and benchmarks/regression_check.py).
+
+    * ``redoub``:   ceil(log2 n) — floor(log2 n) doubling rounds plus the
+                    non-power-of-two remainder fold exchange (the unfold
+                    send comes from the *other* half of each folded pair,
+                    so the busiest rank still ships ceil(log2 n) full
+                    streams: fold-destination ranks send every doubling
+                    round plus the unfold).
+    * ``binomial``: ceil(log2 n) tree rounds (scatter / broadcast; the
+                    root sends every round).
+    * ``ring``:     n - 1 hops per ring stage.
+    * ``intring``:  2(n - 1) lossless integer hops (RS + AG rings).
+    * ``direct``:   1 (the all_to_all single exchange).
+    """
+    n = max(int(n), 2)
+    if algo in ("redoub", "binomial"):
+        return max(n - 1, 1).bit_length()  # == ceil(log2 n)
+    if algo == "ring":
+        return n - 1
+    if algo == "intring":
+        return 2 * (n - 1)
+    if algo == "direct":
+        return 1
+    raise ValueError(f"unknown algo {algo!r}")
 
 
 def _util(size_bytes: float, hw: Hardware) -> float:
@@ -159,23 +192,41 @@ def allreduce_ring_gz(D, N, R, hw: Hardware, overlap: float = 0.7) -> float:
 def allreduce_redoub_gz(
     D, N, R, hw: Hardware, overlap: float = 0.7, *, fused_hop: bool = True
 ) -> float:
-    """gZ-Allreduce (ReDoub): log2(N) full-message exchanges.
+    """gZ-Allreduce (ReDoub): ~log2(N) full-message exchanges.
 
     ``fused_hop`` models the single-pass schedule (one fill compression,
     then one ``t_hop_fused`` kernel per step instead of the decoupled
     compress + decompress+reduce pair) — keep it in sync with the ring's
     fused costing so auto-selection compares like with like.
+
+    Non-power-of-two N is priced with the paper's remainder stage
+    (§3.2.3): the fold pre-hop rides the same per-step cost (it is one
+    more full-message compressed exchange, hence ``steps_for`` returns
+    ceil(log2 N)), and the unfold post-hop adds one compressed send plus
+    a decompress on the folded pairs — the extra term that shifts the
+    ring-vs-redoub crossover at non-power-of-two N.
     """
-    steps = math.ceil(math.log2(N))
+    N = max(int(N), 2)
+    steps = steps_for("redoub", N)
+    remainder = N & (N - 1) != 0
+    post = (t_net(D / R, hw) + t_decompress(D, hw)) if remainder else 0.0
     if fused_hop:
+        # The unfold stream falls out of the last doubling step's fused
+        # kernel (decompress_reduce_compress instead of decompress_reduce
+        # — already charged as one t_hop_fused like every step), so the
+        # post-hop adds only wire + the folded ranks' decompress.
         one = _overlapped(t_hop_fused(D, hw), t_net(D / R, hw), overlap)
-        return t_compress(D, hw) + steps * one
+        return t_compress(D, hw) + steps * one + post
+    if remainder:
+        # Two-kernel schedule: the unfold payload needs its own explicit
+        # compression of the final accumulator before the post-hop.
+        post += t_compress(D, hw)
     one = _overlapped(
         t_compress(D, hw) + t_decompress(D, hw) + t_reduce(D, hw),
         t_net(D / R, hw),
         overlap,
     )
-    return steps * one
+    return steps * one + post
 
 
 def allreduce_intring_gz(D, N, R, hw: Hardware, overlap: float = 0.7) -> float:
@@ -286,8 +337,9 @@ def allreduce_ring_gz_chunked(
 def scatter_binomial_gz_chunked(D, N, R, hw: Hardware, chunks: int = 1) -> float:
     """gZ-Scatter with each tree round's slab split into `chunks` piece
     chains: the receiver-side install (buffer copy at reduce bandwidth)
-    overlaps the next piece's wire time."""
-    rounds = math.ceil(math.log2(N))
+    overlaps the next piece's wire time.  Rounds and slab sizes follow the
+    virtual power-of-two tree the execute layer runs at any N."""
+    rounds = steps_for("binomial", N)
     total = t_compress(D, hw)  # batched root compression, saturated
     for k in reversed(range(rounds)):
         payload = D * (2**k) / N / R
@@ -333,9 +385,11 @@ def allgather_ring_gz(D_chunk, N, R, hw: Hardware, overlap: float = 0.7) -> floa
 
 def scatter_binomial_gz(D, N, R, hw: Hardware, overlap: float = 0.7) -> float:
     """gZ-Scatter: batched root compression of N chunks (ONE saturated call
-    — the multi-stream analog) + log2(N) tree rounds of halving payloads +
-    one decompression at each leaf."""
-    rounds = math.ceil(math.log2(N))
+    — the multi-stream analog) + ceil(log2 N) tree rounds of halving
+    payloads + one decompression at each leaf.  The 2**k-chunk slabs per
+    round are exactly what the virtual power-of-two tree ships at
+    non-power-of-two N (padding chunks included)."""
+    rounds = steps_for("binomial", N)
     total = t_compress(D, hw)  # batched: full-size utilization
     for k in reversed(range(rounds)):
         payload = D * (2**k) / N / R
@@ -345,5 +399,5 @@ def scatter_binomial_gz(D, N, R, hw: Hardware, overlap: float = 0.7) -> float:
 
 
 def scatter_uncompressed_binomial(D, N, hw: Hardware) -> float:
-    rounds = math.ceil(math.log2(N))
+    rounds = steps_for("binomial", N)
     return sum(t_net(D * (2**k) / N, hw) for k in reversed(range(rounds)))

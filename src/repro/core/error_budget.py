@@ -8,6 +8,13 @@ per-hop bounds stack.  Getting the worst case right requires tracking how
         acc' = acc + D(C(partner_acc)),
     so e_{k+1} = 2*e_k + eb_stage  (the partner's accumulated error merges
     in as well) => worst case e = (2**log2(N) - 1)*eb_stage = (N-1)*eb_stage.
+    Equivalently: a rank's final value embeds one fresh quantization per
+    merge event in its merge tree, and a tree over N leaves has N-1
+    internal nodes.  That count is INVARIANT under the non-power-of-two
+    remainder stage (the fold pre-hops are merge events like any other:
+    r fold merges + 2**floor(log2 N) - 1 doubling merges = N - 1), so the
+    only extra charge on a remainder axis is the unfold post-hop — one
+    more quantization on the folded pairs => N*eb_stage worst case.
   * Ring allreduce: the reduce-scatter running chunk sum absorbs one fresh
     quantization error per hop, (N-1) hops, plus one more lossy hop in the
     allgather stage => N*eb_stage.
@@ -38,7 +45,12 @@ __all__ = ["lossy_hops", "allocate"]
 def lossy_hops(algo: str, n: int) -> int:
     """Worst-case multiplier: end-to-end error <= lossy_hops * eb_stage."""
     if algo == "allreduce_redoub":
-        return max(n - 1, 1)  # e_{k+1} = 2 e_k + eb over log2(n) rounds
+        # n-1 merge events (remainder folds + doubling rounds) each add
+        # one fresh quantization; a non-power-of-two axis pays one more
+        # on the remainder unfold (post-hop compress toward the folded
+        # ranks) — see the module docstring.
+        pow2 = n & (n - 1) == 0
+        return max(n - 1, 1) if pow2 else n
     if algo == "allreduce_ring":
         return max(n, 2)  # (n-1) RS requantizations + 1 AG hop
     if algo == "reduce_scatter_ring":
@@ -54,6 +66,9 @@ def compression_events(algo: str, n: int) -> int:
     """Sequential compression invocations per rank (the paper's log-N vs
     N-1 *performance* metric — what drives compressor utilization cost)."""
     if algo == "allreduce_redoub":
+        # ceil(log2 n) also under the remainder stage: the busiest rank
+        # (a fold destination) compresses floor(log2 n) doubling rounds
+        # plus the unfold send; it *receives* in the fold pre-hop.
         return max(int(math.ceil(math.log2(max(n, 2)))), 1)
     if algo == "allreduce_ring":
         return max(n - 1, 1) + 1

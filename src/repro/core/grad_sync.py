@@ -64,6 +64,22 @@ class SyncConfig:
     chunk: int = CHUNK
     pipeline_chunks: int = 0
 
+    def __post_init__(self):
+        # Fail at construction time, not inside a traced scan body.
+        if self.pipeline_chunks < 0 or (
+            self.pipeline_chunks > 0
+            and self.pipeline_chunks & (self.pipeline_chunks - 1)
+        ):
+            raise ValueError(
+                "SyncConfig.pipeline_chunks must be 0 (plan the ring depth "
+                "from the cost model) or a power of two >= 1 (forced "
+                f"depth); got {self.pipeline_chunks!r}"
+            )
+        if self.chunk < 1:
+            raise ValueError(
+                f"SyncConfig.chunk must be >= 1 element; got {self.chunk!r}"
+            )
+
     def with_algo(self, algo: str) -> "SyncConfig":
         if self.gz is None:
             raise ValueError(
@@ -133,8 +149,16 @@ def dp_allreduce_grads(grads, axis_names: Sequence[str], sync: SyncConfig = Sync
     """Sum a gradient pytree across data-parallel mesh axes (gZ-accelerated).
 
     Returns the summed pytree (callers divide by the DP degree for a mean).
+    Mesh axes may have ANY size (non-power-of-two data-parallel degrees
+    route through the remainder-stage redoub / generalized ring schedules
+    — DESIGN.md §7); an empty axis list is a config error, not a no-op.
     """
     axis_names = tuple(axis_names)
+    if not axis_names:
+        raise ValueError(
+            "dp_allreduce_grads: axis_names is empty — pass the mesh axes "
+            "to sum over (a silent no-op here would skip gradient sync)"
+        )
     flat, unravel = ravel_pytree(grads)
     dtype = flat.dtype
     out = _allreduce_flat(flat.astype(jnp.float32), axis_names, sync)

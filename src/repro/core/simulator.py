@@ -41,17 +41,35 @@ def _roundtrip(comp, x, eb):
 
 
 def sim_allreduce_redoub(xs: List[np.ndarray], cfg: GZConfig):
-    """Recursive doubling: log2(N) exchange rounds, compress full message."""
+    """Recursive doubling with the non-power-of-two remainder stage.
+
+    Mirrors collectives._allreduce_redoub exactly: the n - 2**floor(log2 n)
+    surplus ranks fold into their odd neighbour in a compressed pre-hop,
+    the XOR doubling runs over the power-of-two participants, and a
+    compressed post-hop unfolds the result back to the folded ranks —
+    same number and order of lossy events, so error_budget.lossy_hops
+    ("allreduce_redoub") applies verbatim.
+    """
     n = len(xs)
-    assert n & (n - 1) == 0
     comp = cfg.compressor()
     eb = error_budget.allocate(cfg.eb, "allreduce_redoub", n,
                                worst_case=cfg.worst_case_budget)
+    p = 1 << (n.bit_length() - 1)
+    rem = n - p
+    phys = lambda v: 2 * v + 1 if v < rem else v + rem
     acc = [x.astype(np.float32).copy() for x in xs]
-    for k in range(int(math.log2(n))):
+    for i in range(rem):  # fold pre-hop: even -> odd neighbour
+        acc[2 * i + 1] = acc[2 * i + 1] + _roundtrip(comp, acc[2 * i], eb)
+    virt = {phys(v): v for v in range(p)}  # physical -> virtual participant
+    for k in range(int(math.log2(p))):
         dist = 1 << k
-        sent = [_roundtrip(comp, acc[r], eb) for r in range(n)]
-        acc = [acc[r] + sent[r ^ dist] for r in range(n)]
+        sent = {pr: _roundtrip(comp, acc[pr], eb) for pr in virt}
+        acc = [
+            acc[r] + sent[phys(virt[r] ^ dist)] if r in virt else acc[r]
+            for r in range(n)
+        ]
+    for i in range(rem):  # unfold post-hop: odd -> even neighbour
+        acc[2 * i] = _roundtrip(comp, acc[2 * i + 1], eb)
     return acc
 
 

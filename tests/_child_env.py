@@ -1,0 +1,29 @@
+"""Device-count pinning for the multi-device child scripts.
+
+Must be importable BEFORE jax (it only touches os.environ): the children
+import it first, pin XLA_FLAGS, and only then import jax / the shared
+check bodies.
+"""
+import os
+import re
+
+
+def pin_device_count(default: int) -> int:
+    """Resolve the device count and pin XLA_FLAGS to it.
+
+    An explicit GZ_CHILD_DEVICES (the pytest runners' parameter) always
+    wins — an ambient XLA_FLAGS from the developer's shell must not
+    silently change what a named test exercises; a pre-set XLA_FLAGS
+    count is honored only when GZ_CHILD_DEVICES is absent (the CI leg).
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    m = re.search(r"--xla_force_host_platform_device_count=(\d+)", flags)
+    env = os.environ.get("GZ_CHILD_DEVICES")
+    n = int(env) if env is not None else (int(m.group(1)) if m else default)
+    if m:
+        flags = re.sub(r"--xla_force_host_platform_device_count=\d+",
+                       f"--xla_force_host_platform_device_count={n}", flags)
+    else:
+        flags = (flags + f" --xla_force_host_platform_device_count={n}").strip()
+    os.environ["XLA_FLAGS"] = flags
+    return n

@@ -1,18 +1,21 @@
-"""Child script: validates shard_map gZ collectives on 8 virtual devices.
+"""Child script: validates shard_map gZ collectives on N virtual devices.
 
 Run by tests/test_collectives_multidevice.py in a subprocess with
-XLA_FLAGS=--xla_force_host_platform_device_count=8 (must be set before jax
-import, which is why this is a separate process).  Prints 'OK <name>' per
-passing check; any assertion failure propagates as nonzero exit.
+XLA_FLAGS=--xla_force_host_platform_device_count=<N> (must be set before
+jax import, which is why this is a separate process).  N defaults to 8;
+an explicit GZ_CHILD_DEVICES always wins, then a pre-set XLA_FLAGS
+device count (_child_env.pin_device_count) — the CI non-power-of-two leg
+runs the whole file at N=6.  Prints 'OK <name>' per passing check; any
+assertion failure propagates as nonzero exit.
 """
-import os
+from _child_env import pin_device_count
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+N = pin_device_count(8)
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.collectives import (
     GZConfig,
@@ -24,8 +27,7 @@ from repro.core.collectives import (
 )
 from repro.core.shmap import shard_map
 
-N = 8
-D = 8192
+D = 1024 * N
 mesh = jax.make_mesh((N,), ("x",))
 rng = np.random.default_rng(0)
 # smooth per-rank fields (paper's RTM-like regime)
@@ -304,19 +306,120 @@ print(f"OK CollectiveResult wire={plan.wire_bytes}B ratio={plan.ratio:.2f}")
 
 # Rebinding the same axis NAME to a different size must not reuse a stale
 # resolved size from the memoized one-shot communicators: the wrapper path
-# already ran "x" at size 8 above; now run "x" at size 2 in the same
-# process and demand the true 2-rank sum.
-mesh2 = jax.make_mesh((2, 4), ("x", "y"))
-f2ax = jax.jit(shard_map(
-    lambda x: gz_allreduce(x[0], "x", cfg)[None],
-    mesh=mesh2, in_specs=(P(("x", "y"), None),), out_specs=P(("x", "y"), None),
-))
-x8 = base  # 8 rows -> 2 "x" groups of 4 "y" rows; sum over "x" pairs rows
-out2 = np.asarray(f2ax(x8))
-want2 = x8.reshape(2, 4, -1).sum(axis=0)  # the true sum over the "x" axis
-err2 = np.abs(out2.reshape(2, 4, -1) - want2[None]).max()
-assert err2 <= 1e-4 * 1.05 + np.abs(want2).max() * 1e-6, \
-    f"stale axis-size plan reused across meshes: err {err2}"
-print("OK same axis name at a different mesh size replans correctly")
+# already ran "x" at size N above; now run "x" at size 2 in the same
+# process and demand the true 2-rank sum.  (Needs the 8-device grid.)
+if N == 8:
+    mesh2 = jax.make_mesh((2, 4), ("x", "y"))
+    f2ax = jax.jit(shard_map(
+        lambda x: gz_allreduce(x[0], "x", cfg)[None],
+        mesh=mesh2, in_specs=(P(("x", "y"), None),),
+        out_specs=P(("x", "y"), None),
+    ))
+    x8 = base  # 8 rows -> 2 "x" groups of 4 "y" rows; sum over "x" pairs
+    out2 = np.asarray(f2ax(x8))
+    want2 = x8.reshape(2, 4, -1).sum(axis=0)  # true sum over the "x" axis
+    err2 = np.abs(out2.reshape(2, 4, -1) - want2[None]).max()
+    assert err2 <= 1e-4 * 1.05 + np.abs(want2).max() * 1e-6, \
+        f"stale axis-size plan reused across meshes: err {err2}"
+    print("OK same axis name at a different mesh size replans correctly")
+
+# ---------------------------------------------------------------------------
+# Non-power-of-two axes (ISSUE 4): the remainder-stage redoub, generalized
+# ring and virtual-pow2 trees on 3/5/6-device submeshes vs lax.psum / exact
+# oracles, within the configured error bound; the plan layer's wire
+# accounting must price the ceil step counts the execute layer ships.
+# The check bodies are shared with the 12-rank leg (_nonpow2_checks.py).
+# ---------------------------------------------------------------------------
+import _nonpow2_checks as npc
+
+if N >= 6:
+    d_np = 4000  # indivisible by 3/5/6: exercises the ring tail padding
+    for n_sub in (3, 5, 6):
+        mesh_sub = Mesh(np.array(jax.devices()[:n_sub]), ("s",))
+        npc.check_allreduce_vs_psum(mesh_sub, "s", n_sub, d_np, rng)
+        npc.check_plan_accounting("s", n_sub, d_np)
+    for n_sub in (3, 6):
+        mesh_sub = Mesh(np.array(jax.devices()[:n_sub]), ("s",))
+        npc.check_scatter_broadcast(mesh_sub, "s", n_sub, d_np, rng)
+
+    # Remainder-stage redoub: fused single-pass hops must stay bitwise
+    # identical to the two-kernel composition (pre-fold, doubling, unfold
+    # all included), and the pipelined ring must stay within budget.
+    mesh6 = Mesh(np.array(jax.devices()[:6]), ("s",))
+    data6 = np.cumsum(rng.normal(0, 0.01, (6, d_np)), axis=1).astype(
+        np.float32
+    )
+    outs_fh = {}
+    for fh in (True, False):
+        c6 = GZConfig(eb=1e-4, algo="redoub", capacity_factor=1.2,
+                      fused_hop=fh)
+        f = npc._shmap(
+            lambda x, c=c6: gz_allreduce(x[0], "s", c)[None],
+            (P("s", None),), P("s", None), mesh6,
+        )
+        outs_fh[fh] = np.asarray(f(data6))
+    assert np.array_equal(outs_fh[True], outs_fh[False]), \
+        "remainder redoub: fused hop != two-kernel"
+    print("OK nonpow2 fused_hop bitwise == two-kernel (redoub, n=6)")
+
+    c6p = GZConfig(eb=1e-4, algo="ring", capacity_factor=1.2,
+                   pipeline_chunks=2)
+    f = npc._shmap(
+        lambda x: gz_allreduce(x[0], "s", c6p)[None],
+        (P("s", None),), P("s", None), mesh6,
+    )
+    out = np.asarray(f(data6))
+    want6 = data6.sum(axis=0)
+    err = np.abs(out - want6[None]).max()
+    assert err <= 1e-4 * 1.05 + np.abs(want6).max() * 1e-6, err
+    print(f"OK nonpow2 pipelined ring n=6 err={err:.2e}")
+
+# ---------------------------------------------------------------------------
+# Guard rails (ISSUE 4 satellites): bad shapes / roots / knobs fail with
+# actionable ValueErrors at trace (or construction) time — never a bare
+# AssertionError from the execute layer.
+# ---------------------------------------------------------------------------
+
+
+def _expect_value_error(fn, *fragments):
+    try:
+        fn()
+    except ValueError as e:
+        for frag in fragments:
+            assert frag in str(e), (frag, str(e))
+    else:
+        raise AssertionError(f"expected ValueError mentioning {fragments}")
+
+
+_expect_value_error(
+    lambda: shmap(
+        lambda x: gz_reduce_scatter(x[0][: D - 1], "x", cfg),
+        (P("x", None),), P("x"),
+    )(base),
+    "gz_reduce_scatter", f"size {N}", "divisible",
+)
+_expect_value_error(
+    lambda: shmap(
+        lambda x: gz_scatter(x[0], "x", cfg, root=1), (P("x", None),), P("x")
+    )(xin),
+    "gz_scatter", "root 0",
+)
+_expect_value_error(
+    lambda: shmap(
+        lambda x: gz_broadcast(x[0], "x", cfg, root=2)[None],
+        (P("x", None),), P("x", None),
+    )(xb),
+    "gz_broadcast", "root 0",
+)
+_expect_value_error(
+    lambda: shmap(
+        lambda x: gz_scatter(x[0][: N * D - 1], "x", cfg),
+        (P("x", None),), P("x"),
+    )(xin),
+    "gz_scatter", "divisible",
+)
+_expect_value_error(lambda: GZConfig(pipeline_chunks=3), "power of two")
+_expect_value_error(lambda: GZConfig(pipeline_chunks=0), "power of two")
+print("OK guard rails raise actionable ValueErrors")
 
 print("ALL OK")

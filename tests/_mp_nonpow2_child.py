@@ -1,0 +1,30 @@
+"""Child script: gZ collectives on a LARGE non-power-of-two axis.
+
+The main child (tests/_mp_collectives_child.py) sweeps submesh sizes
+3/5/6 inside its 8-device grid; this one covers the acceptance point the
+8-device host cannot: a full mesh bigger than the largest power of two
+below it (default N=12, override with GZ_CHILD_DEVICES), where the
+remainder stage folds 4 ranks and the virtual scatter tree pads to 16
+slots.  The check bodies are shared with the main child
+(_nonpow2_checks.py): allreduce (all three algorithms) vs a lax.psum
+oracle, scatter/broadcast vs exact oracles, plan-layer ceil-step wire
+accounting.
+"""
+from _child_env import pin_device_count
+
+N = pin_device_count(12)
+
+import numpy as np
+import jax
+
+import _nonpow2_checks as npc
+
+D = 4000  # indivisible by 12: exercises the ring tail padding
+mesh = jax.make_mesh((N,), ("x",))
+rng = np.random.default_rng(0)
+
+npc.check_allreduce_vs_psum(mesh, "x", N, D, rng)
+npc.check_scatter_broadcast(mesh, "x", N, D, rng)
+npc.check_plan_accounting("x", N, D)
+
+print("ALL OK")

@@ -1,0 +1,100 @@
+"""Shared non-power-of-two check bodies for the multi-device children.
+
+Imported (as a sibling module, sys.path[0] == tests/) by both
+tests/_mp_collectives_child.py (3/5/6-rank submeshes inside the 8-device
+grid, and the whole-mesh N=6 CI leg) and tests/_mp_nonpow2_child.py
+(full 12-rank mesh), so the two subprocess legs cannot drift apart.
+Import only AFTER the child has pinned XLA_FLAGS — this module imports
+jax.  Every check prints one 'OK ...' line and raises on failure.
+"""
+import numpy as np
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cost_model, error_budget
+from repro.core.collectives import GZConfig, gz_allreduce, gz_broadcast, gz_scatter
+from repro.core.comm import GZCommunicator, _stream_bytes
+from repro.core.shmap import shard_map
+
+EB = 1e-4
+CAPACITY = 1.2
+
+
+def _shmap(f, in_specs, out_specs, mesh):
+    return jax.jit(
+        shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    )
+
+
+def _field(rng, shape):
+    """Smooth per-rank fields (the paper's RTM-like regime)."""
+    return np.cumsum(rng.normal(0, 0.01, shape), axis=-1).astype(np.float32)
+
+
+def check_allreduce_vs_psum(mesh, axis, n, d, rng):
+    """redoub (remainder stage) / ring / intring vs the lax.psum oracle,
+    within the configured error bound, no capacity overflow."""
+    data = _field(rng, (n, d))
+    oracle = np.asarray(
+        _shmap(lambda x: jax.lax.psum(x[0], axis)[None],
+               (P(axis, None),), P(axis, None), mesh)(data)
+    )[0]
+    for algo, tol_hops in (("redoub", 1.05), ("ring", 1.05),
+                           ("intring", n * 1.05)):
+        cfg = GZConfig(eb=EB, algo=algo, capacity_factor=CAPACITY)
+
+        def body(x, c=cfg):
+            out, ovf = gz_allreduce(x[0], axis, c, return_info=True)
+            return out[None], ovf[None]
+
+        out, ovf = _shmap(
+            body, (P(axis, None),), (P(axis, None), P(axis)), mesh
+        )(data)
+        out = np.asarray(out)
+        assert not np.asarray(ovf).any(), f"{algo} n={n}: capacity overflow"
+        err = np.abs(out - oracle[None]).max()
+        bound = EB * tol_hops + np.abs(oracle).max() * 1e-6
+        assert err <= bound, f"{algo} n={n}: err {err} > {bound}"
+        print(f"OK nonpow2 allreduce_{algo} n={n} err={err:.2e}")
+
+
+def check_scatter_broadcast(mesh, axis, n, d_bcast, rng):
+    """Virtual-pow2-tree scatter and ceil-log broadcast vs exact oracles
+    (one lossy hop each); broadcast additionally rank-identical."""
+    cfg = GZConfig(eb=EB, capacity_factor=CAPACITY)
+    full = _field(rng, n * 512)
+    xin = np.zeros((n, n * 512), np.float32)
+    xin[0] = full
+    out = np.asarray(
+        _shmap(lambda x: gz_scatter(x[0], axis, cfg),
+               (P(axis, None),), P(axis), mesh)(xin)
+    ).reshape(n, 512)
+    err = np.abs(out - full.reshape(n, 512)).max()
+    assert err <= EB * 1.001 + np.abs(full).max() * 2e-7, err
+    print(f"OK nonpow2 scatter n={n} err={err:.2e}")
+
+    xb = np.zeros((n, d_bcast), np.float32)
+    xb[0] = _field(rng, d_bcast)
+    out = np.asarray(
+        _shmap(lambda x: gz_broadcast(x[0], axis, cfg)[None],
+               (P(axis, None),), P(axis, None), mesh)(xb)
+    )
+    err = np.abs(out - xb[0][None]).max()
+    assert err <= EB * 1.001 + np.abs(xb[0]).max() * 2e-7, err
+    assert np.abs(out - out[0:1]).max() == 0.0
+    print(f"OK nonpow2 broadcast n={n} err={err:.2e}")
+
+
+def check_plan_accounting(axis, n, d):
+    """Plan-side accounting: ceil step counts agreeing with the cost
+    model's single authority (the floor-log2 regression), and the
+    remainder hop charged to the per-stage budget."""
+    comm = GZCommunicator(
+        axis, config=GZConfig(eb=EB, algo="redoub", capacity_factor=CAPACITY),
+        axis_size=n,
+    )
+    pl = comm.plan("allreduce", d)
+    want_wire = cost_model.steps_for("redoub", n) * _stream_bytes(d, CAPACITY)
+    assert pl.wire_bytes == want_wire, (pl.wire_bytes, want_wire)
+    assert pl.eb_stage == EB / error_budget.lossy_hops("allreduce_redoub", n)
+    print(f"OK nonpow2 plan accounting n={n} wire={pl.wire_bytes}B")

@@ -12,17 +12,30 @@ import sys
 import pytest
 
 CHILD = pathlib.Path(__file__).parent / "_mp_collectives_child.py"
+NONPOW2_CHILD = pathlib.Path(__file__).parent / "_mp_nonpow2_child.py"
 SRC = str(pathlib.Path(__file__).parent.parent / "src")
+
+
+def _run_child(child, **env):
+    proc = subprocess.run(
+        [sys.executable, str(child)],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env={**os.environ, "PYTHONPATH": SRC, **env},
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL OK" in proc.stdout
 
 
 @pytest.mark.slow
 def test_collectives_on_8_devices():
-    proc = subprocess.run(
-        [sys.executable, str(CHILD)],
-        capture_output=True,
-        text=True,
-        timeout=900,
-        env={**os.environ, "PYTHONPATH": SRC},
-    )
-    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
-    assert "ALL OK" in proc.stdout
+    # Includes the non-power-of-two 3/5/6 submesh sweep (ISSUE 4).
+    _run_child(CHILD)
+
+
+@pytest.mark.slow
+def test_nonpow2_collectives_on_12_devices():
+    # Remainder stage at a full mesh above the 8-device grid: 12 ranks
+    # fold 4 into the doubling; the scatter tree pads to 16 virtual slots.
+    _run_child(NONPOW2_CHILD, GZ_CHILD_DEVICES="12")

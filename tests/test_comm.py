@@ -207,6 +207,42 @@ def test_pipelined_wire_accounting_matches_execute_padding():
     )
 
 
+def test_step_counts_agree_with_cost_model_for_all_axis_sizes():
+    """PR 4 regression: _wire_accounting used floor(log2 n) where the cost
+    model used ceil — plans under-reported wire bytes on non-power-of-two
+    axes.  Both now read cost_model.steps_for; the authoritative check
+    loop (n in 2..33, redoub/broadcast/scatter) lives next to the
+    accounting it guards and is shared with benchmarks/regression_check."""
+    import math
+
+    from repro.core.comm import assert_step_count_consistency
+
+    assert_step_count_consistency()
+    # And it genuinely fires: reintroduce the floor-log2 bug and the
+    # check must catch it at the first non-power-of-two axis.
+    orig = cm.steps_for
+    cm.steps_for = lambda algo, n: max(int(math.log2(max(n, 2))), 1)
+    try:
+        with pytest.raises(AssertionError):
+            assert_step_count_consistency(n_range=(6,))
+    finally:
+        cm.steps_for = orig
+
+
+def test_plan_nonpow2_axis_resolves_and_prices_remainder():
+    """Non-power-of-two axes plan cleanly: ceil step counts in the wire
+    accounting and the remainder hop charged to the per-stage budget."""
+    from repro.core import error_budget
+    from repro.core.comm import _stream_bytes
+
+    for n in (3, 5, 6, 12):
+        comm = _comm(n=n, config=GZConfig(eb=1e-3, algo="redoub"))
+        p = comm.plan("allreduce", 8192)
+        assert p.wire_bytes == cm.steps_for("redoub", n) * _stream_bytes(8192, 0.6)
+        assert p.eb_stage == error_budget.allocate(1e-3, "allreduce_redoub", n)
+        assert p.eb_stage == 1e-3 / n  # non-pow2: n lossy hops (unfold included)
+
+
 def test_policy_registry_extensible():
     register_policy("always-redoub", lambda req: ("redoub", 1))
     try:

@@ -13,7 +13,7 @@ from repro.core.collectives import GZConfig
 
 @settings(max_examples=10, deadline=None)
 @given(
-    n=st.sampled_from([2, 4, 8]),
+    n=st.sampled_from([2, 3, 4, 6, 8, 12]),  # non-pow2: remainder stage
     eb=st.sampled_from([1e-3, 1e-4]),
     seed=st.integers(0, 1000),
 )

@@ -1,0 +1,141 @@
+"""Non-power-of-two axis support (ISSUE 4): remainder-stage layout and
+error budget, construction-time knob validation, and the hypothesis
+property that the remainder-stage redoub stays inside the end-to-end
+error bound across shapes and axis sizes.
+
+Single-process only — plan/budget math and the global-view simulator need
+no devices.  The shard_map execute paths get the real multi-device
+treatment on 3/5/6-rank submeshes in tests/_mp_collectives_child.py and
+on 12 ranks in tests/_mp_nonpow2_child.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import error_budget, simulator
+from repro.core.collectives import GZConfig, _redoub_layout
+from repro.core.grad_sync import SyncConfig
+
+
+# ---------------------------------------------------------------------------
+# Remainder layout + step counts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,p,rem", [
+    (2, 2, 0), (3, 2, 1), (4, 4, 0), (5, 4, 1), (6, 4, 2), (7, 4, 3),
+    (8, 8, 0), (12, 8, 4), (33, 32, 1),
+])
+def test_redoub_layout(n, p, rem):
+    got_p, got_rem, phys = _redoub_layout(n)
+    assert (got_p, got_rem) == (p, rem)
+    # phys is a bijection from virtual participants onto the physical
+    # ranks that are NOT fold sources (the even halves of the first rem
+    # pairs sit out).
+    physical = sorted(phys(v) for v in range(p))
+    fold_sources = [2 * i for i in range(rem)]
+    assert physical == sorted(set(range(n)) - set(fold_sources))
+
+
+def test_steps_for_values():
+    assert [cm.steps_for("redoub", n) for n in (2, 3, 4, 5, 8, 9, 16, 17)] \
+        == [1, 2, 2, 3, 3, 4, 4, 5]
+    assert cm.steps_for("binomial", 6) == 3
+    assert cm.steps_for("ring", 6) == 5
+    assert cm.steps_for("intring", 6) == 10
+    assert cm.steps_for("direct", 6) == 1
+    with pytest.raises(ValueError, match="unknown algo"):
+        cm.steps_for("nope", 8)
+
+
+def test_lossy_hops_redoub_remainder():
+    # pow2: n-1 merge events; non-pow2: n-1 merges + the unfold hop.
+    assert error_budget.lossy_hops("allreduce_redoub", 8) == 7
+    assert error_budget.lossy_hops("allreduce_redoub", 3) == 3
+    assert error_budget.lossy_hops("allreduce_redoub", 6) == 6
+    assert error_budget.lossy_hops("allreduce_redoub", 12) == 12
+    # redoub never stacks worse than ring at the same n
+    for n in range(2, 34):
+        assert error_budget.lossy_hops("allreduce_redoub", n) <= \
+            error_budget.lossy_hops("allreduce_ring", n)
+
+
+def test_redoub_cost_charges_remainder_hop():
+    """The remainder pre/post stage must make a non-pow2 redoub strictly
+    more expensive than the pow2 axis just below it — that is what shifts
+    the ring-vs-redoub crossover at non-pow2 N."""
+    D = 64 << 20
+    for fused in (True, False):
+        t8 = cm.allreduce_redoub_gz(D, 8, 20.0, cm.TPU_V5E, fused_hop=fused)
+        t12 = cm.allreduce_redoub_gz(D, 12, 20.0, cm.TPU_V5E, fused_hop=fused)
+        t16 = cm.allreduce_redoub_gz(D, 16, 20.0, cm.TPU_V5E, fused_hop=fused)
+        assert t8 < t12, "remainder stage not priced"
+        assert t16 < t12, "non-pow2 must pay the unfold on top of ceil steps"
+
+
+# ---------------------------------------------------------------------------
+# Construction-time knob validation (satellites)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad", [0, -1, 3, 6, 12])
+def test_gzconfig_rejects_bad_pipeline_chunks(bad):
+    with pytest.raises(ValueError, match="pipeline_chunks"):
+        GZConfig(pipeline_chunks=bad)
+
+
+@pytest.mark.parametrize("good", [1, 2, 4, 16])
+def test_gzconfig_accepts_pow2_pipeline_chunks(good):
+    assert GZConfig(pipeline_chunks=good).pipeline_chunks == good
+
+
+def test_syncconfig_rejects_bad_pipeline_chunks():
+    with pytest.raises(ValueError, match="pipeline_chunks"):
+        SyncConfig(pipeline_chunks=3)
+    with pytest.raises(ValueError, match="pipeline_chunks"):
+        SyncConfig(pipeline_chunks=-2)
+    assert SyncConfig(pipeline_chunks=0).pipeline_chunks == 0  # auto depth
+    assert SyncConfig(pipeline_chunks=4).pipeline_chunks == 4
+
+
+def test_dp_allreduce_grads_rejects_empty_axes():
+    from repro.core.grad_sync import dp_allreduce_grads
+
+    with pytest.raises(ValueError, match="axis_names is empty"):
+        dp_allreduce_grads({"w": np.ones(4, np.float32)}, ())
+
+
+# ---------------------------------------------------------------------------
+# Simulator: remainder-stage redoub within budget — exhaustive small sweep
+# over n AND a deterministic shape sweep (off-block / whole-block / ragged
+# tails), so the budget soundness is exercised even where hypothesis is
+# unavailable; the randomized property version lives in
+# tests/test_nonpow2_property.py.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2, 3, 5, 6, 7, 8, 12])
+def test_sim_remainder_redoub_within_budget(n):
+    rng = np.random.default_rng(n)
+    xs = [np.cumsum(rng.normal(0, 0.01, 2048)).astype(np.float32)
+          for _ in range(n)]
+    cfg = GZConfig(eb=1e-4, capacity_factor=1.3, worst_case_budget=True)
+    outs = simulator.sim_allreduce_redoub(xs, cfg)
+    exact = np.sum(xs, axis=0)
+    slack = max(np.abs(exact).max(), 1.0) * 1e-6
+    for o in outs:
+        assert np.abs(o - exact).max() <= 1e-4 + slack
+
+
+@pytest.mark.parametrize("d", [257, 1024, 1537])
+@pytest.mark.parametrize("n", [3, 6, 13])
+def test_sim_remainder_redoub_shape_sweep(n, d):
+    rng = np.random.default_rng(d * n)
+    xs = [np.cumsum(rng.normal(0, 0.01, d)).astype(np.float32)
+          for _ in range(n)]
+    cfg = GZConfig(eb=1e-3, capacity_factor=1.3, worst_case_budget=True)
+    outs = simulator.sim_allreduce_redoub(xs, cfg)
+    exact = np.sum(xs, axis=0)
+    slack = max(np.abs(exact).max(), 1.0) * 1e-6
+    for o in outs:
+        assert np.abs(o - exact).max() <= 1e-3 + slack

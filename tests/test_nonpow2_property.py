@@ -1,0 +1,40 @@
+"""Hypothesis property: the remainder-stage redoub stays inside the
+end-to-end error bound across shapes, axis sizes and bounds (ISSUE 4).
+
+Kept in its own module because ``pytest.importorskip`` at module scope
+skips the whole file — the deterministic non-pow2 tests live in
+tests/test_nonpow2.py and must run even without hypothesis.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e .[dev])"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import simulator  # noqa: E402
+from repro.core.collectives import GZConfig  # noqa: E402
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 13),
+    d=st.sampled_from([257, 1024, 1537]),  # off-block, whole-block, ragged
+    eb=st.sampled_from([1e-3, 1e-4]),
+    seed=st.integers(0, 1000),
+)
+def test_property_remainder_redoub_budget_sound(n, d, eb, seed):
+    """For ANY axis size (remainder folds included) the end-to-end redoub
+    error stays <= eb under worst-case allocation: the fold pre-hops keep
+    the n-1 merge-tree count and the unfold post-hop is the one extra
+    quantization lossy_hops charges."""
+    rng = np.random.default_rng(seed)
+    xs = [np.cumsum(rng.normal(0, 0.01, d)).astype(np.float32)
+          for _ in range(n)]
+    cfg = GZConfig(eb=eb, capacity_factor=1.3, worst_case_budget=True)
+    outs = simulator.sim_allreduce_redoub(xs, cfg)
+    exact = np.sum(xs, axis=0)
+    slack = max(np.abs(exact).max(), 1.0) * 1e-6
+    for o in outs:
+        assert np.abs(o - exact).max() <= eb + slack
