@@ -38,6 +38,45 @@ def check_step_count_consistency() -> None:
     print("step-count consistency: plan accounting == cost model for n in 2..33")
 
 
+def check_scatter_wire(here: pathlib.Path) -> None:
+    """Provisioned scatter wire vs the committed BENCH_scatter.json.
+
+    ``chunk_streams``/``wire_bytes`` are STATIC schedule quantities (the
+    trimmed-slab table, not wall-clock), so the comparison is exact and
+    any increase is FATAL regardless of ``--strict`` — shipping padding
+    chunks again (the PR 4 virtual-tree waste this baseline pins at n-1
+    root streams for every n, pow2 or not) is a structural regression
+    that must never ride in under the >20% timing threshold.
+    """
+    from benchmarks import scatter_bench
+
+    base_path = here / "BENCH_scatter.json"
+    if not base_path.exists():
+        # A missing baseline must not read as "no regression" — this gate
+        # is fatal by design (run benchmarks/run.py to record it).
+        print(f"::error::scatter wire baseline missing: {base_path}")
+        sys.exit(1)
+    base = json.loads(base_path.read_text())["scatter"]
+    now = scatter_bench.run([], record_baseline=False)
+    bad = []
+    for n, rec in sorted(base.items(), key=lambda kv: int(kv[0])):
+        cur = now.get(n)
+        if cur is None:
+            bad.append(f"n={n}: baseline row missing from current run")
+            continue
+        for key in ("chunk_streams", "wire_bytes"):
+            if cur[key] > rec[key]:
+                bad.append(
+                    f"n={n}: {key} grew {rec[key]} -> {cur[key]} "
+                    f"(padding chunks back on the wire?)")
+    if bad:
+        for msg in bad:
+            print(f"::error::scatter wire regression: {msg}")
+        sys.exit(1)
+    print(f"scatter wire: provisioned root streams/bytes match baseline "
+          f"for n in {sorted(int(k) for k in base)}")
+
+
 def _ratios(record):
     """{size: {fused metric: fused_us / reference_us}} for a benchmark
     record shaped {size: {"fused": {..._us}, "unfused"|"two_kernel": {...}}}.
@@ -84,8 +123,9 @@ def main() -> None:
     here = pathlib.Path(__file__).parent
     from benchmarks import compressor_char, hop_bench
 
-    # Structural invariant, independent of timing noise: fatal on mismatch.
+    # Structural invariants, independent of timing noise: fatal on mismatch.
     check_step_count_consistency()
+    check_scatter_wire(here)
 
     regressions = []
 

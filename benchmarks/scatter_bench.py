@@ -1,13 +1,45 @@
-"""Figs. 11/12 analogs: gZ-Scatter vs Cray-MPI-model binomial scatter."""
+"""Figs. 11/12 analogs: gZ-Scatter vs Cray-MPI-model binomial scatter.
+
+PR 5 (trimmed-slab scatter) additions: the sweep includes NON-power-of-two
+GPU counts (9, 24, 96) — the pricing path the pow2-only sweep never
+exercised, and exactly where the padded virtual tree used to ship
+2**ceil(log2 n) - 1 chunk streams for n-1 chunks of data.  The run
+records ``benchmarks/BENCH_scatter.json`` with the per-n provisioned root
+wire (chunk streams + bytes for the Fig. 12 message size): those are
+STATIC schedule quantities, not timings, so ``regression_check.py``
+compares them exactly and treats any increase as fatal — reintroducing
+padding chunks cannot hide inside timing noise.
+"""
 from __future__ import annotations
 
+import json
+import pathlib
+
 from repro.core import cost_model as cm
+from repro.core.comm import _wire_accounting
 
 HW = cm.A100_SLINGSHOT
 RATIO = 60.0
+FIG12_MB = 646
+# Fig 12 pow2 sweep + the non-pow2 counts the padded tree over-provisioned
+# worst (9 -> 7/16 slots padded, 24 -> 8/32, 96 -> 32/128).
+GPU_COUNTS = [8, 9, 16, 24, 32, 64, 96, 128, 256, 512]
+BASELINE_PATH = pathlib.Path(__file__).parent / "BENCH_scatter.json"
 
 
-def run(csv_rows: list):
+def wire_record(n: int, d_bytes: float) -> dict:
+    """Static provisioned-wire record for one axis size: what the plan
+    layer reports for a scatter of ``d_bytes`` over ``n`` ranks."""
+    n_elems = int(d_bytes / 4)
+    _, wire, raw = _wire_accounting("scatter", "binomial", n_elems, n, 0.6, 1)
+    return {
+        "chunk_streams": cm.scatter_root_chunk_streams(n),
+        "wire_bytes": wire,
+        "provisioned_ratio": round(raw / wire, 4),
+    }
+
+
+def run(csv_rows: list, record_baseline: bool = True) -> dict:
     # Fig 11: message sizes at 64 GPUs
     for mb in [50, 100, 200, 400, 600]:
         d = mb * 1e6
@@ -17,16 +49,31 @@ def run(csv_rows: list):
             (f"fig11_scatter_{mb}MB_64gpu", gz * 1e6,
              f"speedup_vs_cray={base/gz:.2f}")
         )
-    # Fig 12: GPU counts at 646 MB
-    d = 646e6
+    # Fig 12: GPU counts at 646 MB — pow2 AND non-pow2 rows
+    d = FIG12_MB * 1e6
+    record = {}
     speedups = {}
-    for n in [8, 16, 32, 64, 128, 256, 512]:
+    for n in GPU_COUNTS:
         gz = cm.scatter_binomial_gz(d, n, RATIO, HW)
         base = cm.scatter_uncompressed_binomial(d, n, HW)
         speedups[n] = base / gz
+        rec = wire_record(n, d)
+        rec["gz_us"] = round(gz * 1e6, 2)
+        rec["speedup_vs_cray"] = round(base / gz, 4)
+        record[str(n)] = rec
         csv_rows.append(
-            (f"fig12_scatter_646MB_{n}gpu", gz * 1e6,
-             f"speedup_vs_cray={base/gz:.2f}")
+            (f"fig12_scatter_{FIG12_MB}MB_{n}gpu", gz * 1e6,
+             f"speedup_vs_cray={base/gz:.2f},"
+             f"chunk_streams={rec['chunk_streams']}")
         )
     # paper shape: speedup rises then falls with GPU count, always > 1
     assert all(s > 1 for s in speedups.values())
+    # trimmed schedule: the root provisions exactly n-1 chunk streams at
+    # EVERY n — the padded virtual tree's 2**ceil(log2 n)-1 is gone.
+    for n in GPU_COUNTS:
+        assert record[str(n)]["chunk_streams"] == n - 1, n
+    if record_baseline:
+        BASELINE_PATH.write_text(
+            json.dumps({"scatter": record}, indent=1, sort_keys=True) + "\n"
+        )
+    return record

@@ -40,11 +40,13 @@ non-power-of-two axes with the paper's remainder stage: recursive doubling
 folds the n - 2**floor(log2 n) extra ranks into a partner in a compressed
 pre-hop, runs the doubling over the remaining power-of-two participants,
 and unfolds the result in a compressed post-hop; the binomial
-scatter/broadcast trees run ceil(log2 n) rounds over a virtual
-power-of-two rank space with the out-of-range exchanges dropped.  The
-remainder hops are lossy and are charged to the per-stage error budget
-(core/error_budget.py: redoub's worst-case hop count is n-1 on
-power-of-two axes and n otherwise).
+scatter/broadcast trees run ceil(log2 n) rounds on the trimmed-slab
+schedule (cost_model.binomial_slab_table): each exchange ships only the
+real ranks of the receiver's subtree, so the scatter root wires exactly
+n-1 chunk streams at any axis size and out-of-range exchanges never
+exist.  The remainder hops are lossy and are charged to the per-stage
+error budget (core/error_budget.py: redoub's worst-case hop count is n-1
+on power-of-two axes and n otherwise).
 
 Consistency note (recorded in DESIGN.md): like the paper's gZ-Allreduce,
 "redoub" and "ring" produce rank-wise results that agree only within the
@@ -933,41 +935,19 @@ def gz_allgather(
 # ---------------------------------------------------------------------------
 
 
-def _execute_scatter(x_full, axis_name, cfg: GZConfig, *, root: int = 0):
-    """EXECUTE layer for the binomial-tree scatter (concrete schedule).
+def _scatter_held_buffers(x_full, n, cfg: GZConfig):
+    """Batched per-chunk compression into the tree's held buffers.
 
-    Arbitrary axis sizes run the tree over a VIRTUAL power-of-two rank
-    space of ``2**ceil(log2 n)`` chunk slots (DESIGN.md §7): held buffers
-    are padded with zero streams, rounds whose receiver does not exist are
-    dropped from the ``ppermute``, and slab indexing wraps modulo the
-    virtual size.  Every real rank's ancestor chain stays inside the real
-    ranks (a receiver ``i + span < n`` always has sender ``i < n``), so
-    coverage is unchanged; the cost is that a round's slab may carry some
-    padding chunks — priced by the plan layer's wire accounting.
+    Each chunk is padded to whole row-tiles so chunk boundaries align with
+    block boundaries, then ONE quantize call covers all chunks (the
+    multi-stream analog: what N CUDA streams did in the paper, one grid
+    does here).  Held buffers live in a virtual ``2**ceil(log2 n)`` rank
+    space (zero streams in the padding slots) so slab indexing is uniform;
+    under the trimmed schedule the padding slots never travel and are never
+    read — they exist only to keep the ``dynamic_slice`` extents static.
+    Returns ``(held (packed, bw, anchor), rows, chunk_n, n_virt, ovf)``.
     """
-    n = _axis_size(axis_name)
-    if root != 0:
-        raise ValueError(
-            f"gz_scatter over axis {axis_name!r} (size {n}): only root 0 "
-            f"is supported (the binomial tree is rooted at rank 0); got "
-            f"root={root}.  Roll the payload so the source rank is 0."
-        )
-    if x_full.shape[0] % n != 0:
-        raise ValueError(
-            f"gz_scatter over axis {axis_name!r} (size {n}): the full "
-            "payload's leading dim must be divisible by the axis size "
-            f"(each rank receives one chunk); got shape "
-            f"{tuple(x_full.shape)}"
-        )
-    comp = cfg.compressor()
-    r = lax.axis_index(axis_name)
-    dtype = x_full.dtype
     chunk_n = x_full.shape[0] // n
-
-    # Batched per-chunk compression: each chunk padded to whole row-tiles so
-    # chunk boundaries align with block boundaries, then ONE quantize call
-    # over all chunks (the multi-stream analog: what N CUDA streams did in
-    # the paper, one grid does here).
     rows = ops.n_blocks_for(chunk_n)
     B = ops.BLOCK
     chunks = x_full.astype(jnp.float32).reshape(n, chunk_n)
@@ -984,61 +964,138 @@ def _execute_scatter(x_full, axis_name, cfg: GZConfig, *, root: int = 0):
         )
         pk_list.append(pk)
         ovf |= nw > cap
-    # Virtual power-of-two rank space: pad the held chunk-stream buffers
-    # with zero streams so the tree's slab arithmetic is uniform; perms
-    # below drop exchanges whose receiver does not exist.  The round
-    # count comes from the same authority the plan layer prices
-    # (ceil(log2 n)), so schedule and accounting cannot drift.
-    steps = cost_model.steps_for("binomial", n)
-    n_virt = 1 << steps
+    n_virt = 1 << cost_model.steps_for("binomial", n)
     packed0 = jnp.stack(pk_list)  # (n, cap)
-    held_packed = jnp.zeros((n_virt,) + packed0.shape[1:], packed0.dtype
-                            ).at[:n].set(packed0)
-    held_bw = jnp.zeros((n_virt, rows), bw.dtype).at[:n].set(
-        bw.reshape(n, rows))
-    held_anchor = jnp.zeros((n_virt, rows), anchor.dtype).at[:n].set(
-        anchor.reshape(n, rows))
+    held = (
+        jnp.zeros((n_virt,) + packed0.shape[1:], packed0.dtype).at[:n].set(
+            packed0),
+        jnp.zeros((n_virt, rows), bw.dtype).at[:n].set(bw.reshape(n, rows)),
+        jnp.zeros((n_virt, rows), anchor.dtype).at[:n].set(
+            anchor.reshape(n, rows)),
+    )
+    return held, rows, chunk_n, n_virt, ovf
 
-    # Binomial tree: round k (from top) ships 2**k chunks from each sender
-    # i (i % 2**(k+1) == 0) to i + 2**k.  Payload shrinks by half each
-    # round — each round is its own static ppermute shape.  With
-    # cfg.pipeline_chunks > 1 each round's slab is split into that many
-    # independent piece-permute chains (both powers of two, so pieces
-    # divide the slab): the install of piece g overlaps the wire time of
-    # piece g+1 — the chunked double-buffered analog of the paper's
-    # multi-stream scatter.
+
+def _slab_exchange(held, axis_name, r, perm, start, slab, n_virt, is_recv):
+    """Ship a ``slab``-chunk window of the held buffers along ``perm`` and
+    install it at the receiver's own rank index (everyone else keeps its
+    buffer).  One static ppermute shape per call."""
+    piece = jax.tree.map(
+        lambda h: lax.dynamic_slice(
+            h, (start % n_virt,) + (0,) * (h.ndim - 1),
+            (slab,) + h.shape[1:],
+        ),
+        held,
+    )
+    recv = _ppermute(piece, axis_name, perm)
+    installed = jax.tree.map(
+        lambda h, rv: lax.dynamic_update_slice(
+            h, rv, (r,) + (0,) * (h.ndim - 1)
+        ),
+        held,
+        recv,
+    )
+    return jax.tree.map(
+        lambda new, old: jnp.where(is_recv, new, old), installed, held
+    )
+
+
+def _scatter_tree_trimmed(held, axis_name, r, n, n_virt, cfg: GZConfig):
+    """Trimmed-slab binomial tree (DESIGN.md §7): each round ships only
+    the real ranks of the receiver's subtree.
+
+    The schedule comes from ``cost_model.binomial_slab_table`` — the same
+    authority the plan layer prices and the simulator replays.  Per round:
+    the full-span exchanges (receiver subtree entirely real) run as today,
+    split into ``cfg.pipeline_chunks`` piece-permute chains; the at most
+    one boundary exchange ships its ``n - receiver`` real chunks as ONE
+    extra ppermute shape (its slab size is not a power of two, so it is
+    not piece-split).  The padding slots of the held buffers never travel:
+    the root ships exactly n-1 chunk streams at any axis size.
+    """
+    for span, full_senders, trim in cost_model.binomial_slab_table(n):
+        start = r + span  # sender's outgoing slab start (own subtree's right half)
+        if full_senders:
+            perm = [(i, i + span) for i in full_senders]
+            # Full receivers: the span-aligned odd subtree heads whose
+            # whole virtual subtree is real.
+            is_recv = ((r % (span * 2)) == span) & (r + span <= n)
+            groups = min(max(cfg.pipeline_chunks, 1), span)
+            sub = span // groups
+            for g in range(groups):
+                held = _slab_exchange(
+                    held, axis_name, r + g * sub, perm, start + g * sub,
+                    sub, n_virt, is_recv,
+                )
+        if trim is not None:
+            snd, rcv, slab = trim
+            held = _slab_exchange(
+                held, axis_name, r, [(snd, rcv)], start, slab, n_virt,
+                r == rcv,
+            )
+    return held
+
+
+def _scatter_tree_padded_reference(held, axis_name, r, n, n_virt,
+                                   cfg: GZConfig):
+    """The PR 4 padded virtual-tree walk, kept verbatim as the byte-parity
+    ORACLE for the trimmed schedule (tests only — every real rank must
+    decode identical bytes from both walks; see the multi-device children).
+    Round k ships a full 2**k-chunk slab — padding chunks included — from
+    each sender ``i % 2**(k+1) == 0`` to ``i + 2**k``.
+    """
+    steps = n_virt.bit_length() - 1
     for k in reversed(range(steps)):
         span = 1 << k
         perm = [(i, i + span) for i in range(0, n_virt, span * 2)
                 if i + span < n]
-        start = (r + span) % n_virt  # sender's outgoing slab start
         is_recv = (r % (span * 2)) == span
         groups = min(max(cfg.pipeline_chunks, 1), span)
         sub = span // groups
         for g in range(groups):
-            piece = jax.tree.map(
-                lambda h: lax.dynamic_slice(
-                    h,
-                    ((start + g * sub) % n_virt,) + (0,) * (h.ndim - 1),
-                    (sub,) + h.shape[1:],
-                ),
-                (held_packed, held_bw, held_anchor),
+            held = _slab_exchange(
+                held, axis_name, r + g * sub, perm, r + span + g * sub,
+                sub, n_virt, is_recv,
             )
-            recv = _ppermute(piece, axis_name, perm)
-            # Receivers (r % 2**(k+1) == span) install the piece at their
-            # own rank index; everyone else keeps their buffer.
-            installed = jax.tree.map(
-                lambda h, rv: lax.dynamic_update_slice(
-                    h, rv, (r + g * sub,) + (0,) * (h.ndim - 1)
-                ),
-                (held_packed, held_bw, held_anchor),
-                recv,
-            )
-            held_packed, held_bw, held_anchor = jax.tree.map(
-                lambda new, old: jnp.where(is_recv, new, old),
-                installed,
-                (held_packed, held_bw, held_anchor),
-            )
+    return held
+
+
+def _execute_scatter(x_full, axis_name, cfg: GZConfig, *, root: int = 0,
+                     _padded_reference: bool = False):
+    """EXECUTE layer for the binomial-tree scatter (concrete schedule).
+
+    Arbitrary axis sizes run the TRIMMED-SLAB schedule (DESIGN.md §7):
+    ``ceil(log2 n)`` rounds over a virtual power-of-two rank space, but
+    each exchange ships only the real ranks of the receiver's subtree
+    (``cost_model.binomial_slab_table``), so the root's provisioned wire
+    is exactly n-1 chunk streams at any n — the virtual tree's padding
+    chunks are held locally (zero streams keeping slab arithmetic static)
+    and never travel.  On power-of-two axes the schedule is identical to
+    the classic binomial tree.  ``_padded_reference=True`` runs the PR 4
+    padded walk instead (test oracle; same bytes at every real rank).
+    """
+    n = _axis_size(axis_name)
+    if root != 0:
+        raise ValueError(
+            f"gz_scatter over axis {axis_name!r} (size {n}): only root 0 "
+            f"is supported (the binomial tree is rooted at rank 0); got "
+            f"root={root}.  Roll the payload so the source rank is 0."
+        )
+    if x_full.shape[0] % n != 0:
+        raise ValueError(
+            f"gz_scatter over axis {axis_name!r} (size {n}): the full "
+            "payload's leading dim must be divisible by the axis size "
+            f"(each rank receives one chunk); got shape "
+            f"{tuple(x_full.shape)}"
+        )
+    r = lax.axis_index(axis_name)
+    dtype = x_full.dtype
+    held, rows, chunk_n, n_virt, ovf = _scatter_held_buffers(x_full, n, cfg)
+    tree = (_scatter_tree_padded_reference if _padded_reference
+            else _scatter_tree_trimmed)
+    held_packed, held_bw, held_anchor = tree(
+        held, axis_name, r, n, n_virt, cfg
+    )
 
     # Only the root compresses significant data; the SPMD packs of the
     # other ranks' local buffers are meaningless and must not pollute the
@@ -1153,10 +1210,15 @@ def _execute_all_to_all(x, axis_name, cfg: GZConfig):
 def _execute_broadcast(x, axis_name, cfg: GZConfig, *, root: int = 0):
     """EXECUTE layer for the binomial-tree broadcast (concrete schedule).
 
-    Arbitrary axis sizes: ``ceil(log2 n)`` rounds of halving spans with
-    exchanges whose receiver does not exist dropped from the ``ppermute``
-    (DESIGN.md §7) — every real rank's sender chain stays inside the real
-    ranks, so coverage and the one-lossy-hop property are unchanged.
+    Arbitrary axis sizes: ``ceil(log2 n)`` rounds of halving spans whose
+    forwarding pairs come from the SAME trimmed schedule authority as the
+    scatter (``cost_model.binomial_slab_table`` — the full-span pairs plus
+    the at-most-one trimmed boundary pair per round; exchanges whose
+    receiver does not exist never appear).  The payload is the one full
+    compressed message either way, so trimming changes no bytes here — it
+    guarantees schedule/accounting cannot drift (DESIGN.md §7): every real
+    rank's sender chain stays inside the real ranks, coverage and the
+    one-lossy-hop property are unchanged.
     """
     n = _axis_size(axis_name)
     if root != 0:
@@ -1172,11 +1234,10 @@ def _execute_broadcast(x, axis_name, cfg: GZConfig, *, root: int = 0):
     # Non-root ranks compress their (insignificant) local x in SPMD; only
     # the root's stream travels, so only its flag is meaningful.
     ovf = c.overflowed() & (r == 0)
-    # Same step-count authority as the plan layer's wire accounting.
-    steps = cost_model.steps_for("binomial", n)
-    for k in range(steps):
-        span = 1 << (steps - 1 - k)
-        perm = [(i, i + span) for i in range(0, n, 2 * span) if i + span < n]
+    for span, full_senders, trim in cost_model.binomial_slab_table(n):
+        perm = [(i, i + span) for i in full_senders]
+        if trim is not None:
+            perm.append((trim[0], trim[1]))
         c_recv = _ppermute(c, axis_name, perm)
         has = (r % (span * 2)) == span
         c = jax.tree.map(lambda new, old: jnp.where(has, new, old), c_recv, c)

@@ -135,6 +135,14 @@ class Plan:
     wire_bytes: int       # provisioned bytes shipped per rank (upper bound)
     ratio: float          # uncompressed-equivalent bytes / wire_bytes
     policy: str
+    # Binomial-tree ops only: derived observability field like eb_stage /
+    # wire_bytes above — a frozen copy of the trimmed-slab schedule
+    # (cost_model.binomial_slab_table(axis_size): per-round
+    # (span, full_senders, (sender, receiver, slab)|None), top-down).
+    # The execute layer and simulator re-derive the same table from the
+    # same single authority, so this can never disagree with what runs.
+    # Static and hashable like every other field; () for non-tree ops.
+    slab_table: tuple = ()
 
     def as_config(self):
         """The concrete GZConfig the execute layer dispatches on."""
@@ -280,10 +288,12 @@ def _wire_accounting(op, algo, n_elems, n, capacity_factor, chunks):
     if op == "scatter":
         chunk = -(-n_elems // n)
         cap = capacity_words_for(chunk, capacity_factor, ops.BLOCK)
-        # The root ships one stream per virtual-tree slot below it:
-        # 2**ceil(log2 n) - 1 chunk streams (== n-1 on power-of-two axes;
-        # includes the padding chunks of the virtual tree otherwise).
-        streams = (1 << cost_model.steps_for("binomial", n)) - 1
+        # Trimmed-slab schedule: the root ships one stream per REAL rank
+        # in its children's subtrees — exactly n-1 chunk streams at ANY
+        # axis size (the padded virtual tree's 2**ceil(log2 n) - 1 is
+        # gone; its zero-padding chunks no longer travel).  Summed from
+        # the same slab table the execute layer walks.
+        streams = cost_model.scatter_root_chunk_streams(n)
         wire = streams * _stream_bytes(chunk, capacity_factor)
         raw = (n - 1) * chunk * 4
         return cap, wire, raw
@@ -308,11 +318,17 @@ def assert_step_count_consistency(n_range=range(2, 34), n_elems: int = 4096,
     equal ``cost_model.steps_for`` for every axis size in ``n_range`` —
     the PR 4 floor-vs-ceil regression (plans silently under-reported
     non-power-of-two wire bytes while the cost model used ceil, so
-    planning could mis-rank algorithms).  Raises AssertionError naming
-    the first disagreeing (op, n).  Called by tests/test_comm.py and, on
-    every CI run, by benchmarks/regression_check.py.  Raises explicitly
-    (not via ``assert`` statements, which vanish under ``python -O`` —
-    this is the check that must never silently pass).
+    planning could mis-rank algorithms) — and the trimmed-slab schedule
+    is well-formed (ISSUE 5): for every n the slab table's root streams
+    sum to exactly n-1 chunks, every non-root rank receives exactly once,
+    each exchanged slab is exactly the real ranks of the receiver's
+    virtual subtree, at most one trimmed exchange per round (the "one
+    extra ppermute shape"), none at power-of-two n, and the scatter wire
+    accounting prices exactly those root slabs.  Raises AssertionError
+    naming the first disagreeing (op, n).  Called by tests/test_comm.py
+    and, on every CI run, by benchmarks/regression_check.py.  Raises
+    explicitly (not via ``assert`` statements, which vanish under
+    ``python -O`` — this is the check that must never silently pass).
     """
     def _require(cond, msg):
         if not cond:
@@ -333,12 +349,39 @@ def assert_step_count_consistency(n_range=range(2, 34), n_elems: int = 4096,
             "broadcast", "binomial", n_elems, n, capacity_factor, 1)
         _require(wire == ceil_steps * stream,
                  f"broadcast wire accounting disagrees with the cost model at n={n}")
+
+        # Trimmed-slab schedule well-formedness (the scatter tree).
+        table = cost_model.binomial_slab_table(n)
+        _require(len(table) == ceil_steps,
+                 f"slab table has {len(table)} rounds != ceil(log2 {n})")
+        receivers = []
+        for span, full, trim in table:
+            _require(trim is None or 0 < trim[2] < span,
+                     f"trimmed slab out of range at n={n}, span={span}")
+            if n & (n - 1) == 0:
+                _require(trim is None,
+                         f"power-of-two n={n} must have no trimmed exchange")
+            pairs = [(i, i + span, span) for i in full]
+            if trim is not None:
+                pairs.append(trim)
+            for snd, rcv, slab in pairs:
+                receivers.append(rcv)
+                _require(
+                    slab == max(0, min(n, rcv + span) - rcv),
+                    f"slab != real ranks of subtree [{rcv},{rcv + span}) "
+                    f"at n={n}")
+        _require(sorted(receivers) == list(range(1, n)),
+                 f"slab table receivers != every non-root rank at n={n}")
+        root_streams = cost_model.scatter_root_chunk_streams(n)
+        _require(root_streams == n - 1,
+                 f"root slab-sum {root_streams} != n-1 chunks at n={n}")
         chunk = -(-n_elems // n)
         _, wire, _ = _wire_accounting(
             "scatter", "binomial", n_elems, n, capacity_factor, 1)
         _require(
-            wire == ((1 << ceil_steps) - 1) * _stream_bytes(chunk, capacity_factor),
-            f"scatter wire accounting disagrees with the virtual tree at n={n}")
+            wire == root_streams * _stream_bytes(chunk, capacity_factor),
+            f"scatter wire accounting disagrees with the trimmed slab "
+            f"table at n={n}")
 
 
 def _eb_stage(op, algo, eb, n, worst_case):
@@ -396,6 +439,24 @@ def _ring_depth(req: PlanRequest) -> int:
     )
 
 
+def _data_movement_plan(req: PlanRequest):
+    """(algo, chunks) for the fixed-algorithm data-movement ops — shared
+    by every policy (the algorithm choice only exists for allreduce).
+
+    ``requested_chunks == 0`` asks for planned depth (the grad-sync
+    routing convention): the scatter gets it from
+    ``cost_model.best_scatter_pipeline_chunks`` (the previously dead
+    ``scatter_binomial_gz_chunked`` path — ISSUE 5 satellite); the other
+    data movers have no modeled pipelined schedule and stay sequential.
+    """
+    chunks = req.requested_chunks
+    if req.op == "scatter" and chunks == 0:
+        chunks = cost_model.best_scatter_pipeline_chunks(
+            req.nbytes, req.axis_size, req.ratio, req.hw
+        )
+    return _OP_ALGO[req.op], max(chunks, 1)
+
+
 def _policy_auto(req: PlanRequest):
     """Production default — the selection gz_allreduce(algo="auto") ran.
 
@@ -406,7 +467,7 @@ def _policy_auto(req: PlanRequest):
     grad-sync routing convention).
     """
     if req.op != "allreduce":
-        return _OP_ALGO[req.op], max(req.requested_chunks, 1)
+        return _data_movement_plan(req)
     algo, chunks = req.requested_algo, req.requested_chunks
     if algo is None:
         from repro.core.selector import select_allreduce_plan
@@ -424,7 +485,9 @@ def _policy_auto(req: PlanRequest):
 
 def _policy_paper(req: PlanRequest):
     """The paper's §3.3.3 crossover: two-kernel cost models, sequential
-    schedule — what the published figures compare."""
+    schedule — what the published figures compare.  Sequential applies to
+    every op: unlike the other policies, an auto-depth request
+    (``requested_chunks == 0``) does NOT resolve a pipelined scatter."""
     if req.op != "allreduce":
         return _OP_ALGO[req.op], max(req.requested_chunks, 1)
     algo = req.requested_algo
@@ -443,7 +506,7 @@ def _policy_throughput(req: PlanRequest):
     auto-resolved ring at the default depth) triggers depth planning.
     """
     if req.op != "allreduce":
-        return _OP_ALGO[req.op], max(req.requested_chunks, 1)
+        return _data_movement_plan(req)
     algo, chunks = req.requested_algo, req.requested_chunks
     if algo is None:
         from repro.core.selector import select_allreduce_plan
@@ -463,7 +526,7 @@ def _policy_accuracy(req: PlanRequest):
     """Bitwise rank-consistent integer ring: one quantization grid, no
     stacked requantization noise (core/collectives.py consistency note)."""
     if req.op != "allreduce":
-        return _OP_ALGO[req.op], max(req.requested_chunks, 1)
+        return _data_movement_plan(req)
     return req.requested_algo or "intring", max(req.requested_chunks, 1)
 
 
@@ -542,6 +605,8 @@ def _resolve_plan(
         capacity_factor=capacity_factor, worst_case_budget=worst_case_budget,
         capacity_words=cap, wire_bytes=wire,
         ratio=(raw / wire) if wire else 1.0, policy=policy,
+        slab_table=(cost_model.binomial_slab_table(axis_size)
+                    if algo == "binomial" else ()),
     )
     _PLAN_CACHE[key] = plan
     return plan

@@ -30,6 +30,8 @@ __all__ = [
     "A100_SLINGSHOT",
     "TPU_V5E",
     "steps_for",
+    "binomial_slab_table",
+    "scatter_root_chunk_streams",
     "t_compress",
     "t_decompress",
     "t_hop_fused",
@@ -45,6 +47,7 @@ __all__ = [
     "scatter_uncompressed_binomial",
     "allgather_ring_gz",
     "best_pipeline_chunks",
+    "best_scatter_pipeline_chunks",
 ]
 
 
@@ -121,6 +124,70 @@ def steps_for(algo: str, n: int) -> int:
     if algo == "direct":
         return 1
     raise ValueError(f"unknown algo {algo!r}")
+
+
+def binomial_slab_table(n: int) -> tuple:
+    """Trimmed-slab binomial-tree schedule over ``n`` ranks (top-down).
+
+    The ONE schedule authority for the log-depth tree collectives
+    (scatter slabs, broadcast forwarding pairs): the execute layer
+    (``collectives._execute_scatter`` / ``_execute_broadcast``), the plan
+    layer (``comm._wire_accounting``, ``Plan.slab_table``), this cost
+    model's scatter pricing and the global-view simulator all read it, so
+    schedule, accounting and simulation cannot drift (the ISSUE 5
+    sim/bench/plan drift).
+
+    Returns one entry per ``ceil(log2 n)`` tree round, largest span
+    first: ``(span, full_senders, trim)``.  Senders ``i`` in
+    ``full_senders`` ship a full ``span``-chunk slab to ``i + span``
+    (the receiver's whole virtual subtree ``[i+span, i+2*span)`` is real
+    ranks); ``trim`` is the at-most-one boundary exchange
+    ``(sender, receiver, slab)`` per round whose virtual subtree
+    straddles ``n`` — it ships only the ``slab = n - receiver`` real
+    chunks, dropping the virtual tree's zero-padding chunks from the
+    wire entirely.  Exchanges whose receiver is ``>= n`` do not appear.
+    On power-of-two axes every round is all-full (``trim is None``) and
+    the table reduces to the classic binomial schedule.
+    """
+    n = int(n)
+    steps = steps_for("binomial", n)
+    n_virt = 1 << steps
+    rounds = []
+    for k in reversed(range(steps)):
+        span = 1 << k
+        full, trim = [], None
+        for i in range(0, n_virt, 2 * span):
+            recv = i + span
+            if recv >= n:
+                continue
+            slab = min(n, recv + span) - recv
+            if slab == span:
+                full.append(i)
+            else:  # at most one straddling subtree per round
+                trim = (i, recv, slab)
+        rounds.append((span, tuple(full), trim))
+    return tuple(rounds)
+
+
+def _root_slab_chunks(round_entry) -> tuple:
+    """(slab_chunks, is_full) of the ROOT's outgoing exchange in one
+    ``binomial_slab_table`` round (the root sends every round — the
+    busiest rank the scatter models price)."""
+    span, full, trim = round_entry
+    if 0 in full:
+        return span, True
+    return trim[2], False  # root's subtree straddles n: trimmed slab
+
+
+def scatter_root_chunk_streams(n: int) -> int:
+    """Chunk streams the scatter root ships under the trimmed-slab
+    schedule: the real ranks of its children's subtrees partition
+    ``1..n-1``, so this is exactly ``n - 1`` at ANY axis size (asserted
+    by ``comm.assert_step_count_consistency``) — versus the padded
+    virtual tree's ``2**ceil(log2 n) - 1``."""
+    return sum(
+        _root_slab_chunks(entry)[0] for entry in binomial_slab_table(n)
+    )
 
 
 def _util(size_bytes: float, hw: Hardware) -> float:
@@ -335,16 +402,20 @@ def allreduce_ring_gz_chunked(
 
 
 def scatter_binomial_gz_chunked(D, N, R, hw: Hardware, chunks: int = 1) -> float:
-    """gZ-Scatter with each tree round's slab split into `chunks` piece
-    chains: the receiver-side install (buffer copy at reduce bandwidth)
-    overlaps the next piece's wire time.  Rounds and slab sizes follow the
-    virtual power-of-two tree the execute layer runs at any N."""
-    rounds = steps_for("binomial", N)
+    """gZ-Scatter with each tree round's full-span slab split into
+    `chunks` piece chains: the receiver-side install (buffer copy at
+    reduce bandwidth) overlaps the next piece's wire time.  Rounds and
+    slab sizes follow the trimmed-slab schedule the execute layer runs at
+    any N (``binomial_slab_table``): only real-rank chunks are priced,
+    and a trimmed boundary slab ships as one piece (its size is not a
+    power of two, so the execute layer does not split it)."""
+    chunk = D / N
     total = t_compress(D, hw)  # batched root compression, saturated
-    for k in reversed(range(rounds)):
-        payload = D * (2**k) / N / R
-        g = min(chunks, 2**k) if k else 1
-        piece = payload / g
+    for entry in binomial_slab_table(N):
+        span = entry[0]
+        slab, is_full = _root_slab_chunks(entry)
+        g = min(chunks, span) if (is_full and span > 1) else 1
+        piece = slab * chunk / R / g
         total += _pipeline_phase(
             [t_net(piece, hw), t_reduce(piece, hw)], g
         )
@@ -374,6 +445,20 @@ def best_pipeline_chunks(
     )
 
 
+def best_scatter_pipeline_chunks(
+    D, N, R, hw: Hardware, candidates=PIPELINE_CHUNK_CANDIDATES
+) -> int:
+    """Per-round piece count minimizing the chunked scatter model — the
+    depth ``comm.plan("scatter", ...)`` resolves when the caller asks for
+    auto depth (``requested_chunks == 0``), closing the ISSUE 5 dead path
+    where ``scatter_binomial_gz_chunked`` existed but no planner ever
+    selected a chunked scatter schedule."""
+    return min(
+        candidates,
+        key=lambda c: scatter_binomial_gz_chunked(D, N, R, hw, c),
+    )
+
+
 # --- Data movement ---
 
 
@@ -385,19 +470,25 @@ def allgather_ring_gz(D_chunk, N, R, hw: Hardware, overlap: float = 0.7) -> floa
 
 def scatter_binomial_gz(D, N, R, hw: Hardware, overlap: float = 0.7) -> float:
     """gZ-Scatter: batched root compression of N chunks (ONE saturated call
-    — the multi-stream analog) + ceil(log2 N) tree rounds of halving
-    payloads + one decompression at each leaf.  The 2**k-chunk slabs per
-    round are exactly what the virtual power-of-two tree ships at
-    non-power-of-two N (padding chunks included)."""
-    rounds = steps_for("binomial", N)
+    — the multi-stream analog) + ceil(log2 N) tree rounds of trimmed
+    slabs + one decompression at each leaf.  Per-round payloads are the
+    root's real-rank slab sizes from ``binomial_slab_table`` (summing to
+    N-1 chunks at any N) — identical to the classic 2**k halving slabs on
+    power-of-two axes, strictly smaller otherwise."""
+    chunk = D / N
     total = t_compress(D, hw)  # batched: full-size utilization
-    for k in reversed(range(rounds)):
-        payload = D * (2**k) / N / R
-        total += t_net(payload, hw)
+    for entry in binomial_slab_table(N):
+        slab, _ = _root_slab_chunks(entry)
+        total += t_net(slab * chunk / R, hw)
     total += t_decompress(D / N, hw)
     return total
 
 
 def scatter_uncompressed_binomial(D, N, hw: Hardware) -> float:
-    rounds = steps_for("binomial", N)
-    return sum(t_net(D * (2**k) / N, hw) for k in reversed(range(rounds)))
+    """Cray-MPI-model binomial scatter: same trimmed-slab round structure
+    (a real MPI scatter ships exactly N-1 chunks too), uncompressed."""
+    chunk = D / N
+    return sum(
+        t_net(_root_slab_chunks(entry)[0] * chunk, hw)
+        for entry in binomial_slab_table(N)
+    )

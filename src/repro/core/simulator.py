@@ -23,7 +23,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.collectives import GZConfig
-from repro.core import error_budget
+from repro.core import cost_model, error_budget
 
 __all__ = [
     "sim_allreduce_redoub",
@@ -137,13 +137,54 @@ def sim_allgather_ring(xs: List[np.ndarray], cfg: GZConfig):
     return [np.concatenate(rts) for _ in range(n)]
 
 
-def sim_scatter_binomial(x_full: np.ndarray, n: int, cfg: GZConfig):
+def sim_scatter_binomial(x_full: np.ndarray, n: int, cfg: GZConfig,
+                         *, return_trace: bool = False):
+    """Trimmed-slab binomial-tree scatter (global view).
+
+    PR 4 grew the execute layer a virtual power-of-two tree while this sim
+    kept modeling a bare per-chunk roundtrip with no schedule at all
+    (sim/plan drift — ISSUE 5).  Now it replays the exact trimmed-slab
+    schedule from ``cost_model.binomial_slab_table`` — the same authority
+    ``collectives._execute_scatter`` walks and ``comm._wire_accounting``
+    prices: the root compresses each chunk once, slabs of compressed
+    streams (real-rank chunks only) travel sender -> receiver down the
+    tree, and each rank decompresses its own chunk on arrival.  Schedule
+    validity is asserted as it replays: a sender must hold every chunk it
+    ships, and every rank must end up holding its own chunk.
+
+    Returns the per-rank decompressed chunks — byte-identical to the
+    multi-device execute layer (asserted at n=6/9 in the subprocess
+    children).  With ``return_trace=True`` also returns
+    ``{rank: (round_span, received chunk indices)}`` — each non-root rank
+    receives exactly one slab, covering the real ranks of its subtree.
+    """
     comp = cfg.compressor()
     chunk = x_full.shape[0] // n
-    return [
-        _roundtrip(comp, x_full[i * chunk : (i + 1) * chunk], cfg.eb)
+    streams = {
+        i: comp.compress(jnp.asarray(x_full[i * chunk : (i + 1) * chunk]),
+                         cfg.eb)
         for i in range(n)
-    ]
+    }
+    held = {r: set() for r in range(n)}
+    held[0] = set(range(n))  # root holds every chunk stream
+    trace = {}
+    for span, full, trim in cost_model.binomial_slab_table(n):
+        exchanges = [(i, i + span, span) for i in full]
+        if trim is not None:
+            exchanges.append(trim)
+        for snd, rcv, slab in exchanges:
+            idxs = range(rcv, rcv + slab)  # the receiver's real subtree
+            missing = [i for i in idxs if i not in held[snd]]
+            assert not missing, (
+                f"schedule invalid: sender {snd} ships chunks {missing} "
+                f"it does not hold (n={n}, span={span})")
+            assert rcv not in trace, f"rank {rcv} received twice (n={n})"
+            held[rcv].update(idxs)
+            trace[rcv] = (span, tuple(idxs))
+    for r in range(n):
+        assert r in held[r], f"rank {r} never received its chunk (n={n})"
+    outs = [np.asarray(comp.decompress(streams[r])) for r in range(n)]
+    return (outs, trace) if return_trace else outs
 
 
 def sim_broadcast_binomial(x: np.ndarray, n: int, cfg: GZConfig):

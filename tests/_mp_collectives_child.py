@@ -332,6 +332,12 @@ if N == 8:
 # ---------------------------------------------------------------------------
 import _nonpow2_checks as npc
 
+# Trimmed-slab scatter on the FULL mesh (pow2 at the default N=8): the
+# trimmed schedule must be bitwise-unchanged vs the padded walk and the
+# simulator replay — at pow2 they are the same classic binomial tree.
+npc.check_scatter_trimmed_parity(mesh, "x", N, rng)
+npc.check_scatter_trimmed_parity(mesh, "x", N, rng, pipeline_chunks=2)
+
 if N >= 6:
     d_np = 4000  # indivisible by 3/5/6: exercises the ring tail padding
     for n_sub in (3, 5, 6):
@@ -341,6 +347,12 @@ if N >= 6:
     for n_sub in (3, 6):
         mesh_sub = Mesh(np.array(jax.devices()[:n_sub]), ("s",))
         npc.check_scatter_broadcast(mesh_sub, "s", n_sub, d_np, rng)
+        # ISSUE 5: trimmed-slab scatter bitwise == padded reference == sim
+        npc.check_scatter_trimmed_parity(mesh_sub, "s", n_sub, rng)
+    npc.check_scatter_trimmed_parity(
+        Mesh(np.array(jax.devices()[:6]), ("s",)), "s", 6, rng,
+        pipeline_chunks=2,
+    )
 
     # Remainder-stage redoub: fused single-pass hops must stay bitwise
     # identical to the two-kernel composition (pre-fold, doubling, unfold

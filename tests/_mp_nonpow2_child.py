@@ -3,9 +3,11 @@
 The main child (tests/_mp_collectives_child.py) sweeps submesh sizes
 3/5/6 inside its 8-device grid; this one covers the acceptance point the
 8-device host cannot: a full mesh bigger than the largest power of two
-below it (default N=12, override with GZ_CHILD_DEVICES), where the
-remainder stage folds 4 ranks and the virtual scatter tree pads to 16
-slots.  The check bodies are shared with the main child
+below it (default N=12, override with GZ_CHILD_DEVICES — the CI N=9 leg
+is the old padded tree's worst case, 7/16 virtual slots padded), where
+the remainder stage folds ranks into the doubling and the trimmed-slab
+scatter ships exactly N-1 chunk streams through the ceil(log2 N)-round
+tree.  The check bodies are shared with the main child
 (_nonpow2_checks.py): allreduce (all three algorithms) vs a lax.psum
 oracle, scatter/broadcast vs exact oracles, plan-layer ceil-step wire
 accounting.
@@ -26,5 +28,10 @@ rng = np.random.default_rng(0)
 npc.check_allreduce_vs_psum(mesh, "x", N, D, rng)
 npc.check_scatter_broadcast(mesh, "x", N, D, rng)
 npc.check_plan_accounting("x", N, D)
+# ISSUE 5: execute-vs-sim byte parity for the trimmed-slab scatter at a
+# large non-pow2 N (N=12 folds 4/16 virtual slots; the N=9 CI leg is the
+# worst case, 7/16 padded under the old schedule).
+npc.check_scatter_trimmed_parity(mesh, "x", N, rng)
+npc.check_scatter_trimmed_parity(mesh, "x", N, rng, pipeline_chunks=2)
 
 print("ALL OK")

@@ -37,5 +37,15 @@ def test_collectives_on_8_devices():
 @pytest.mark.slow
 def test_nonpow2_collectives_on_12_devices():
     # Remainder stage at a full mesh above the 8-device grid: 12 ranks
-    # fold 4 into the doubling; the scatter tree pads to 16 virtual slots.
+    # fold 4 into the doubling; the trimmed-slab scatter ships 11 chunk
+    # streams through the 16-slot virtual rank space (padding held, never
+    # wired).
     _run_child(NONPOW2_CHILD, GZ_CHILD_DEVICES="12")
+
+
+@pytest.mark.slow
+def test_nonpow2_collectives_on_9_devices():
+    # ISSUE 5 acceptance point: n=9 was the padded virtual tree's worst
+    # case (7/16 slots padding).  The trimmed schedule ships 8 chunk
+    # streams; execute-vs-sim byte parity is asserted in the child.
+    _run_child(NONPOW2_CHILD, GZ_CHILD_DEVICES="9")

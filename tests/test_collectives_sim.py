@@ -93,6 +93,28 @@ def test_sim_scatter_and_broadcast():
         assert np.abs(o - full).max() <= EB + np.abs(full).max() * 2e-7
 
 
+@pytest.mark.parametrize("n", [3, 5, 6, 9, 12])
+def test_sim_scatter_trimmed_tree_nonpow2(n):
+    """The sim replays the trimmed-slab schedule (ISSUE 5): it must
+    deliver every rank its chunk within eb at any n, and the trace must
+    show each non-root rank receiving exactly its real subtree."""
+    from repro.core import cost_model as cm
+
+    rng = np.random.default_rng(n)
+    full = np.cumsum(rng.normal(0, 0.01, n * 512)).astype(np.float32)
+    cfg = GZConfig(eb=EB, capacity_factor=1.2)
+    outs, trace = simulator.sim_scatter_binomial(full, n, cfg,
+                                                 return_trace=True)
+    for i, o in enumerate(outs):
+        want = full[i * 512 : (i + 1) * 512]
+        assert np.abs(o - want).max() <= EB + np.abs(want).max() * 2e-7
+    assert sorted(trace) == list(range(1, n))  # everyone but root receives
+    for rcv, (span, idxs) in trace.items():
+        assert idxs == tuple(range(rcv, min(n, rcv + span)))
+    # slab chunks shipped by the root == n-1 (the trimmed provisioning)
+    assert cm.scatter_root_chunk_streams(n) == n - 1
+
+
 def test_redoub_fewer_compression_events_than_ring():
     """The paper's performance metric: log N vs N events per rank."""
     for n in [8, 64, 256]:

@@ -229,6 +229,66 @@ def test_step_counts_agree_with_cost_model_for_all_axis_sizes():
         cm.steps_for = orig
 
 
+def test_scatter_wire_prices_trimmed_slabs_not_virtual_tree():
+    """ISSUE 5 acceptance: the scatter plan provisions exactly n-1 chunk
+    streams at ANY axis size — at n=9 that is 8 streams, not the padded
+    virtual tree's 2**ceil(log2 9) - 1 = 15 (7/16 slots were padding)."""
+    from repro.core.comm import _stream_bytes
+    from repro.core.compressed import capacity_words_for
+    from repro.kernels import ops
+
+    n_elems = 9 * 1024
+    for n, streams in ((9, 8), (3, 2), (5, 4), (6, 5), (12, 11),
+                       (8, 7), (16, 15)):
+        p = _comm(n=n).plan("scatter", n_elems)
+        chunk = -(-n_elems // n)
+        assert p.wire_bytes == streams * _stream_bytes(chunk, 0.6), n
+        assert p.capacity_words == capacity_words_for(chunk, 0.6, ops.BLOCK)
+        # raw side: the n-1 real chunks an MPI scatter moves — provisioned
+        # ratio no longer diluted by padding streams at non-pow2 n
+        assert p.ratio == pytest.approx((n - 1) * chunk * 4 / p.wire_bytes)
+
+
+def test_plan_carries_slab_table_for_tree_ops():
+    """Binomial-tree plans expose the trimmed schedule the execute layer
+    walks; per-round root slabs sum to n-1 (the provisioned streams)."""
+    for n in (8, 9, 12):
+        comm = _comm(n=n)
+        for op in ("scatter", "broadcast"):
+            p = comm.plan(op, 9 * 1024)
+            assert p.slab_table == cm.binomial_slab_table(n), (op, n)
+            assert {p: op}[p] == op  # still hashable with the table
+        root_slabs = sum(
+            (span if 0 in full else trim[2])
+            for span, full, trim in comm.plan("scatter", 9 * 1024).slab_table
+            if 0 in full or (trim is not None and trim[0] == 0)
+        )
+        assert root_slabs == n - 1
+    # non-tree ops carry no table
+    assert _comm().plan("allreduce", 8192).slab_table == ()
+    assert _comm().plan("all_to_all", 8192).slab_table == ()
+
+
+def test_scatter_auto_depth_planned_from_chunked_model():
+    """ISSUE 5 satellite: scatter pipeline-depth planning is WIRED (the
+    previously dead scatter_binomial_gz_chunked path) — requested_chunks
+    == 0 resolves the depth best_scatter_pipeline_chunks models, while an
+    explicit depth (>= 1, the default) is honored verbatim."""
+    n_elems = int(646e6 / 4)
+    p = GZCommunicator("x", axis_size=64, config=GZConfig(eb=1e-4),
+                       _auto_depth=True).plan("scatter", n_elems)
+    want = cm.best_scatter_pipeline_chunks(n_elems * 4, 64, 20.0, cm.TPU_V5E)
+    assert p.pipeline_chunks == want and want > 1
+    # explicit depths still honored (sequential default included)
+    assert _comm(n=64).plan("scatter", n_elems).pipeline_chunks == 1
+    cfg4 = GZConfig(eb=1e-4, pipeline_chunks=4)
+    assert _comm(n=64, config=cfg4).plan("scatter", n_elems).pipeline_chunks == 4
+    # the "paper" policy stays sequential for EVERY op, auto depth included
+    p = GZCommunicator("x", axis_size=64, config=GZConfig(eb=1e-4),
+                       policy="paper", _auto_depth=True).plan("scatter", n_elems)
+    assert p.pipeline_chunks == 1
+
+
 def test_plan_nonpow2_axis_resolves_and_prices_remainder():
     """Non-power-of-two axes plan cleanly: ceil step counts in the wire
     accounting and the remainder hop charged to the per-stage budget."""

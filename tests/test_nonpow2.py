@@ -48,6 +48,82 @@ def test_steps_for_values():
         cm.steps_for("nope", 8)
 
 
+# ---------------------------------------------------------------------------
+# Trimmed-slab binomial schedule (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+
+def test_binomial_slab_table_n9():
+    """The acceptance shape: at n=9 the root ships 1+4+2+1 = 8 chunk
+    streams (one trimmed boundary exchange in the top round), not the
+    padded virtual tree's 15."""
+    assert cm.binomial_slab_table(9) == (
+        (8, (), (0, 8, 1)),
+        (4, (0,), None),
+        (2, (0, 4), None),
+        (1, (0, 2, 4, 6), None),
+    )
+    assert cm.scatter_root_chunk_streams(9) == 8
+
+
+@pytest.mark.parametrize("n", list(range(2, 18)) + [24, 33, 96])
+def test_binomial_slab_table_invariants(n):
+    table = cm.binomial_slab_table(n)
+    assert len(table) == cm.steps_for("binomial", n)
+    receivers, total_chunks = [], 0
+    trims = 0
+    for span, full, trim in table:
+        pairs = [(i, i + span, span) for i in full]
+        if trim is not None:
+            trims += 1
+            assert 0 < trim[2] < span  # genuinely trimmed
+            pairs.append(trim)
+        for snd, rcv, slab in pairs:
+            # slab == the real ranks of the receiver's virtual subtree
+            assert slab == min(n, rcv + span) - rcv
+            assert snd < n and rcv < n  # padding slots never exchange
+            receivers.append(rcv)
+            total_chunks += slab
+    # every non-root rank receives exactly one slab
+    assert sorted(receivers) == list(range(1, n))
+    # root streams sum to exactly n-1 chunks (the provisioned wire)
+    assert cm.scatter_root_chunk_streams(n) == n - 1
+    # at most one trimmed exchange per round; none on power-of-two axes
+    assert trims <= len(table)
+    if n & (n - 1) == 0:
+        assert trims == 0
+        # pow2: the classic binomial tree, all-full rounds
+        assert all(trim is None for _, _, trim in table)
+
+
+def test_scatter_cost_prices_trimmed_slabs():
+    """Non-pow2 scatter must cost LESS than the next pow2 up (it ships
+    n-1 < 2**ceil-1 chunk streams of the same chunk size... modulo the
+    chunk being D/N) and the pow2 points must be unchanged from the
+    classic 2**k halving-slab pricing."""
+    D, R, hw = 646e6, 60.0, cm.A100_SLINGSHOT
+    for n in (8, 64, 512):  # pow2: identical to the pre-trim formula
+        want = cm.t_compress(D, hw) + sum(
+            cm.t_net(D * (2**k) / n / R, hw)
+            for k in reversed(range(cm.steps_for("binomial", n)))
+        ) + cm.t_decompress(D / n, hw)
+        assert cm.scatter_binomial_gz(D, n, R, hw) == pytest.approx(want)
+    # trimmed wire at fixed chunk size: per-chunk-stream cost comparison —
+    # 9 ranks ship 8 streams of D/9, the padded tree shipped 15
+    chunk = D / 9
+    priced = cm.scatter_binomial_gz(D, 9, R, hw)
+    padded = cm.t_compress(D, hw) + sum(
+        cm.t_net((2**k) * chunk / R, hw) for k in reversed(range(4))
+    ) + cm.t_decompress(chunk, hw)
+    assert priced < padded
+
+
+def test_best_scatter_pipeline_chunks_prefers_depth_on_big_payloads():
+    assert cm.best_scatter_pipeline_chunks(646e6, 64, 20.0, cm.TPU_V5E) > 1
+    # tiny payloads: per-piece overhead dominates -> sequential
+    assert cm.best_scatter_pipeline_chunks(4096, 8, 20.0, cm.TPU_V5E) == 1
+
+
 def test_lossy_hops_redoub_remainder():
     # pow2: n-1 merge events; non-pow2: n-1 merges + the unfold hop.
     assert error_budget.lossy_hops("allreduce_redoub", 8) == 7

@@ -13,8 +13,10 @@ hypothesis = pytest.importorskip(
 )
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core import cost_model as cm  # noqa: E402
 from repro.core import simulator  # noqa: E402
 from repro.core.collectives import GZConfig  # noqa: E402
+from repro.core.comm import GZCommunicator, _stream_bytes  # noqa: E402
 
 
 @settings(max_examples=20, deadline=None)
@@ -38,3 +40,46 @@ def test_property_remainder_redoub_budget_sound(n, d, eb, seed):
     slack = max(np.abs(exact).max(), 1.0) * 1e-6
     for o in outs:
         assert np.abs(o - exact).max() <= eb + slack
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(2, 16),
+    chunk=st.sampled_from([257, 512, 1537]),  # off-block / aligned / ragged
+    seed=st.integers(0, 1000),
+)
+def test_property_trimmed_scatter_schedule_sound(n, chunk, seed):
+    """ISSUE 5 property: for ANY axis size the trimmed scatter schedule
+    (a) sums to exactly n-1 root chunk streams, (b) delivers every real
+    rank the slab ``sim_scatter_binomial`` replays (its real virtual
+    subtree, exactly once, within eb), and (c) the plan's reported
+    ``CollectiveResult.wire_bytes``/``ratio`` match the trimmed
+    accounting — not the padded virtual tree's."""
+    table = cm.binomial_slab_table(n)
+    assert cm.scatter_root_chunk_streams(n) == n - 1
+    receivers = []
+    for span, full, trim in table:
+        for rcv, slab in [(i + span, span) for i in full] + (
+                [(trim[1], trim[2])] if trim else []):
+            receivers.append(rcv)
+            assert slab == min(n, rcv + span) - rcv
+    assert sorted(receivers) == list(range(1, n))
+
+    rng = np.random.default_rng(seed)
+    full_payload = np.cumsum(rng.normal(0, 0.01, n * chunk)).astype(
+        np.float32)
+    cfg = GZConfig(eb=1e-3, capacity_factor=1.3)
+    outs, trace = simulator.sim_scatter_binomial(full_payload, n, cfg,
+                                                 return_trace=True)
+    for r, o in enumerate(outs):
+        want = full_payload[r * chunk : (r + 1) * chunk]
+        assert np.abs(o - want).max() <= 1e-3 + np.abs(want).max() * 2e-7
+    for rcv, (span, idxs) in trace.items():
+        assert idxs == tuple(range(rcv, min(n, rcv + span)))
+
+    plan = GZCommunicator(
+        "x", axis_size=n, config=cfg
+    ).plan("scatter", n * chunk)
+    assert plan.wire_bytes == (n - 1) * _stream_bytes(chunk, 1.3)
+    assert plan.ratio == (n - 1) * chunk * 4 / plan.wire_bytes
+    assert plan.slab_table == table
