@@ -1,0 +1,91 @@
+"""Two-level topology benchmark: flat compressed ring vs the planned
+hierarchical allreduce on the calibrated A100/Slingshot point (ISSUE 6).
+
+The paper's 512-GPU numbers live where NVLink is ~48x the node fabric, so
+compression only pays on the slow hop.  This bench resolves the SAME
+frozen plans production resolves (``comm._resolve_hier_plan``) at
+node×local topologies 2×4 / 3×4 / 4×8 and records, per topology:
+
+  * ``flat_inter_wire_bytes``  — the single-axis plan's provisioned
+    per-rank send bytes; in node-major rank order a node-boundary rank's
+    EVERY send crosses the fabric, so this is what the flat schedule
+    puts on the scarce link.
+  * ``hier_inter_wire_bytes``  — the inter sub-plan's provisioned bytes
+    (the compressed allreduce of the 1/L shard across nodes — the only
+    traffic that leaves a node under the two-level schedule).
+  * modeled times of both paths per the per-link cost model.
+
+These are STATIC plan quantities (schedule structure, not wall-clock), so
+``regression_check.py`` compares the inter-node wire EXACTLY and treats
+any growth as fatal — a planner change that quietly ships more bytes
+across nodes cannot hide inside timing noise.  The acceptance invariant
+(hier strictly less inter wire AND lower modeled time than the flat
+compressed ring at >= 8 devices with intra:inter >= 4:1) is asserted on
+every run.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.core import cost_model as cm
+from repro.core.comm import _resolve_hier_plan
+
+HW = cm.A100_SLINGSHOT
+RATIO = 20.0
+D_MB = 64  # per-rank message: a gradient-sync-sized payload
+TOPOLOGIES = [(2, 4), (3, 4), (4, 8)]
+BASELINE_PATH = pathlib.Path(__file__).parent / "BENCH_hier.json"
+
+
+def plan_record(topology: tuple, n_elems: int) -> dict:
+    """Resolve the production hier plan for one topology and reduce it to
+    the static record the baseline pins."""
+    plan = _resolve_hier_plan(
+        "allreduce", n_elems, "float32", topology, 1e-4,
+        policy="auto", requested_algo=None, requested_chunks=0,
+        capacity_factor=0.6, worst_case_budget=True, fused=True,
+        fused_hop=True, ratio=RATIO, hw=HW,
+    )
+    return {
+        "flat": plan.flat,
+        "flat_algo": plan.flat_plan.algo,
+        "inter_algo": plan.inter.algo if plan.inter else None,
+        "flat_inter_wire_bytes": plan.flat_plan.wire_bytes,
+        "hier_inter_wire_bytes": plan.inter_wire_bytes,
+        "intra_wire_bytes": plan.intra_wire_bytes,
+        "t_flat_us": round(plan.t_flat * 1e6, 2),
+        "t_hier_us": round(plan.t_model * 1e6, 2),
+    }
+
+
+def run(csv_rows: list, record_baseline: bool = True) -> dict:
+    assert HW.link_asymmetry() >= 4.0, (
+        "the calibrated A100 point must model the >= 4:1 link asymmetry "
+        f"regime; got {HW.link_asymmetry():.1f}:1"
+    )
+    n_elems = int(D_MB * 1e6 / 4)
+    record = {}
+    for topology in TOPOLOGIES:
+        n_nodes, local = topology
+        rec = plan_record(topology, n_elems)
+        # Acceptance invariant: at >= 8 devices under real asymmetry, the
+        # hierarchy strictly beats the flat compressed ring on BOTH the
+        # scarce wire and the modeled clock.
+        if n_nodes * local >= 8:
+            assert not rec["flat"], f"{topology}: planner chose flat"
+            assert rec["hier_inter_wire_bytes"] < rec["flat_inter_wire_bytes"], topology
+            assert rec["t_hier_us"] < rec["t_flat_us"], topology
+        key = f"{n_nodes}x{local}"
+        record[key] = rec
+        csv_rows.append(
+            (f"hier_allreduce_{D_MB}MB_{key}", rec["t_hier_us"],
+             f"flat_us={rec['t_flat_us']},"
+             f"inter_wire_reduction="
+             f"{rec['flat_inter_wire_bytes'] / rec['hier_inter_wire_bytes']:.2f}x")
+        )
+    if record_baseline:
+        BASELINE_PATH.write_text(
+            json.dumps({"hier": record}, indent=1, sort_keys=True) + "\n"
+        )
+    return record

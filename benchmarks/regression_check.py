@@ -77,6 +77,53 @@ def check_scatter_wire(here: pathlib.Path) -> None:
           f"for n in {sorted(int(k) for k in base)}")
 
 
+def check_hier_wire(here: pathlib.Path) -> None:
+    """Inter-node wire of the two-level plans vs the committed
+    BENCH_hier.json.
+
+    ``hier_inter_wire_bytes`` is a STATIC plan quantity (the provisioned
+    streams the inter sub-plan ships across the node fabric — the scarce
+    resource the hierarchy exists to spend well), so the comparison is
+    EXACT and any growth is fatal regardless of ``--strict``: a planner
+    change that quietly moves more bytes across nodes is a structural
+    regression that must not ride in under the timing threshold.  The
+    bench itself also asserts the ISSUE 6 acceptance invariant (hier
+    strictly below flat on wire and modeled time at >= 8 devices).
+    """
+    from benchmarks import hier_bench
+
+    base_path = here / "BENCH_hier.json"
+    if not base_path.exists():
+        # A missing baseline must not read as "no regression".
+        print(f"::error::hier wire baseline missing: {base_path}")
+        sys.exit(1)
+    base = json.loads(base_path.read_text())["hier"]
+    now = hier_bench.run([], record_baseline=False)
+    bad = []
+    for topo, rec in sorted(base.items()):
+        cur = now.get(topo)
+        if cur is None:
+            bad.append(f"{topo}: baseline row missing from current run")
+            continue
+        if cur["hier_inter_wire_bytes"] != rec["hier_inter_wire_bytes"]:
+            bad.append(
+                f"{topo}: hier_inter_wire_bytes changed "
+                f"{rec['hier_inter_wire_bytes']} -> "
+                f"{cur['hier_inter_wire_bytes']}"
+                + (" (GROWTH)" if cur["hier_inter_wire_bytes"]
+                   > rec["hier_inter_wire_bytes"] else
+                   " (re-record the baseline if intended)"))
+        if cur["flat"] != rec["flat"]:
+            bad.append(f"{topo}: flat-vs-hier resolution flipped "
+                       f"{rec['flat']} -> {cur['flat']}")
+    if bad:
+        for msg in bad:
+            print(f"::error::hier wire regression: {msg}")
+        sys.exit(1)
+    print(f"hier wire: inter-node provisioned bytes match baseline for "
+          f"topologies {sorted(base)}")
+
+
 def _ratios(record):
     """{size: {fused metric: fused_us / reference_us}} for a benchmark
     record shaped {size: {"fused": {..._us}, "unfused"|"two_kernel": {...}}}.
@@ -126,6 +173,7 @@ def main() -> None:
     # Structural invariants, independent of timing noise: fatal on mismatch.
     check_step_count_consistency()
     check_scatter_wire(here)
+    check_hier_wire(here)
 
     regressions = []
 

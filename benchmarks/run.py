@@ -12,6 +12,7 @@ from benchmarks import (
     allreduce_bench,
     breakdown,
     compressor_char,
+    hier_bench,
     hop_bench,
     image_stacking,
     moe_a2a_ablation,
@@ -24,6 +25,7 @@ MODULES = [
     ("fig2_breakdown", breakdown),
     ("fig7_9_10_allreduce", allreduce_bench),
     ("fig11_12_scatter", scatter_bench),
+    ("issue6_hier_allreduce", hier_bench),
     ("table1_compression_ratio", table1_ratio),
     ("table2_fig13_image_stacking", image_stacking),
     ("beyond_moe_a2a_ablation", moe_a2a_ablation),

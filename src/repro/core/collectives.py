@@ -74,6 +74,7 @@ from repro.kernels.ref import bitwidth_of as _ref_bitwidth
 __all__ = [
     "GZConfig",
     "gz_allreduce",
+    "gz_allreduce_hier",
     "gz_reduce_scatter",
     "gz_allgather",
     "gz_scatter",
@@ -143,6 +144,14 @@ class GZConfig:
 
 
 def _axis_size(axis_name) -> int:
+    # Composite (tuple/list) axis names — collectives over a flattened 2D
+    # mesh ("node", "local") — multiply out; jax.core.axis_frame only
+    # resolves single names.
+    if isinstance(axis_name, (tuple, list)):
+        n = 1
+        for ax in axis_name:
+            n *= _axis_size(ax)
+        return n
     if hasattr(lax, "axis_size"):  # JAX >= 0.6
         return lax.axis_size(axis_name)
     from jax import core
@@ -782,6 +791,79 @@ def _execute_allreduce(x, axis_name, cfg: GZConfig):
             "layer — resolve a Plan via GZCommunicator.plan first"
         )
     return out.reshape(shape).astype(dtype), ovf
+
+
+def _execute_allreduce_hier(x, node_axis, local_axis, hplan):
+    """EXECUTE layer for the two-level (node × intra-node) allreduce.
+
+    ``hplan`` is a fully-resolved ``comm.HierPlan``.  The flat branch runs
+    the ordinary single-axis schedule over the COMPOSITE axis
+    ``(node_axis, *local)`` — ppermute/psum accept tuple axis names, with
+    ranks flattened node-major — so "hierarchy off" is literally the
+    pre-existing code path, not a reimplementation (the bitwise-equality
+    guarantee the degenerate-topology property test relies on).
+
+    The hierarchical branch composes three stages (DESIGN.md §8):
+
+      1. UNCOMPRESSED ``lax.psum_scatter`` over the local axis — exact
+         f32 sums on the fast intra-node link; each local rank ends up
+         with one fully node-reduced shard of ceil(D/L) elements.
+      2. The compressed single-axis allreduce of that shard across the
+         node axis (``hplan.inter`` — the ONLY lossy stage, carrying the
+         whole error budget via ``error_budget.split_lossy``).
+      3. UNCOMPRESSED ``lax.all_gather`` over the local axis to
+         rematerialize the full message.
+
+    ``local_axis`` may itself be a tuple of mesh axes (grad-sync collapses
+    every non-node data-parallel axis into "local").
+    """
+    local = tuple(local_axis) if isinstance(local_axis, (tuple, list)) \
+        else (local_axis,)
+    if hplan.flat:
+        return _execute_allreduce(
+            x, (node_axis,) + local, hplan.flat_plan.as_config()
+        )
+    n_nodes, L = hplan.topology
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1).astype(jnp.float32)
+    padded, _shard_n = _pad_to_chunks(flat, L)
+    if L > 1:
+        shard = lax.psum_scatter(
+            padded, local if len(local) > 1 else local[0],
+            scatter_dimension=0, tiled=True,
+        )
+    else:
+        shard = padded
+    ovf = jnp.zeros((), jnp.bool_)
+    if n_nodes > 1:
+        shard, ovf = _execute_allreduce(
+            shard, node_axis, hplan.inter.as_config()
+        )
+    if L > 1:
+        padded = lax.all_gather(
+            shard, local if len(local) > 1 else local[0], tiled=True
+        )
+    else:
+        padded = shard
+    return padded[: flat.shape[0]].reshape(shape).astype(dtype), ovf
+
+
+def gz_allreduce_hier(
+    x: jnp.ndarray,
+    node_axis,
+    local_axis,
+    cfg: GZConfig = GZConfig(),
+    *,
+    return_info: bool = False,
+):
+    """Two-level topology-aware allreduce (back-compat-style wrapper over
+    a one-shot :class:`~repro.core.comm.GZHierCommunicator`).  New code
+    should hold the communicator and use its ``allreduce`` method."""
+    from repro.core.comm import GZHierCommunicator
+
+    res = GZHierCommunicator.for_axes(node_axis, local_axis, config=cfg) \
+        .allreduce(x)
+    return (res.value, res.overflow) if return_info else res.value
 
 
 def _comm_for(axis_name, cfg: GZConfig):

@@ -71,15 +71,19 @@ from repro.kernels import ops
 
 __all__ = [
     "Plan",
+    "HierPlan",
     "CollectiveResult",
     "GZCommunicator",
+    "GZHierCommunicator",
     "assert_step_count_consistency",
     "register_policy",
     "policy_names",
     "plan_cache_stats",
     "clear_plan_cache",
     "fit_hardware",
+    "fit_network",
     "measure_codec",
+    "measure_ppermute",
 ]
 
 OPS = (
@@ -157,6 +161,64 @@ class Plan:
             fused=self.fused,
             fused_hop=self.fused_hop,
         )
+
+
+@dataclasses.dataclass(frozen=True)
+class HierPlan:
+    """A frozen, hashable plan for one TWO-LEVEL collective call.
+
+    Composes per-axis sub-:class:`Plan`s over a ``(n_nodes, local)``
+    topology (the FULL axis-size tuple — 2×4 and 4×2 are different plans
+    with different schedules, which is why the cache below keys on the
+    tuple, not the product).  ``flat`` picks which sub-plan executes
+    (``flat_plan`` is always resolved — the flat alternative is the
+    comparison baseline benchmarks record; ``inter`` exists only on the
+    hierarchical path):
+
+      * ``flat=True``: run the ordinary single-axis schedule
+        (``flat_plan``) over the composite ``(node, *local)`` axis — the
+        resolution when the fabric has no link asymmetry (or only one
+        rank per node), so "hierarchy off" is bitwise the pre-existing
+        path.
+      * ``flat=False``: uncompressed intra-node reduce-scatter →
+        compressed ``inter`` allreduce of the ceil(D/L) shard across
+        nodes (the only lossy stage; it carries the WHOLE error budget —
+        ``error_budget.split_lossy`` gives the exact intra stages 0) →
+        uncompressed intra-node allgather.
+
+    ``inter_wire_bytes`` is the per-rank payload crossing node
+    boundaries: the hierarchical path ships only the inter sub-plan's
+    provisioned streams; the flat path's node-major ring makes EVERY send
+    of a node-boundary rank cross, so its inter wire is the full
+    single-axis ``wire_bytes`` — the quantity ``benchmarks/hier_bench.py``
+    records and ``regression_check.py`` pins.  ``t_model``/``t_flat`` are
+    the modeled seconds of the chosen path and the flat alternative
+    (per-link terms: ``cost_model.allreduce_hier_gz`` vs the flat model).
+    """
+
+    op: str
+    topology: tuple        # (n_nodes, gpus_per_node) — full axis-size tuple
+    n_elems: int
+    nbytes: int
+    dtype: str
+    eb: float
+    flat: bool
+    inter: Optional[Plan]       # compressed inter-node stage (hier path)
+    flat_plan: Optional[Plan]   # composite-axis plan (flat path)
+    intra_wire_bytes: int  # uncompressed intra-node bytes per rank (RS+AG)
+    inter_wire_bytes: int  # provisioned bytes crossing node boundaries/rank
+    t_model: float         # modeled seconds of the chosen path
+    t_flat: float          # modeled seconds of the flat alternative
+    policy: str
+
+    @property
+    def ratio(self) -> float:
+        """Inter-node wire reduction vs what the flat path would cross."""
+        if self.flat:
+            return self.flat_plan.ratio
+        if not self.inter_wire_bytes:
+            return 1.0
+        return self.inter.ratio
 
 
 @jax.tree_util.register_dataclass
@@ -553,11 +615,14 @@ def plan_cache_stats() -> dict:
         "misses": _PLAN_STATS["misses"],
         "entries": len(_PLAN_CACHE),
         "keys": tuple(_PLAN_CACHE),
+        "hier_entries": len(_HIER_PLAN_CACHE),
+        "hier_keys": tuple(_HIER_PLAN_CACHE),
     }
 
 
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
+    _HIER_PLAN_CACHE.clear()
     _COMM_CACHE.clear()  # the memoized one-shot communicators, too
     _PLAN_STATS["hits"] = 0
     _PLAN_STATS["misses"] = 0
@@ -609,6 +674,127 @@ def _resolve_plan(
                     if algo == "binomial" else ()),
     )
     _PLAN_CACHE[key] = plan
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Two-level (node × intra-node) plan resolution
+# ---------------------------------------------------------------------------
+
+_HIER_PLAN_CACHE: dict = {}
+
+
+def _allreduce_model_time(algo, nbytes, n, ratio, hw, chunks, fused_hop):
+    """Modeled seconds of one single-axis compressed allreduce — the same
+    cost functions the policies rank, evaluated for a resolved plan."""
+    if n <= 1:
+        return 0.0
+    if algo == "redoub":
+        return cost_model.allreduce_redoub_gz(
+            nbytes, n, ratio, hw, fused_hop=fused_hop
+        )
+    if algo == "intring":
+        return cost_model.allreduce_intring_gz(nbytes, n, ratio, hw)
+    return cost_model.allreduce_ring_gz_chunked(
+        nbytes, n, ratio, hw, chunks, fused_hop=fused_hop
+    )
+
+
+def _resolve_hier_plan(
+    op, n_elems, dtype, topology, eb, *, policy, requested_algo,
+    requested_chunks, capacity_factor, worst_case_budget, fused, fused_hop,
+    ratio, hw,
+) -> HierPlan:
+    """Resolve the frozen two-level plan for ``topology = (n_nodes, L)``.
+
+    The cache keys on the FULL topology tuple: the same composite axis
+    names over a reshaped mesh (2×4 vs 4×2) resolve different schedules —
+    different shard sizes, different inter fan-out — so they must replan
+    (the PR 3 multi-mesh lesson, extended to 2D).
+
+    Resolution rule:
+
+      * ``L == 1`` (one rank per node) or no link asymmetry
+        (``hw.link_asymmetry() <= 1``): FLAT — there is no fast link to
+        exploit, and running the composite-axis single-axis schedule
+        keeps the result bitwise-identical to the pre-hierarchy path (the
+        degenerate-topology property tests pin exactly this).
+      * Otherwise compare modeled times: the flat compressed allreduce
+        over N ranks (every link priced at the inter terms — a flat plan
+        is topology-blind, and its node-boundary ranks really do cross on
+        every send in node-major order) vs
+        ``cost_model.allreduce_hier_gz``.  The policy picks the inter
+        stage's algorithm/depth by resolving an ordinary sub-plan at the
+        shard size over ``n_nodes`` ranks.
+    """
+    topology = (int(topology[0]), int(topology[1]))
+    key = (
+        op, n_elems * 4, str(dtype), topology, eb,
+        policy, requested_algo, requested_chunks, capacity_factor,
+        worst_case_budget, fused, fused_hop, ratio, hw,
+    )
+    hit = _HIER_PLAN_CACHE.get(key)
+    if hit is not None:
+        _PLAN_STATS["hits"] += 1
+        return hit
+    _PLAN_STATS["misses"] += 1
+    if op != "allreduce":
+        raise ValueError(
+            f"hierarchical plans support op='allreduce' only; got {op!r}"
+        )
+    n_nodes, L = topology
+    N = n_nodes * L
+    nbytes = n_elems * 4
+    knobs = dict(
+        policy=policy, requested_algo=requested_algo,
+        requested_chunks=requested_chunks, capacity_factor=capacity_factor,
+        worst_case_budget=worst_case_budget, fused=fused,
+        fused_hop=fused_hop, ratio=ratio, hw=hw,
+    )
+    flat_plan = _resolve_plan(op, n_elems, dtype, N, eb, **knobs)
+    t_flat = _allreduce_model_time(
+        flat_plan.algo, nbytes, N, ratio, hw, flat_plan.pipeline_chunks,
+        fused_hop,
+    )
+
+    inter = None
+    t_hier = float("inf")
+    shard_elems = -(-n_elems // L)
+    if L > 1 and hw.link_asymmetry() > 1.0:
+        # Only the inter-node stage is lossy; the exact intra stages get 0.
+        eb_inter = error_budget.split_lossy(
+            eb, (False, n_nodes > 1, False)
+        )[1]
+        if n_nodes > 1:
+            inter = _resolve_plan(
+                op, shard_elems, dtype, n_nodes, eb_inter, **knobs
+            )
+        t_hier = cost_model.allreduce_hier_gz(
+            nbytes, n_nodes, L, ratio, hw,
+            inter_algo=inter.algo if inter else "ring",
+            chunks=inter.pipeline_chunks if inter else 1,
+            fused_hop=fused_hop,
+        )
+
+    flat = t_flat <= t_hier
+    if flat:
+        inter = None
+        intra_wire = 0
+        inter_wire = flat_plan.wire_bytes  # boundary rank: every send crosses
+        t_model = t_flat
+    else:
+        intra_wire = 2 * (L - 1) * shard_elems * 4
+        inter_wire = inter.wire_bytes if inter else 0
+        t_model = t_hier
+    plan = HierPlan(
+        op=op, topology=topology, n_elems=n_elems, nbytes=nbytes,
+        dtype=str(dtype), eb=eb, flat=flat,
+        inter=inter, flat_plan=flat_plan,
+        intra_wire_bytes=0 if flat else intra_wire,
+        inter_wire_bytes=inter_wire, t_model=t_model, t_flat=t_flat,
+        policy=policy,
+    )
+    _HIER_PLAN_CACHE[key] = plan
     return plan
 
 
@@ -701,18 +887,25 @@ class GZCommunicator:
         )
 
     def calibrate(self, *, sizes=(1 << 16, 1 << 18, 1 << 20), reps: int = 3,
-                  interpret: Optional[bool] = None) -> "GZCommunicator":
+                  interpret: Optional[bool] = None,
+                  network: Optional[dict] = None) -> "GZCommunicator":
         """Return a communicator whose cost model is fitted to THIS host.
 
         Times the actual codec (``measure_codec``) at ``sizes`` elements
         and least-squares-fits the Hardware throughput/overhead terms the
         planner evaluates.  Network terms are kept from the current model
-        (they need a multi-host fabric to measure).
+        unless ``network`` supplies measured ppermute timings per link
+        class — ``{'inter': [(bytes, seconds), ...], 'intra': [...]}``
+        (see :func:`measure_ppermute`) — in which case each named link's
+        alpha-beta terms are least-squares-fitted too
+        (:func:`fit_network`).
         """
         samples_c, samples_d = measure_codec(
             self.config, sizes=sizes, reps=reps, interpret=interpret
         )
         hw = fit_hardware(samples_c, samples_d, base=self.hw)
+        for link, samples in (network or {}).items():
+            hw = fit_network(samples, base=hw, link=link)
         return GZCommunicator(
             self.axis_name, config=self.config, policy=self.policy, hw=hw,
             ratio=self.ratio, axis_size=self._axis_size,
@@ -840,6 +1033,157 @@ class GZCommunicator:
         )
 
 
+class GZHierCommunicator:
+    """Resolve-once communicator bound to a two-level ``node × local``
+    topology (DESIGN.md §8).
+
+    ``node_axis`` is the slow (inter-node fabric) mesh axis; ``local_axis``
+    is the fast intra-node axis — or a TUPLE of axes, all collapsed into
+    "local" (grad-sync folds every non-node data-parallel axis in).
+    ``topology`` may be passed explicitly as ``(n_nodes, gpus_per_node)``
+    or left None to be read from the surrounding shard_map trace per call
+    (sizes are static either way).
+
+    ``allreduce`` dispatches on a frozen :class:`HierPlan`: per-link cost
+    comparison decides flat vs hierarchical, the policy picks the inter
+    stage's algorithm/compression depth, and the execute layer
+    (``collectives._execute_allreduce_hier``) contains zero selector
+    logic.  ``CollectiveResult.wire_bytes`` reports the INTER-NODE wire —
+    the scarce resource this communicator exists to spend well.
+    """
+
+    def __init__(
+        self,
+        node_axis,
+        local_axis,
+        *,
+        config=None,
+        policy: str = "auto",
+        hw: cost_model.Hardware = cost_model.TPU_V5E,
+        ratio: float = 20.0,
+        topology: Optional[tuple] = None,
+        _auto_depth: bool = False,
+    ):
+        from repro.core.collectives import GZConfig
+
+        self.node_axis = node_axis
+        self.local_axis = (
+            tuple(local_axis) if isinstance(local_axis, (tuple, list))
+            else local_axis
+        )
+        self.config = config if config is not None else GZConfig()
+        if policy not in _POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; registered: {policy_names()}"
+            )
+        self.policy = policy
+        self.hw = hw
+        self.ratio = ratio
+        self._topology = tuple(topology) if topology is not None else None
+        self._auto_depth = _auto_depth
+
+    @classmethod
+    def for_axes(cls, node_axis, local_axis, *, config=None,
+                 policy: str = "auto",
+                 hw: cost_model.Hardware = cost_model.TPU_V5E,
+                 ratio: float = 20.0, topology: Optional[tuple] = None,
+                 auto_depth: bool = False) -> "GZHierCommunicator":
+        """Memoized one-shot hier communicator (one instance per distinct
+        (axes, knobs) — cleared with :func:`clear_plan_cache`)."""
+        local = (tuple(local_axis) if isinstance(local_axis, (tuple, list))
+                 else local_axis)
+        topo = tuple(topology) if topology is not None else None
+        key = (cls, node_axis, local, config, policy, hw, ratio, topo,
+               auto_depth)
+        comm = _COMM_CACHE.get(key)
+        if comm is None:
+            comm = cls(
+                node_axis, local, config=config, policy=policy, hw=hw,
+                ratio=ratio, topology=topo, _auto_depth=auto_depth,
+            )
+            _COMM_CACHE[key] = comm
+        return comm
+
+    def topology(self) -> tuple:
+        """Static ``(n_nodes, gpus_per_node)``: the bound tuple, or the
+        sizes read fresh from the surrounding shard_map trace (never
+        cached on the instance — a memoized communicator outlives any one
+        mesh, and the same axis names can be bound to different shapes
+        across traces: the 2×4-vs-4×2 replan case)."""
+        if self._topology is not None:
+            return self._topology
+        from repro.core.collectives import _axis_size
+
+        return (int(_axis_size(self.node_axis)),
+                int(_axis_size(self.local_axis)))
+
+    def _composite_axes(self) -> tuple:
+        local = (self.local_axis if isinstance(self.local_axis, tuple)
+                 else (self.local_axis,))
+        return (self.node_axis,) + local
+
+    def plan(self, shape, dtype=jnp.float32) -> HierPlan:
+        """Resolve the frozen :class:`HierPlan` for an allreduce of
+        ``shape`` over the bound topology (memoized on the full topology
+        tuple plus the knob set)."""
+        n_elems = int(np.prod(shape)) if not isinstance(shape, int) else shape
+        cfg = self.config
+        requested_algo = None if cfg.algo == "auto" else cfg.algo
+        requested_chunks = cfg.pipeline_chunks
+        if self._auto_depth and requested_chunks == 1:
+            requested_chunks = 0
+        return _resolve_hier_plan(
+            "allreduce", n_elems, jnp.dtype(dtype).name, self.topology(),
+            cfg.eb, policy=self.policy, requested_algo=requested_algo,
+            requested_chunks=requested_chunks,
+            capacity_factor=cfg.capacity_factor,
+            worst_case_budget=cfg.worst_case_budget, fused=cfg.fused,
+            fused_hop=cfg.fused_hop, ratio=self.ratio, hw=self.hw,
+        )
+
+    def allreduce(self, x, *, plan: Optional[HierPlan] = None) -> CollectiveResult:
+        """Two-level compressed sum-allreduce over ``node × local``."""
+        n_nodes, L = self.topology()
+        if n_nodes * L == 1:
+            return CollectiveResult(x, jnp.zeros((), jnp.bool_), 0, 1.0)
+        hplan = plan or self.plan(x.shape, x.dtype)
+        from repro.core.collectives import _execute_allreduce_hier, _or_across
+
+        out, ovf = _execute_allreduce_hier(
+            x, self.node_axis, self.local_axis, hplan
+        )
+        return CollectiveResult(
+            out, _or_across(ovf, self._composite_axes()),
+            hplan.inter_wire_bytes, hplan.ratio,
+        )
+
+    def calibrate(self, *, sizes=(1 << 16, 1 << 18, 1 << 20), reps: int = 3,
+                  network: Optional[dict] = None) -> "GZHierCommunicator":
+        """Codec-fitted (and optionally network-fitted) communicator: like
+        ``GZCommunicator.calibrate`` plus per-link-class network terms via
+        ``network={'inter': samples, 'intra': samples}`` (measured
+        ``(bytes, seconds)`` ppermute timings, e.g. from
+        :func:`measure_ppermute` over each axis)."""
+        samples_c, samples_d = measure_codec(
+            self.config, sizes=sizes, reps=reps
+        )
+        hw = fit_hardware(samples_c, samples_d, base=self.hw)
+        for link, samples in (network or {}).items():
+            hw = fit_network(samples, base=hw, link=link)
+        return GZHierCommunicator(
+            self.node_axis, self.local_axis, config=self.config,
+            policy=self.policy, hw=hw, ratio=self.ratio,
+            topology=self._topology, _auto_depth=self._auto_depth,
+        )
+
+    def __repr__(self):
+        return (
+            f"GZHierCommunicator(node={self.node_axis!r}, "
+            f"local={self.local_axis!r}, topology={self._topology}, "
+            f"policy={self.policy!r}, eb={self.config.eb}, hw={self.hw.name})"
+        )
+
+
 def _communicator_cache(cls, axis_name, config, policy, hw, ratio, axis_size,
                         auto_depth):
     key = (cls, axis_name, config, policy, hw, ratio, axis_size, auto_depth)
@@ -895,6 +1239,82 @@ def fit_hardware(samples_compress, samples_decompress=None, *,
     return dataclasses.replace(
         base, name=name or f"{base.name}-calibrated", **kw
     )
+
+
+def fit_network(samples, *, base: cost_model.Hardware,
+                link: str = "inter",
+                name: Optional[str] = None) -> cost_model.Hardware:
+    """Fit one link class's alpha-beta terms from measured hop timings.
+
+    ``samples`` is ``[(bytes_on_wire, seconds), ...]`` from timed
+    ``ppermute`` hops over ONE mesh axis (:func:`measure_ppermute`).  The
+    model is the cost model's own ``t = alpha + bytes / bw`` — linear in
+    bytes, so a least-squares line gives ``bw = 1/slope`` and
+    ``alpha = intercept`` directly (the recovery is exact on noiseless
+    samples; tests/test_hier.py pins it).
+
+    ``link='inter'`` replaces ``net_gbps``/``net_alpha_us``;
+    ``link='intra'`` replaces ``intra_gbps``/``intra_alpha_us`` — fitting
+    the intra class on a flat-fabric base thereby DECLARES the fabric
+    two-level (``Hardware.intra_terms`` stops inheriting the inter
+    terms).
+    """
+    pts = np.asarray(sorted(samples), dtype=np.float64)
+    if pts.ndim != 2 or pts.shape[0] < 2:
+        raise ValueError("need >= 2 (bytes, seconds) samples")
+    slope, intercept = np.polyfit(pts[:, 0], pts[:, 1], 1)
+    bw = 1.0 / max(slope, 1e-18)  # bytes/s
+    gbps = bw * 8 / 1e9
+    alpha_us = max(intercept, 0.0) * 1e6
+    if link == "inter":
+        kw = dict(net_gbps=gbps, net_alpha_us=alpha_us)
+    elif link == "intra":
+        kw = dict(intra_gbps=gbps, intra_alpha_us=alpha_us)
+    else:
+        raise ValueError(f"unknown link class {link!r}: 'inter' or 'intra'")
+    return dataclasses.replace(
+        base, name=name or f"{base.name}-net", **kw
+    )
+
+
+def measure_ppermute(mesh, axis_name, *, sizes=(1 << 14, 1 << 17, 1 << 20),
+                     reps: int = 3):
+    """Time one ring-shift ``ppermute`` hop over ``axis_name`` of ``mesh``
+    at each payload size (f32 elements).  Returns ``[(bytes, seconds),
+    ...]`` — feed to :func:`fit_network` per link class (the intra-node
+    axis times the fast link, the node axis the fabric).  Min-of-reps
+    discipline like ``measure_codec``.  On a single-host mesh the numbers
+    measure XLA's copy path, not a real fabric — useful for exercising
+    the fitting pipeline, not for production calibration.
+    """
+    import time
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.collectives import _ring_perm
+    from repro.core.shmap import shard_map
+
+    sizes_of = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes_of[axis_name]
+    perm = _ring_perm(n)
+
+    samples = []
+    for n_elems in sizes:
+        def body(x):
+            return jax.lax.ppermute(x, axis_name, perm)
+
+        fn = jax.jit(shard_map(
+            body, mesh=mesh, in_specs=(P(),), out_specs=P(),
+        ))
+        x = jnp.ones((int(n_elems),), jnp.float32)
+        jax.block_until_ready(fn(x))
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            best = min(best, time.perf_counter() - t0)
+        samples.append((int(n_elems) * 4, best))
+    return samples
 
 
 def measure_codec(config=None, *, sizes=(1 << 16, 1 << 18, 1 << 20),

@@ -39,6 +39,10 @@ __all__ = [
     "allreduce_redoub_gz",
     "allreduce_intring_gz",
     "allreduce_uncompressed_ring",
+    "t_net_intra",
+    "reduce_scatter_uncompressed_intra",
+    "allgather_uncompressed_intra",
+    "allreduce_hier_gz",
     "allreduce_cprp2p",
     "allreduce_ccoll",
     "allreduce_ring_gz_chunked",
@@ -59,14 +63,36 @@ class Hardware:
     cmp_saturation_mb: float  # input size at which utilization = 50%
     cmp_overhead_us: float    # per-invocation fixed cost (kernel launch /
                               # pallas dispatch + pipeline fill)
-    net_gbps: float           # per-link network bandwidth (bytes/s * 8)
-    net_alpha_us: float       # per-hop latency
+    net_gbps: float           # INTER-node per-link bandwidth (the slow hop)
+    net_alpha_us: float       # inter-node per-hop latency
     reduce_gbps: float        # on-device reduction bandwidth
     pcie_gbps: float = 0.0    # host staging penalty (CPU-centric designs)
+    # Per-link-class terms for the two-level (node x intra-node) topology:
+    # NVLink/ICI-class links inside a node vs the fabric between nodes.
+    # intra_gbps == 0.0 declares a FLAT fabric (every link priced at
+    # net_gbps/net_alpha_us) — the pre-hierarchy behavior, and the default
+    # so every existing Hardware point keeps its meaning.
+    intra_gbps: float = 0.0       # intra-node per-link bandwidth
+    intra_alpha_us: float = 0.0   # intra-node per-hop latency
+
+    def intra_terms(self) -> tuple:
+        """(gbps, alpha_us) of the intra-node link class; falls back to
+        the inter-node terms on a flat fabric (intra_gbps == 0)."""
+        if self.intra_gbps > 0.0:
+            return self.intra_gbps, self.intra_alpha_us
+        return self.net_gbps, self.net_alpha_us
+
+    def link_asymmetry(self) -> float:
+        """intra / inter bandwidth ratio (1.0 on a flat fabric) — the
+        quantity that decides whether two-level planning can pay."""
+        return self.intra_terms()[0] / self.net_gbps
 
 
 # Calibrated to paper Fig. 3 (cuSZp on A100: ~5 MB saturation; ~100 GB/s
-# class compression at saturation) and Slingshot-10 (100 Gbps).
+# class compression at saturation) and Slingshot-10 (100 Gbps).  The
+# intra-node link is NVLink3 (~600 GB/s per GPU): the ~48:1 asymmetry is
+# exactly the regime where the paper's 512-GPU numbers live — compression
+# only pays on the slow inter-node hop.
 A100_SLINGSHOT = Hardware(
     name="a100-slingshot10",
     cmp_peak_gbps=140.0 * 8,
@@ -77,6 +103,8 @@ A100_SLINGSHOT = Hardware(
     net_alpha_us=5.0,
     reduce_gbps=1300.0 * 8,
     pcie_gbps=64.0 * 8,
+    intra_gbps=600.0 * 8,
+    intra_alpha_us=2.0,
 )
 
 # TPU v5e: 819 GB/s HBM, ~50 GB/s/link ICI; Pallas dispatch overhead is
@@ -316,6 +344,71 @@ def allreduce_intring_gz(D, N, R, hw: Hardware, overlap: float = 0.7) -> float:
 def allreduce_uncompressed_ring(D, N, hw: Hardware) -> float:
     """NCCL-class baseline: 2(N-1) hops of D/N, no compression."""
     return 2 * (N - 1) * t_net(D / N, hw)
+
+
+# --- Two-level (node x intra-node) topology (DESIGN.md §8) ---
+
+
+def t_net_intra(bytes_on_wire: float, hw: Hardware) -> float:
+    """Alpha-beta term for one intra-node hop (NVLink/ICI link class);
+    identical to ``t_net`` on a flat fabric (``intra_gbps == 0``)."""
+    gbps, alpha_us = hw.intra_terms()
+    return alpha_us * 1e-6 + bytes_on_wire / (gbps * 1e9 / 8)
+
+
+def reduce_scatter_uncompressed_intra(D, L, hw: Hardware) -> float:
+    """Uncompressed ring reduce-scatter over the L intra-node ranks:
+    (L-1) hops of D/L on the fast link, no codec anywhere — at NVLink
+    bandwidth the compressor would be the bottleneck, which is the whole
+    point of placing codec work only on the slow hop."""
+    L = max(int(L), 1)
+    if L == 1:
+        return 0.0
+    return (L - 1) * (t_net_intra(D / L, hw) + t_reduce(D / L, hw))
+
+
+def allgather_uncompressed_intra(D, L, hw: Hardware) -> float:
+    """Uncompressed ring allgather of the L node-local shards (D total)."""
+    L = max(int(L), 1)
+    if L == 1:
+        return 0.0
+    return (L - 1) * t_net_intra(D / L, hw)
+
+
+def allreduce_hier_gz(
+    D, n_nodes, L, R, hw: Hardware, *,
+    inter_algo: str = "ring", chunks: int = 1,
+    fused_hop: bool = True, overlap: float = 0.7,
+) -> float:
+    """Two-level allreduce: uncompressed intra-node reduce-scatter
+    (fast link, D/L shards) → compressed ``inter_algo`` allreduce of the
+    D/L shard across the n_nodes node peers (slow link — the only place
+    the codec runs) → uncompressed intra-node allgather.
+
+    Each stage reuses the exact single-axis model it composes, so the
+    hier-vs-flat comparison in the planner prices both sides with the
+    same machinery.  The inter stage dominates whenever
+    ``hw.link_asymmetry()`` is large: the flat compressed ring ships
+    ~2(N-1) chunk streams across node boundaries, the hierarchy ships
+    the inter pattern on a 1/L-size shard.
+    """
+    n_nodes = max(int(n_nodes), 1)
+    L = max(int(L), 1)
+    total = reduce_scatter_uncompressed_intra(D, L, hw)
+    shard = D / L
+    if n_nodes > 1:
+        if inter_algo == "redoub":
+            total += allreduce_redoub_gz(
+                shard, n_nodes, R, hw, overlap, fused_hop=fused_hop
+            )
+        elif inter_algo == "intring":
+            total += allreduce_intring_gz(shard, n_nodes, R, hw, overlap)
+        else:
+            total += allreduce_ring_gz_chunked(
+                shard, n_nodes, R, hw, chunks, fused_hop=fused_hop
+            )
+    total += allgather_uncompressed_intra(D, L, hw)
+    return total
 
 
 def allreduce_cprp2p(D, N, R, hw: Hardware) -> float:

@@ -39,7 +39,7 @@ from __future__ import annotations
 
 import math
 
-__all__ = ["lossy_hops", "allocate"]
+__all__ = ["lossy_hops", "allocate", "split_lossy"]
 
 
 def lossy_hops(algo: str, n: int) -> int:
@@ -87,3 +87,23 @@ def allocate(eb_total: float, algo: str, n: int, *, worst_case: bool = True) -> 
     if worst_case:
         return eb_total / hops
     return eb_total / math.sqrt(hops)
+
+
+def split_lossy(eb_total: float, lossy_flags) -> tuple:
+    """Split an end-to-end budget across composed stages, charging ONLY
+    the lossy ones (two-level collectives: the uncompressed intra-node
+    reduce-scatter/allgather stages contribute exact f32 arithmetic, so
+    they get 0.0 and the inter-node compressed stage keeps the whole
+    budget undiluted — splitting evenly across all stages would shrink
+    eb by the stage count for no accuracy gain).
+
+    Returns one eb per stage, in order.  Multiple lossy stages share
+    ``eb_total`` evenly (each stage's own ``allocate`` then divides its
+    share by its hop count).
+    """
+    flags = tuple(bool(f) for f in lossy_flags)
+    n_lossy = sum(flags)
+    if n_lossy == 0:
+        return tuple(0.0 for _ in flags)
+    share = eb_total / n_lossy
+    return tuple(share if f else 0.0 for f in flags)

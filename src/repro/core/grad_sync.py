@@ -4,8 +4,11 @@ Three entry points, all rank-centric (call inside shard_map bodies):
 
   * ``dp_allreduce_grads``   — gradient sync across data-parallel axes
     (the paper's headline Allreduce, applied where a training framework
-    actually spends its collective bytes).  Hierarchical over multiple
-    axes (data within pod, then across pods).
+    actually spends its collective bytes).  Multiple axes resolve ONE
+    two-level plan (``GZHierCommunicator``): exact uncompressed sums on
+    the fast intra-node axes, compression only on the slow inter-node
+    hop — or a single flat composite-axis schedule when the fabric has
+    no link asymmetry (DESIGN.md §8).
   * ``fsdp_all_gather``      — ZeRO-3 parameter gather, differentiable:
     forward is a (optionally compressed) allgather, backward is the
     matching (optionally compressed) reduce-scatter — the [29] pattern,
@@ -41,7 +44,7 @@ from jax import lax
 from jax.flatten_util import ravel_pytree
 
 from repro.core.collectives import GZConfig, _axis_size
-from repro.core.comm import GZCommunicator
+from repro.core.comm import GZCommunicator, GZHierCommunicator
 
 __all__ = ["SyncConfig", "dp_allreduce_grads", "fsdp_all_gather", "fsdp_reduce_scatter"]
 
@@ -107,20 +110,39 @@ def _comm(axis_name, sync: "SyncConfig") -> GZCommunicator:
     return GZCommunicator.for_config(axis_name, cfg, auto_depth=True)
 
 
+def _hier_comm(axis_names, sync: "SyncConfig") -> GZHierCommunicator:
+    """The two-level communicator for a multi-axis sync (memoized).
+
+    Axis convention (matching the callers' inner-fast-first ordering):
+    the LAST axis is the slow inter-node hop ("pod"/"node" — outermost in
+    the mesh), everything before it is collapsed into the fast local
+    level.  The topology is read from the shard_map trace per call, so
+    one memoized communicator replans across reshaped meshes.
+    """
+    node = axis_names[-1]
+    local = axis_names[0] if len(axis_names) == 2 else tuple(axis_names[:-1])
+    cfg = sync.gz
+    if sync.pipeline_chunks > 0:
+        cfg = dataclasses.replace(cfg, pipeline_chunks=sync.pipeline_chunks)
+        return GZHierCommunicator.for_axes(node, local, config=cfg)
+    return GZHierCommunicator.for_axes(node, local, config=cfg,
+                                       auto_depth=True)
+
+
 def _global_rms(flat: jnp.ndarray, axis_names) -> jnp.ndarray:
-    ss = jnp.sum(flat.astype(jnp.float32) ** 2)
-    cnt = jnp.float32(flat.size)
+    # ONE multi-axis psum (a single reduction tree) instead of one round
+    # per axis; the element count is static (axis sizes are trace-time
+    # constants), so only the sum-of-squares travels.
+    ss = lax.psum(jnp.sum(flat.astype(jnp.float32) ** 2), tuple(axis_names))
+    cnt = float(flat.size)
     for ax in axis_names:
-        ss = lax.psum(ss, ax)
-        cnt = lax.psum(cnt, ax)
-    return jnp.sqrt(ss / jnp.maximum(cnt, 1.0))
+        cnt *= _axis_size(ax)
+    return jnp.sqrt(ss / max(cnt, 1.0))
 
 
 def _allreduce_flat(flat: jnp.ndarray, axis_names, sync: SyncConfig) -> jnp.ndarray:
     if sync.gz is None:
-        for ax in axis_names:
-            flat = lax.psum(flat, ax)
-        return flat
+        return lax.psum(flat, tuple(axis_names))
     if sync.relative_eb:
         scale = jnp.maximum(_global_rms(flat, axis_names), 1e-30)
         # eb must be a static trace-time constant shape; keep it as a traced
@@ -130,13 +152,21 @@ def _allreduce_flat(flat: jnp.ndarray, axis_names, sync: SyncConfig) -> jnp.ndar
     chunk = min(sync.chunk, n)
     n_chunks = -(-n // chunk)
     padded = jnp.zeros((n_chunks * chunk,), flat.dtype).at[:n].set(flat)
-    comms = [_comm(ax, sync) for ax in axis_names]
 
-    def body(carry, xc):
-        out = xc
-        for comm in comms:  # hierarchical: data first, then pod
-            out = comm.allreduce(out).value
-        return carry, out
+    if len(axis_names) == 1:
+        comm = _comm(axis_names[0], sync)
+
+        def body(carry, xc):
+            return carry, comm.allreduce(xc).value
+    else:
+        # ONE two-level plan over node × local replaces the sequential
+        # per-axis allreduce loop: compression runs only on the slow
+        # inter-node hop (or the planner falls back to a single flat
+        # composite-axis schedule when the fabric has no asymmetry).
+        hcomm = _hier_comm(axis_names, sync)
+
+        def body(carry, xc):
+            return carry, hcomm.allreduce(xc).value
 
     _, synced = lax.scan(body, (), padded.reshape(n_chunks, chunk))
     out = synced.reshape(-1)[:n]

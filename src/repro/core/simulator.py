@@ -29,6 +29,7 @@ __all__ = [
     "sim_allreduce_redoub",
     "sim_allreduce_ring",
     "sim_allreduce_intring",
+    "sim_allreduce_hier",
     "sim_allgather_ring",
     "sim_reduce_scatter_ring",
     "sim_scatter_binomial",
@@ -111,6 +112,62 @@ def sim_allreduce_intring(xs: List[np.ndarray], cfg: GZConfig):
     qsum = np.sum(qs, axis=0)
     out = (qsum.astype(np.float64) * 2 * eb).astype(np.float32)
     return [out.copy() for _ in xs]
+
+
+def sim_allreduce_hier(xs: List[np.ndarray], topology, cfg: GZConfig,
+                       *, inter_algo: str = "redoub"):
+    """Two-level allreduce replay over ``topology = (n_nodes, L)`` with
+    node-major rank ordering (rank = node*L + local) — the same layout
+    ``launch.mesh.make_hier_mesh`` carves and the composite-axis flat
+    path flattens to.
+
+    Mirrors ``collectives._execute_allreduce_hier``'s hierarchical branch
+    stage for stage: EXACT f32 intra-node reduce-scatter (pad to L equal
+    shards, shard l = sum of the node's ranks' shard-l slices — no codec,
+    no error), the compressed ``inter_algo`` allreduce of each shard
+    index across the n_nodes node peers via the single-axis sims (the
+    only lossy stage: ``cfg.eb`` applies to it UNDILUTED, exactly
+    ``error_budget.split_lossy``'s allocation), then the exact allgather
+    copy back to every rank of the node.  End-to-end error therefore
+    obeys the inter stage's own budget bound — the property
+    tests/test_hier_property.py pins across non-pow2 topologies.
+    """
+    n_nodes, L = topology
+    assert len(xs) == n_nodes * L, (len(xs), topology)
+    d = xs[0].shape[0]
+    shard = -(-d // L)
+    padded = [
+        np.zeros((L * shard,), np.float32) for _ in xs
+    ]
+    for r, x in enumerate(xs):
+        padded[r][:d] = x.astype(np.float32)
+    # Intra reduce-scatter: node n's shard l (exact f32 sum).
+    node_shards = [
+        [
+            np.sum(
+                [padded[n * L + j][l * shard:(l + 1) * shard]
+                 for j in range(L)],
+                axis=0, dtype=np.float32,
+            )
+            for l in range(L)
+        ]
+        for n in range(n_nodes)
+    ]
+    # Inter allreduce of each shard index across nodes (the lossy stage).
+    if n_nodes > 1:
+        sim = {
+            "redoub": sim_allreduce_redoub,
+            "ring": sim_allreduce_ring,
+            "intring": sim_allreduce_intring,
+        }[inter_algo]
+        for l in range(L):
+            outs = sim([node_shards[n][l] for n in range(n_nodes)], cfg)
+            for n in range(n_nodes):
+                node_shards[n][l] = outs[n].astype(np.float32)
+    # Intra allgather: exact copy of the node's shards to all its ranks.
+    return [
+        np.concatenate(node_shards[r // L])[:d] for r in range(len(xs))
+    ]
 
 
 def sim_reduce_scatter_ring(xs: List[np.ndarray], cfg: GZConfig):

@@ -8,7 +8,12 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "mesh_axis_sizes", "dp_axes_of"]
+__all__ = [
+    "make_production_mesh",
+    "make_hier_mesh",
+    "mesh_axis_sizes",
+    "dp_axes_of",
+]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,6 +21,42 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_hier_mesh(
+    n_nodes: int | None = None,
+    gpus_per_node: int | None = None,
+    *,
+    axis_names: tuple = ("node", "local"),
+    devices=None,
+):
+    """Carve the device list into a two-level ``node × local`` mesh.
+
+    Devices are laid out node-major (``devices.reshape(n_nodes, L)``), so
+    consecutive devices share a node — matching how multi-host runtimes
+    enumerate local devices first, and making the ``local`` axis the
+    fast NVLink/ICI hop and ``node`` the slow fabric hop.  Both extents
+    are arbitrary (the remainder/trimmed-slab machinery handles non-pow2
+    sizes per axis); missing extents are inferred from the device count.
+    """
+    if devices is None:
+        devices = jax.devices()
+    devices = list(devices)
+    total = len(devices)
+    if n_nodes is None and gpus_per_node is None:
+        raise ValueError("give n_nodes and/or gpus_per_node")
+    if n_nodes is None:
+        n_nodes = total // gpus_per_node
+    if gpus_per_node is None:
+        gpus_per_node = total // n_nodes
+    if n_nodes * gpus_per_node != total:
+        raise ValueError(
+            f"{n_nodes} nodes x {gpus_per_node} gpus != {total} devices"
+        )
+    import numpy as np
+
+    grid = np.asarray(devices).reshape(n_nodes, gpus_per_node)
+    return jax.sharding.Mesh(grid, axis_names)
 
 
 def mesh_axis_sizes(mesh) -> dict:

@@ -1,0 +1,217 @@
+"""Child: two-level (node × local) hierarchical allreduce on a virtual
+2D mesh (ISSUE 6 acceptance).
+
+Topology comes from GZ_HIER_TOPOLOGY ("<n_nodes>x<gpus_per_node>",
+default 2x3 — deliberately non-power-of-two on BOTH axes); the device
+count is pinned to the product before jax import.  Checks:
+
+  * hierarchical path (A100-style asymmetric hw) is BITWISE identical to
+    the composed per-axis reference (exact psum_scatter over local ->
+    single-axis gz allreduce of the shard over node -> all_gather), and
+    within the error budget of its only lossy stage vs the exact sum;
+  * flat fallback (flat-fabric hw) is BITWISE identical to the ordinary
+    single-axis schedule over the composite ("node", "local") axis;
+  * one memoized trace-read communicator replans across RESHAPED meshes
+    (2x3 then 3x2 of the same 6 devices): distinct HierPlan cache entries
+    keyed on the full topology tuple, correct sums on both (satellite 1 —
+    a cache keyed on the rank product would reuse the wrong shard size);
+  * overflow propagates as the global OR across BOTH axes;
+  * dp_allreduce_grads over ("local", "node") syncs a pytree within
+    bound through the single two-level plan;
+  * _global_rms: the single multi-axis psum matches the numpy global RMS
+    on every rank.
+
+Prints 'OK <name>' per check; any assertion failure exits nonzero.
+"""
+import os
+
+from _child_env import pin_device_count
+
+TOPOLOGY = os.environ.get("GZ_HIER_TOPOLOGY", "2x3")
+N_NODES, L = (int(s) for s in TOPOLOGY.split("x"))
+N = N_NODES * L
+os.environ["GZ_CHILD_DEVICES"] = str(N)
+pin_device_count(N)
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cost_model
+from repro.core.collectives import (
+    GZConfig,
+    _pad_to_chunks,
+    gz_allreduce,
+    gz_allreduce_hier,
+)
+from repro.core.comm import (
+    GZHierCommunicator,
+    clear_plan_cache,
+    plan_cache_stats,
+)
+from repro.core.shmap import shard_map
+
+HW_ASYM = cost_model.A100_SLINGSHOT  # 48:1 intra:inter — hier territory
+HW_FLAT = cost_model.TPU_V5E         # flat fabric — must resolve flat
+
+D = 1000  # NOT divisible by L=3 (or 2): exercises the shard padding
+mesh = jax.make_mesh((N_NODES, L), ("node", "local"))
+rng = np.random.default_rng(0)
+base = np.cumsum(rng.normal(0, 0.01, (N, D)), axis=1).astype(np.float32)
+exact_sum = base.sum(axis=0)
+cfg = GZConfig(eb=1e-4, capacity_factor=1.2)
+
+AX = ("node", "local")  # node-major: rank = node * L + local
+
+
+def shmap(f, in_specs, out_specs, m=mesh):
+    return jax.jit(shard_map(f, mesh=m, in_specs=in_specs, out_specs=out_specs))
+
+
+# --- hierarchical path vs composed per-axis reference (bitwise) ---
+clear_plan_cache()
+comm = GZHierCommunicator.for_axes(
+    "node", "local", config=cfg, hw=HW_ASYM, topology=(N_NODES, L)
+)
+hplan = comm.plan((D,))
+assert not hplan.flat, f"asymmetric hw must go hierarchical: {hplan}"
+assert hplan.inter is not None and hplan.topology == (N_NODES, L)
+assert hplan.inter.eb == cfg.eb, (
+    "the inter stage is the ONLY lossy stage and must carry the whole "
+    f"budget undiluted (split_lossy): {hplan.inter.eb} != {cfg.eb}"
+)
+
+
+def hier_body(x):
+    r = comm.allreduce(x[0])
+    return r.value[None], r.overflow[None]
+
+
+def ref_body(x):
+    """The composed per-axis reference: same three stages, but the inter
+    stage goes through the ordinary SINGLE-AXIS wrapper on the resolved
+    inter sub-plan's concrete config — the pre-existing code path."""
+    x = x[0]
+    flat = x.reshape(-1).astype(jnp.float32)
+    padded, _ = _pad_to_chunks(flat, L)
+    shard = lax.psum_scatter(padded, "local", scatter_dimension=0, tiled=True) \
+        if L > 1 else padded
+    if N_NODES > 1:
+        shard = gz_allreduce(shard, "node", hplan.inter.as_config())
+    full = lax.all_gather(shard, "local", tiled=True) if L > 1 else shard
+    return full[: flat.shape[0]].reshape(x.shape).astype(x.dtype)[None]
+
+
+out, ovf = shmap(hier_body, (P(AX, None),), (P(AX, None), P(AX)))(base)
+out = np.asarray(out)
+assert not np.asarray(ovf).any(), "hier: spurious capacity overflow"
+ref = np.asarray(shmap(ref_body, (P(AX, None),), P(AX, None))(base))
+assert np.array_equal(out, ref), \
+    f"hier != composed per-axis reference (max diff {np.abs(out - ref).max()})"
+err = np.abs(out - exact_sum[None]).max()
+bound = cfg.eb * 1.05 + np.abs(exact_sum).max() * 1e-6
+assert err <= bound, f"hier: err {err} > {bound}"
+print(f"OK hier_{TOPOLOGY} bitwise == composed reference, err={err:.2e}")
+
+# wrapper parity: gz_allreduce_hier is the same communicator one-shot
+out_w = np.asarray(shmap(
+    lambda x: gz_allreduce_hier(x[0], "node", "local",
+                                cfg, return_info=False)[None],
+    (P(AX, None),), P(AX, None),
+)(base))
+# default hw is the flat fabric -> composite-axis path; just bound-check
+err_w = np.abs(out_w - exact_sum[None]).max()
+assert err_w <= bound, f"gz_allreduce_hier: err {err_w} > {bound}"
+print(f"OK gz_allreduce_hier wrapper err={err_w:.2e}")
+
+# --- flat fallback (no link asymmetry) bitwise == composite-axis run ---
+comm_flat = GZHierCommunicator.for_axes(
+    "node", "local", config=cfg, hw=HW_FLAT, topology=(N_NODES, L)
+)
+hplan_flat = comm_flat.plan((D,))
+assert hplan_flat.flat, f"flat fabric must resolve flat: {hplan_flat}"
+out_h = np.asarray(shmap(
+    lambda x: comm_flat.allreduce(x[0]).value[None],
+    (P(AX, None),), P(AX, None),
+)(base))
+out_f = np.asarray(shmap(
+    lambda x: gz_allreduce(x[0], AX, cfg)[None],
+    (P(AX, None),), P(AX, None),
+)(base))
+assert np.array_equal(out_h, out_f), \
+    "flat fallback != single-axis schedule over the composite axis"
+print(f"OK flat fallback bitwise == composite-axis gz_allreduce")
+
+# --- one trace-read communicator replans across reshaped meshes ---
+if N == 6:
+    comm_tr = GZHierCommunicator.for_axes("node", "local", config=cfg,
+                                          hw=HW_ASYM)  # topology from trace
+    outs = {}
+    for shape in ((2, 3), (3, 2)):
+        m = jax.make_mesh(shape, ("node", "local"))
+        f = shmap(lambda x: comm_tr.allreduce(x[0]).value[None],
+                  (P(AX, None),), P(AX, None), m)
+        outs[shape] = np.asarray(f(base))
+        err = np.abs(outs[shape] - exact_sum[None]).max()
+        assert err <= bound, (
+            f"{shape}: err {err} > {bound} — a stale plan from the other "
+            "topology would ship the wrong shard size"
+        )
+    topos = {k[3] for k in plan_cache_stats()["hier_keys"]}
+    assert {(2, 3), (3, 2)} <= topos, (
+        "2x3 and 3x2 must be DISTINCT plan-cache entries (full axis-size "
+        f"tuple key, not the rank product); cached topologies: {topos}"
+    )
+    print("OK 2x3 vs 3x2 replan: distinct plans, correct sums on both")
+
+# --- overflow is the global OR across both axes ---
+rough = rng.normal(0, 100.0, (N, D)).astype(np.float32)
+cfg_tiny = GZConfig(eb=1e-6, capacity_factor=0.02)
+comm_tiny = GZHierCommunicator.for_axes(
+    "node", "local", config=cfg_tiny, hw=HW_ASYM, topology=(N_NODES, L)
+)
+ovf = np.asarray(shmap(
+    lambda x: comm_tiny.allreduce(x[0]).overflow[None],
+    (P(AX, None),), P(AX),
+)(rough))
+assert ovf.all(), "hier overflow not OR-propagated to every rank"
+print("OK hier overflow propagated across node x local")
+
+# --- grad sync through the single two-level plan ---
+from repro.core.grad_sync import SyncConfig, _global_rms, dp_allreduce_grads
+
+grads = {
+    "w": rng.normal(0, 1e-3, (N, 64, 32)).astype(np.float32),
+    "b": rng.normal(0, 1e-3, (N, 32)).astype(np.float32),
+}
+exact = {k: v.sum(axis=0) for k, v in grads.items()}
+sync = SyncConfig(gz=GZConfig(eb=1e-5, algo="redoub", capacity_factor=1.2),
+                  relative_eb=True, chunk=1024)
+specs = {"w": P(AX, None, None), "b": P(AX, None)}
+
+
+def gbody(g):
+    g = jax.tree.map(lambda a: a[0], g)
+    out = dp_allreduce_grads(g, ("local", "node"), sync)  # fast axes first
+    return jax.tree.map(lambda a: a[None], out)
+
+
+outg = jax.tree.map(np.asarray, shmap(gbody, (specs,), specs)(grads))
+for k in grads:
+    rms = np.sqrt((exact[k] ** 2).mean())
+    err = np.abs(outg[k] - exact[k][None]).max()
+    assert err <= 3 * 1e-5 * max(rms, 1e-3) * N + 1e-7, (k, err, rms)
+    print(f"OK dp_allreduce hier {k} err={err:.3e}")
+
+# --- _global_rms: single multi-axis psum, numpy parity on every rank ---
+rms_out = np.asarray(shmap(
+    lambda x: _global_rms(x[0], AX)[None], (P(AX, None),), P(AX),
+)(base))
+want_rms = np.sqrt((base.astype(np.float64) ** 2).mean())
+assert np.allclose(rms_out, want_rms, rtol=1e-5), (rms_out, want_rms)
+assert np.all(rms_out == rms_out[0]), "RMS differs across ranks"
+print(f"OK _global_rms parity rms={want_rms:.3e}")
+
+print("ALL OK")

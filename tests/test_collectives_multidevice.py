@@ -13,6 +13,7 @@ import pytest
 
 CHILD = pathlib.Path(__file__).parent / "_mp_collectives_child.py"
 NONPOW2_CHILD = pathlib.Path(__file__).parent / "_mp_nonpow2_child.py"
+HIER_CHILD = pathlib.Path(__file__).parent / "_mp_hier_child.py"
 SRC = str(pathlib.Path(__file__).parent.parent / "src")
 
 
@@ -41,6 +42,22 @@ def test_nonpow2_collectives_on_12_devices():
     # streams through the 16-slot virtual rank space (padding held, never
     # wired).
     _run_child(NONPOW2_CHILD, GZ_CHILD_DEVICES="12")
+
+
+@pytest.mark.slow
+def test_hier_allreduce_2x3():
+    # ISSUE 6 acceptance: the two-level schedule on a non-power-of-two
+    # node x local mesh is bitwise the composed per-axis reference, the
+    # flat fallback is bitwise the composite-axis schedule, and one
+    # trace-read communicator replans across the 2x3 -> 3x2 reshape.
+    _run_child(HIER_CHILD, GZ_HIER_TOPOLOGY="2x3")
+
+
+@pytest.mark.slow
+def test_hier_allreduce_3x2():
+    # Same checks with the node/local extents swapped: 3 nodes of 2 GPUs
+    # resolve a different inter fan-out and shard size than 2 nodes of 3.
+    _run_child(HIER_CHILD, GZ_HIER_TOPOLOGY="3x2")
 
 
 @pytest.mark.slow

@@ -1,0 +1,87 @@
+"""Hypothesis properties for the two-level topology (ISSUE 6 satellite):
+over arbitrary ``(n_nodes, gpus_per_node)`` — non-power-of-two factors
+included — the hierarchical replay stays inside the error budget, and
+with no link asymmetry the planner resolves FLAT with the sub-plan equal
+to the single-axis plan over the rank product (the bitwise-equality
+guarantee: the execute layer then runs the pre-existing composite-axis
+code path, exercised on real devices in tests/_mp_hier_child.py).
+
+Kept in its own module because ``pytest.importorskip`` at module scope
+skips the whole file — the deterministic mirrors live in
+tests/test_hier.py and run even without hypothesis.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e .[dev])"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import cost_model as cm  # noqa: E402
+from repro.core import simulator  # noqa: E402
+from repro.core.collectives import GZConfig  # noqa: E402
+from repro.core.comm import _resolve_plan, _resolve_hier_plan  # noqa: E402
+
+TOPOLOGIES = st.one_of(
+    st.sampled_from([(3, 2), (2, 3), (3, 4)]),  # the ISSUE-named factors
+    st.tuples(st.integers(1, 4), st.integers(1, 4)),
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    topology=TOPOLOGIES,
+    d=st.sampled_from([257, 1024, 1537]),  # off-block, whole-block, ragged
+    inter_algo=st.sampled_from(["redoub", "ring"]),
+    seed=st.integers(0, 1000),
+)
+def test_property_hier_error_within_budget(topology, d, inter_algo, seed):
+    """For ANY node x local factorization the end-to-end hierarchical
+    error obeys the single-axis bound of its inter stage: the intra
+    reduce-scatter/allgather are exact f32, and ``split_lossy`` hands the
+    lone lossy stage the WHOLE budget."""
+    n_nodes, L = topology
+    rng = np.random.default_rng(seed)
+    xs = [np.cumsum(rng.normal(0, 0.01, d)).astype(np.float32)
+          for _ in range(n_nodes * L)]
+    eb = 1e-3
+    cfg = GZConfig(eb=eb, capacity_factor=1.3, worst_case_budget=True)
+    outs = simulator.sim_allreduce_hier(xs, topology, cfg,
+                                        inter_algo=inter_algo)
+    exact = np.sum(xs, axis=0, dtype=np.float32)
+    slack = max(np.abs(exact).max(), 1.0) * 1e-6
+    for o in outs:
+        assert np.abs(o - exact).max() <= eb + slack
+    for node in range(n_nodes):  # intra allgather is an exact copy
+        for j in range(1, L):
+            assert np.array_equal(outs[node * L], outs[node * L + j])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    topology=st.tuples(st.integers(1, 6), st.integers(1, 6)).filter(
+        lambda t: t[0] * t[1] >= 2
+    ),
+    n_elems=st.sampled_from([4096, 1 << 20]),
+)
+def test_property_no_asymmetry_resolves_flat(topology, n_elems):
+    """intra == inter (a flat fabric) must resolve ``flat=True`` for
+    EVERY topology, with the flat sub-plan IDENTICAL (same memoized
+    object) to the ordinary single-axis plan over the rank product — so
+    the composite-axis execution is bitwise the pre-hierarchy path."""
+    knobs = dict(
+        policy="auto", requested_algo=None, requested_chunks=0,
+        capacity_factor=0.6, worst_case_budget=True, fused=True,
+        fused_hop=True, ratio=20.0, hw=cm.TPU_V5E,
+    )
+    hplan = _resolve_hier_plan(
+        "allreduce", n_elems, "float32", topology, 1e-4, **knobs
+    )
+    assert hplan.flat and hplan.inter is None
+    flat = _resolve_plan(
+        "allreduce", n_elems, "float32", topology[0] * topology[1], 1e-4,
+        **knobs,
+    )
+    assert hplan.flat_plan is flat
+    assert hplan.inter_wire_bytes == flat.wire_bytes
