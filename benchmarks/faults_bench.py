@@ -1,0 +1,109 @@
+"""Degradation-path cost benchmark (DESIGN.md §9).
+
+For each (op, axis size) this resolves the SAME frozen plan production
+resolves — with ``on_overflow="fallback"`` so the plan carries its
+lossless degradation target — and records the STATIC quantities that
+price a degraded call:
+
+  * ``compressed_wire_bytes``  — the provisioned compressed schedule wire
+    (what every healthy call ships);
+  * ``fallback_wire_bytes``    — the raw f32 payload the lossless
+    re-execute moves (compression ratio forfeited);
+  * ``wire_overhead``          — fallback / compressed wire: the byte
+    multiple a degraded call ships on top of the compressed streams (the
+    overflow is only known once the streams have been exchanged, so a
+    degraded call pays both);
+  * ``t_fallback_us``          — ``cost_model.fallback_time`` on the
+    calibrated A100/Slingshot point.
+
+For allreduce — the only op whose COMPRESSED schedule the cost model
+prices (the same functions the policies rank) — it additionally records
+``t_compressed_us``, ``degraded_call_overhead`` (t_fallback /
+t_compressed) and ``expected_us_at_p1e-3``
+(``cost_model.expected_collective_time`` at a 0.1% degradation rate):
+the numbers that show a rare fallback costs ~nothing while a hot one
+forfeits the compression win.
+
+All static plan/model quantities — no wall-clock — so the committed
+BENCH_faults.json baseline is compared EXACTLY by
+``regression_check.check_faults_overhead`` and any drift is fatal: a
+planner change that silently inflates the fallback (or prices it into
+oblivion) cannot hide inside timing noise.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.core import comm
+from repro.core import cost_model as cm
+
+HW = cm.A100_SLINGSHOT
+RATIO = 20.0
+D_MB = 64  # per-rank payload: gradient-sync-sized
+OPS = ("allreduce", "reduce_scatter", "allgather", "scatter", "broadcast")
+NS = (4, 8, 16)
+P_DEGRADED = 1e-3
+BASELINE_PATH = pathlib.Path(__file__).parent / "BENCH_faults.json"
+
+
+def plan_record(op: str, n_ranks: int, n_elems: int) -> dict:
+    plan = comm._resolve_plan(
+        op, n_elems, "float32", n_ranks, 1e-4,
+        policy="auto", requested_algo=None, requested_chunks=0,
+        capacity_factor=0.6, worst_case_budget=True, fused=True,
+        fused_hop=True, ratio=RATIO, hw=HW,
+        on_overflow="fallback", verify_streams=False,
+    )
+    fb = plan.fallback
+    assert fb is not None and fb.op == op, plan
+    t_fb = fb.t_model
+    rec = {
+        "algo": plan.algo,
+        "compressed_wire_bytes": plan.wire_bytes,
+        "fallback_wire_bytes": fb.wire_bytes,
+        "fallback_kind": fb.kind,
+        "wire_overhead": round(fb.wire_bytes / plan.wire_bytes, 4),
+        "t_fallback_us": round(t_fb * 1e6, 2),
+    }
+    if op == "allreduce":
+        t_comp = comm._allreduce_model_time(
+            plan.algo, plan.nbytes, n_ranks, RATIO, HW,
+            plan.pipeline_chunks, True,
+        )
+        rec["t_compressed_us"] = round(t_comp * 1e6, 2)
+        rec["degraded_call_overhead"] = round(t_fb / t_comp, 4)
+        rec["expected_us_at_p1e-3"] = round(
+            cm.expected_collective_time(t_comp, t_fb, P_DEGRADED) * 1e6, 2
+        )
+    return rec
+
+
+def run(csv_rows: list, record_baseline: bool = True) -> dict:
+    n_elems = int(D_MB * 1e6 / 4)
+    record = {}
+    for op in OPS:
+        for n in NS:
+            rec = plan_record(op, n, n_elems)
+            # The fallback must genuinely be the uncompressed payload —
+            # a "lossless fallback" that still quotes compressed bytes
+            # would be the silent-corruption hazard wearing a new hat.
+            assert rec["fallback_wire_bytes"] == n_elems * 4, (op, n, rec)
+            assert rec["t_fallback_us"] > 0.0, (op, n, rec)
+            key = f"{op}@{n}"
+            record[key] = rec
+            derived = (f"wire_overhead={rec['wire_overhead']}x,"
+                       f"kind={rec['fallback_kind']}")
+            if "expected_us_at_p1e-3" in rec:
+                derived += (f",degraded_overhead="
+                            f"{rec['degraded_call_overhead']}x,"
+                            f"expected_us_p{P_DEGRADED}="
+                            f"{rec['expected_us_at_p1e-3']}")
+            csv_rows.append(
+                (f"faults_{op}_{D_MB}MB_n{n}", rec["t_fallback_us"], derived)
+            )
+    if record_baseline:
+        BASELINE_PATH.write_text(
+            json.dumps({"faults": record}, indent=1, sort_keys=True) + "\n"
+        )
+    return record

@@ -124,6 +124,47 @@ def check_hier_wire(here: pathlib.Path) -> None:
           f"topologies {sorted(base)}")
 
 
+def check_faults_overhead(here: pathlib.Path) -> None:
+    """Degradation-path pricing of the resolved plans vs the committed
+    BENCH_faults.json.
+
+    Every field is a STATIC plan/model quantity (provisioned wire bytes
+    of the compressed schedule and its lossless fallback, modeled
+    fallback time — no wall-clock), so the comparison is EXACT and any
+    drift is fatal regardless of ``--strict``: a planner change that
+    silently inflates the fallback schedule, or stops provisioning the
+    raw payload it must be able to ship losslessly, is a structural
+    regression on the ISSUE 7 degradation contract and must not hide
+    inside a timing threshold.
+    """
+    from benchmarks import faults_bench
+
+    base_path = here / "BENCH_faults.json"
+    if not base_path.exists():
+        # A missing baseline must not read as "no regression".
+        print(f"::error::faults overhead baseline missing: {base_path}")
+        sys.exit(1)
+    base = json.loads(base_path.read_text())["faults"]
+    now = faults_bench.run([], record_baseline=False)
+    bad = []
+    for key, rec in sorted(base.items()):
+        cur = now.get(key)
+        if cur is None:
+            bad.append(f"{key}: baseline row missing from current run")
+            continue
+        for field, want in sorted(rec.items()):
+            got = cur.get(field)
+            if got != want:
+                bad.append(f"{key}.{field}: {want} -> {got} "
+                           f"(re-record the baseline if intended)")
+    if bad:
+        for msg in bad:
+            print(f"::error::faults overhead regression: {msg}")
+        sys.exit(1)
+    print(f"faults overhead: fallback wire/pricing match baseline for "
+          f"{len(base)} (op, axis-size) points")
+
+
 def _ratios(record):
     """{size: {fused metric: fused_us / reference_us}} for a benchmark
     record shaped {size: {"fused": {..._us}, "unfused"|"two_kernel": {...}}}.
@@ -174,6 +215,7 @@ def main() -> None:
     check_step_count_consistency()
     check_scatter_wire(here)
     check_hier_wire(here)
+    check_faults_overhead(here)
 
     regressions = []
 

@@ -12,6 +12,7 @@ from benchmarks import (
     allreduce_bench,
     breakdown,
     compressor_char,
+    faults_bench,
     hier_bench,
     hop_bench,
     image_stacking,
@@ -30,6 +31,7 @@ MODULES = [
     ("table2_fig13_image_stacking", image_stacking),
     ("beyond_moe_a2a_ablation", moe_a2a_ablation),
     ("issue2_fused_hop", hop_bench),
+    ("issue7_faults", faults_bench),
 ]
 
 

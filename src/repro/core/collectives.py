@@ -65,8 +65,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import bitpack, cost_model, error_budget
-from repro.core.compressed import Compressed, capacity_words_for
+from repro.core import bitpack, cost_model, error_budget, faults
+from repro.core.compressed import (
+    Compressed, capacity_words_for, validate_capacity_factor,
+)
 from repro.core.compressor import DEFAULT, ErrorBoundedLorenzo
 from repro.kernels import ops
 from repro.kernels.ref import bitwidth_of as _ref_bitwidth
@@ -115,6 +117,19 @@ class GZConfig:
     either way; only the kernel count and the cost model's pipeline-depth
     planning differ (``t_hop_fused`` sees one ``cmp_overhead_us``, so
     "auto" picks deeper pipelines when the fused hop is on).
+
+    ``on_overflow`` is the degradation policy (DESIGN.md §9): "flag"
+    only reports the global-OR flags in ``CollectiveResult`` (today's
+    behaviour); "fallback" re-executes the collective through the
+    uncompressed lossless schedule inside the trace (``lax.cond``) when
+    any stream overflowed or any input held NaN/Inf, so the result is
+    exact whenever compression failed; "raise" raises from a debug
+    callback on the host (debugging aid — aborts the computation).
+
+    ``verify_streams`` ships a per-hop XOR checksum alongside every
+    compressed ppermute and treats a mismatch exactly like overflow
+    (the stream is unusable either way) — detects in-flight wire
+    corruption at the cost of one extra scalar ppermute per hop.
     """
 
     eb: float = 1e-4
@@ -124,6 +139,8 @@ class GZConfig:
     pipeline_chunks: int = 1
     fused: bool = True
     fused_hop: bool = True
+    on_overflow: str = "flag"  # flag | fallback | raise
+    verify_streams: bool = False
 
     def __post_init__(self):
         # Fail at construction time with an actionable message, not via a
@@ -135,6 +152,15 @@ class GZConfig:
                 "(the chunked double-buffered schedules split ring chunks "
                 f"and tree slabs in half repeatedly); got "
                 f"{self.pipeline_chunks!r}"
+            )
+        validate_capacity_factor(
+            self.capacity_factor, knob="GZConfig.capacity_factor"
+        )
+        if self.on_overflow not in ("flag", "fallback", "raise"):
+            raise ValueError(
+                "GZConfig.on_overflow must be one of 'flag' (report only), "
+                "'fallback' (in-trace lossless re-execute) or 'raise' "
+                f"(host-side error); got {self.on_overflow!r}"
             )
 
     def compressor(self) -> ErrorBoundedLorenzo:
@@ -179,8 +205,154 @@ def _or_across(ovf, axis_name):
     return lax.psum(ovf.astype(jnp.int32), axis_name) > 0
 
 
+def _axis_rank(axis_name):
+    """Flattened rank over a (possibly composite) axis, major-to-minor —
+    matches the rank order ppermute sees over a tuple axis name."""
+    if isinstance(axis_name, (tuple, list)):
+        r = jnp.zeros((), jnp.int32)
+        for ax in axis_name:
+            r = r * _axis_size(ax) + lax.axis_index(ax)
+        return r
+    return lax.axis_index(axis_name)
+
+
+def _flags_across(ovf, nonfinite, axis_name):
+    """Global-OR both health bits in ONE psum (stacked int32 pair), so the
+    psum count per collective is unchanged vs the old single-flag
+    ``_or_across``.  Both results are replicated (psum-derived), hence
+    safe as ``lax.cond`` predicates."""
+    pair = jnp.stack(
+        [ovf.astype(jnp.int32), nonfinite.astype(jnp.int32)]
+    )
+    both = lax.psum(pair, axis_name) > 0
+    return both[0], both[1]
+
+
+def _nonfinite_local(x) -> jnp.ndarray:
+    """Per-rank NaN/Inf presence (False scalar for non-float payloads)."""
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return jnp.zeros((), jnp.bool_)
+    return jnp.any(~jnp.isfinite(x))
+
+
+def _sanitize(x):
+    """Replace NaN/Inf with 0 (identity on finite data, so an
+    overflow-only fallback stays bitwise equal to the plain lossless
+    collective of the original input)."""
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return x
+    return jnp.where(jnp.isfinite(x), x, jnp.zeros((), x.dtype))
+
+
+def _tree_checksum(tree) -> jnp.ndarray:
+    """XOR-fold every leaf's bits into one uint32.
+
+    All wire leaves are 32-bit (packed uint32, bitwidth/anchor/nwords
+    int32, eb f32), so a same-width bitcast view is exact; any other
+    width falls back to a value cast (still a valid checksum).  A single
+    bit flip anywhere in the payload flips exactly one checksum bit.
+    """
+    total = jnp.zeros((), jnp.uint32)
+    for leaf in jax.tree.leaves(tree):
+        if leaf.dtype.itemsize == 4:
+            words = lax.bitcast_convert_type(leaf, jnp.uint32)
+        else:
+            words = leaf.astype(jnp.uint32)
+        total = total ^ lax.reduce(
+            words.reshape(-1), jnp.uint32(0), lax.bitwise_xor, (0,)
+        )
+    return total
+
+
+def _ppermute_guarded(tree, axis_name, perm, guard):
+    """``_ppermute`` + optional end-to-end stream verification.
+
+    The fault-injection wire hook (core/faults.py) applies to the
+    received payload unconditionally (identity when no fault is
+    installed).  With ``guard`` a whole-buffer XOR checksum of the SENT
+    tree travels on the same perm as a separate scalar ppermute and is
+    compared against a recomputed checksum of the received tree; ranks
+    unaddressed by ``perm`` receive zero streams AND a zero checksum, so
+    they can never false-positive.  Returns ``(recv, bad)``.
+    """
+    recv = _ppermute(tree, axis_name, perm)
+    recv = faults.maybe_corrupt_wire(recv, axis_name)
+    if not guard:
+        return recv, jnp.zeros((), jnp.bool_)
+    chk_sent = lax.ppermute(_tree_checksum(tree), axis_name, perm)
+    return recv, chk_sent != _tree_checksum(recv)
+
+
 def _is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
+
+
+# ---------------------------------------------------------------------------
+# Lossless fallback schedules (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+#
+# Every op has an uncompressed twin over the same axis/topology.  The
+# fallback sanitizes NaN/Inf to 0 first (identity on finite data), so an
+# overflow-only degradation recovers the EXACT lossless result and a
+# poisoned input recovers the lossless result of the sanitized input.
+# The reduction ops lean on XLA's native collectives; scatter/broadcast
+# re-walk the SAME trimmed-slab schedule tables with raw f32 payloads
+# (the fault-injection wire hook skips non-uint32 trees, so a lossless
+# re-execute is immune to the packed-word bit-flip injector).
+
+
+def _lossless_scatter(x_full, axis_name, cfg: GZConfig, n):
+    r = lax.axis_index(axis_name)
+    chunk_n = x_full.shape[0] // n
+    n_virt = 1 << cost_model.steps_for("binomial", n)
+    chunks = _sanitize(x_full.astype(jnp.float32)).reshape(n, chunk_n)
+    held = jnp.zeros((n_virt, chunk_n), jnp.float32).at[:n].set(chunks)
+    held, _ = _scatter_tree_trimmed(held, axis_name, r, n, n_virt, cfg)
+    return jnp.take(held, r, axis=0).astype(x_full.dtype)
+
+
+def _lossless_broadcast(x, axis_name, cfg: GZConfig, n):
+    r = lax.axis_index(axis_name)
+    buf = _sanitize(x.reshape(-1).astype(jnp.float32))
+    for span, full_senders, trim in cost_model.binomial_slab_table(n):
+        perm = [(i, i + span) for i in full_senders]
+        if trim is not None:
+            perm.append((trim[0], trim[1]))
+        recv = lax.ppermute(buf, axis_name, perm)
+        has = (r % (span * 2)) == span
+        buf = jnp.where(has, recv, buf)
+    return buf.reshape(x.shape).astype(x.dtype)
+
+
+def _execute_lossless(op, x, axis_name, cfg: GZConfig, *, root: int = 0):
+    """Uncompressed re-execute of ``op`` over the same axis (exact)."""
+    n = _axis_size(axis_name)
+    single = axis_name if not isinstance(axis_name, (tuple, list)) \
+        else (axis_name if len(axis_name) > 1 else axis_name[0])
+    if op == "allreduce":
+        return lax.psum(
+            _sanitize(x.astype(jnp.float32)), axis_name
+        ).astype(x.dtype)
+    if op == "reduce_scatter":
+        out = lax.psum_scatter(
+            _sanitize(x.astype(jnp.float32)), single,
+            scatter_dimension=0, tiled=True,
+        )
+        return out.astype(x.dtype)
+    if op == "allgather":
+        v = _sanitize(x)
+        if x.ndim == 0:
+            return lax.all_gather(v[None], single, tiled=True)
+        return lax.all_gather(v, single, tiled=True)
+    if op == "scatter":
+        return _lossless_scatter(x, axis_name, cfg, n)
+    if op == "broadcast":
+        return _lossless_broadcast(x, axis_name, cfg, n)
+    if op == "all_to_all":
+        return lax.all_to_all(
+            _sanitize(x), single, split_axis=0, concat_axis=0, tiled=True
+        )
+    raise ValueError(f"no lossless fallback for op {op!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -258,19 +430,25 @@ def _allreduce_redoub(x, axis_name, cfg: GZConfig):
     acc = x
     overflow = jnp.zeros((), jnp.bool_)
 
+    guard = cfg.verify_streams
+
     if cfg.fused_hop:
         c = comp.compress(acc, eb_stage)
         # The initial stream travels on the pre-hop (fold sources) on a
         # remainder axis, on step 0 (everyone) otherwise.
         overflow |= c.overflowed() & (is_fold_src if rem else True)
         if rem:
-            c_recv = _ppermute(c, axis_name, pre_perm)
+            c_recv, bad = _ppermute_guarded(c, axis_name, pre_perm, guard)
+            overflow |= bad
             c, acc = comp.decompress_reduce_compress(
                 c_recv, acc, eb_stage, return_updated=True
             )
             overflow |= c.overflowed() & is_participant
         for k in range(steps):
-            c_recv = _ppermute(c, axis_name, step_perms[k])
+            c_recv, bad = _ppermute_guarded(
+                c, axis_name, step_perms[k], guard
+            )
+            overflow |= bad
             if k < steps - 1:
                 c, acc = comp.decompress_reduce_compress(
                     c_recv, acc, eb_stage, return_updated=True
@@ -286,24 +464,28 @@ def _allreduce_redoub(x, axis_name, cfg: GZConfig):
             else:  # last hop: emit the plain f32 accumulator
                 acc = comp.decompress_reduce(c_recv, acc)
         if rem:
-            c_back = _ppermute(c, axis_name, post_perm)
+            c_back, bad = _ppermute_guarded(c, axis_name, post_perm, guard)
+            overflow |= bad
             acc = jnp.where(is_fold_src, comp.decompress(c_back), acc)
         return acc, overflow
 
     if rem:
         c = comp.compress(acc, eb_stage)
         overflow |= c.overflowed() & is_fold_src
-        c_recv = _ppermute(c, axis_name, pre_perm)
+        c_recv, bad = _ppermute_guarded(c, axis_name, pre_perm, guard)
+        overflow |= bad
         acc = comp.decompress_reduce(c_recv, acc)
     for k in range(steps):
         c = comp.compress(acc, eb_stage)
         overflow |= c.overflowed() & is_participant
-        c_recv = _ppermute(c, axis_name, step_perms[k])
+        c_recv, bad = _ppermute_guarded(c, axis_name, step_perms[k], guard)
+        overflow |= bad
         acc = comp.decompress_reduce(c_recv, acc)
     if rem:
         c = comp.compress(acc, eb_stage)
         overflow |= c.overflowed() & is_fold_dst
-        c_back = _ppermute(c, axis_name, post_perm)
+        c_back, bad = _ppermute_guarded(c, axis_name, post_perm, guard)
+        overflow |= bad
         acc = jnp.where(is_fold_src, comp.decompress(c_back), acc)
     return acc, overflow
 
@@ -345,21 +527,24 @@ def _reduce_scatter_ring(x, axis_name, cfg: GZConfig, eb_stage, *, owner_offset=
     overflow = jnp.zeros((), jnp.bool_)
     t = owner_offset
 
+    guard = cfg.verify_streams
+
     if cfg.fused_hop:
         c = comp.compress(_chunk(acc, (r + t) % n, chunk_n), eb_stage)
         overflow |= c.overflowed()
 
         def body(s, carry):
             c, overflow = carry
-            c_recv = _ppermute(c, axis_name, perm)
+            c_recv, bad = _ppermute_guarded(c, axis_name, perm, guard)
             recv_idx = (r - s - 1 + t) % n
             c_next, _ = comp.decompress_reduce_compress(
                 c_recv, _chunk(acc, recv_idx, chunk_n), eb_stage
             )
-            return c_next, overflow | c_next.overflowed()
+            return c_next, overflow | bad | c_next.overflowed()
 
         c, overflow = lax.fori_loop(0, n - 2, body, (c, overflow))
-        c_recv = _ppermute(c, axis_name, perm)
+        c_recv, bad = _ppermute_guarded(c, axis_name, perm, guard)
+        overflow |= bad
         recv_idx = (r - (n - 2) - 1 + t) % n
         updated = comp.decompress_reduce(c_recv, _chunk(acc, recv_idx, chunk_n))
         return _set_chunk(acc, updated, recv_idx, chunk_n), chunk_n, overflow
@@ -370,7 +555,8 @@ def _reduce_scatter_ring(x, axis_name, cfg: GZConfig, eb_stage, *, owner_offset=
         recv_idx = (r - s - 1 + t) % n
         c = comp.compress(_chunk(acc, send_idx, chunk_n), eb_stage)
         overflow |= c.overflowed()
-        c_recv = _ppermute(c, axis_name, perm)
+        c_recv, bad = _ppermute_guarded(c, axis_name, perm, guard)
+        overflow |= bad
         updated = comp.decompress_reduce(c_recv, _chunk(acc, recv_idx, chunk_n))
         return _set_chunk(acc, updated, recv_idx, chunk_n), overflow
 
@@ -483,6 +669,8 @@ def _reduce_scatter_ring_pipelined(x, axis_name, cfg: GZConfig, eb_stage, *,
     t0 = owner_offset
     T = (n - 1) * p_chunks
 
+    guard = cfg.verify_streams
+
     if cfg.fused_hop:
         # Pipeline fill: step 0's send chunk, compressed as P pieces.
         send0 = (r + t0) % n
@@ -493,15 +681,18 @@ def _reduce_scatter_ring_pipelined(x, axis_name, cfg: GZConfig, eb_stage, *,
             overflow |= c.overflowed()
             pend.append(c)
         pend = _stack_trees(pend)
-        c_fly = _ppermute(_index_tree(pend, 0), axis_name, perm)
+        c_fly, bad0 = _ppermute_guarded(
+            _index_tree(pend, 0), axis_name, perm, guard
+        )
+        overflow |= bad0
 
         def body(u, carry):
             pend, c_fly, overflow = carry
             # Wire the NEXT hop's stream while this hop's fused kernel
             # runs: pend[(u+1) % P] was produced by hop u+1-P (or the
             # fill), so the ppermute has no dependency on this hop.
-            c_fly_next = _ppermute(
-                _index_tree(pend, (u + 1) % p_chunks), axis_name, perm
+            c_fly_next, bad = _ppermute_guarded(
+                _index_tree(pend, (u + 1) % p_chunks), axis_name, perm, guard
             )
             s, p = u // p_chunks, u % p_chunks
             recv_idx = (r - s - 1 + t0) % n
@@ -509,7 +700,7 @@ def _reduce_scatter_ring_pipelined(x, axis_name, cfg: GZConfig, eb_stage, *,
                 c_fly, _piece(acc, recv_idx, p, chunk_n, piece_n), eb_stage
             )
             pend = _update_tree(pend, c_next, p)
-            return pend, c_fly_next, overflow | c_next.overflowed()
+            return pend, c_fly_next, overflow | bad | c_next.overflowed()
 
         # Fused hops cover steps 0..n-3; the last step drains below.
         pend, c_fly, overflow = lax.fori_loop(
@@ -518,9 +709,10 @@ def _reduce_scatter_ring_pipelined(x, axis_name, cfg: GZConfig, eb_stage, *,
         recv_last = (r - (n - 2) - 1 + t0) % n
         for p in range(p_chunks):
             if p + 1 < p_chunks:
-                c_fly_next = _ppermute(
-                    _index_tree(pend, p + 1), axis_name, perm
+                c_fly_next, bad = _ppermute_guarded(
+                    _index_tree(pend, p + 1), axis_name, perm, guard
                 )
+                overflow |= bad
             updated = comp.decompress_reduce(
                 c_fly, _piece(acc, recv_last, p, chunk_n, piece_n)
             )
@@ -546,7 +738,8 @@ def _reduce_scatter_ring_pipelined(x, axis_name, cfg: GZConfig, eb_stage, *,
         # so this op is independent of the ppermute below (the overlap).
         c_next = send_piece(acc, t + 1)
         overflow |= c_next.overflowed()
-        c_recv = _ppermute(c_in, axis_name, perm)
+        c_recv, bad = _ppermute_guarded(c_in, axis_name, perm, guard)
+        overflow |= bad
         s, p = t // p_chunks, t % p_chunks
         recv_idx = (r - s - 1 + t0) % n
         updated = comp.decompress_reduce(
@@ -557,7 +750,8 @@ def _reduce_scatter_ring_pipelined(x, axis_name, cfg: GZConfig, eb_stage, *,
 
     acc, c_last, overflow = lax.fori_loop(0, T - 1, body, (acc, c0, overflow))
     # Pipeline drain: the final piece's hop.
-    c_recv = _ppermute(c_last, axis_name, perm)
+    c_recv, bad = _ppermute_guarded(c_last, axis_name, perm, guard)
+    overflow |= bad
     recv_idx = (r - (n - 2) - 1 + t0) % n
     updated = comp.decompress_reduce(
         c_recv, _piece(acc, recv_idx, p_chunks - 1, chunk_n, piece_n)
@@ -594,21 +788,25 @@ def _forward_pieces_ring(buf, pieces, axis_name, cfg: GZConfig, recv_idx_fn,
     n = _axis_size(axis_name)
     comp = cfg.compressor()
     perm = _ring_perm(n)
+    guard = cfg.verify_streams
 
     def body(s, carry):
-        buf, pieces = carry
+        buf, pieces, bad = carry
         recv_idx = recv_idx_fn(s)
         new_pieces = []
         for p, c_p in enumerate(pieces):
-            c_new = _ppermute(c_p, axis_name, perm)
+            c_new, b = _ppermute_guarded(c_p, axis_name, perm, guard)
+            bad |= b
             buf = _set_piece(
                 buf, comp.decompress(c_new), recv_idx, p, chunk_n, piece_n
             )
             new_pieces.append(c_new)
-        return buf, tuple(new_pieces)
+        return buf, tuple(new_pieces), bad
 
-    buf, _ = lax.fori_loop(0, n - 1, body, (buf, pieces))
-    return buf
+    buf, _, bad = lax.fori_loop(
+        0, n - 1, body, (buf, pieces, jnp.zeros((), jnp.bool_))
+    )
+    return buf, bad
 
 
 def _allgather_forward_pipelined(acc, axis_name, cfg: GZConfig, eb_stage,
@@ -619,12 +817,12 @@ def _allgather_forward_pipelined(acc, axis_name, cfg: GZConfig, eb_stage,
     acc, pieces, overflow = _compress_own_pieces(
         acc, (r + 1) % n, eb_stage, cfg, chunk_n, piece_n, overflow
     )
-    acc = _forward_pieces_ring(
+    acc, bad = _forward_pieces_ring(
         acc, pieces, axis_name, cfg,
         lambda s: (r - s) % n,  # chunk owned by rank (r - 1 - s)
         chunk_n, piece_n,
     )
-    return acc, overflow
+    return acc, overflow | bad
 
 
 def _allreduce_ring(x, axis_name, cfg: GZConfig):
@@ -662,16 +860,19 @@ def _allreduce_ring(x, axis_name, cfg: GZConfig):
     overflow |= c_own.overflowed()
     acc = _set_chunk(acc, comp.decompress(c_own), own_idx, chunk_n)
     perm = _ring_perm(n)
+    guard = cfg.verify_streams
 
     def body(s, carry):
-        acc, c_cur = carry
-        c_new = _ppermute(c_cur, axis_name, perm)
+        acc, c_cur, bad = carry
+        c_new, b = _ppermute_guarded(c_cur, axis_name, perm, guard)
         recv_idx = (r - s) % n  # chunk owned by rank (r - 1 - s)
         acc_new = _set_chunk(acc, comp.decompress(c_new), recv_idx, chunk_n)
-        return acc_new, c_new
+        return acc_new, c_new, bad | b
 
-    acc, _ = lax.fori_loop(0, n - 1, body, (acc, c_own))
-    return acc[: x.shape[0]], overflow
+    acc, _, bad = lax.fori_loop(
+        0, n - 1, body, (acc, c_own, jnp.zeros((), jnp.bool_))
+    )
+    return acc[: x.shape[0]], overflow | bad
 
 
 def _allreduce_intring(x, axis_name, cfg: GZConfig):
@@ -739,6 +940,7 @@ def _allreduce_intring(x, axis_name, cfg: GZConfig):
         return ((u >> 1).astype(jnp.int32) ^ (-(u & 1).astype(jnp.int32)), aa)
 
     overflow = jnp.zeros((), jnp.bool_)
+    guard = cfg.verify_streams
 
     def rs_body(s, carry):
         state, overflow = carry
@@ -746,9 +948,9 @@ def _allreduce_intring(x, axis_name, cfg: GZConfig):
         recv_idx = (r - s - 1) % n
         wire, nwords = pack_codes(getc(state, send_idx))
         overflow |= nwords > cap
-        wire = _ppermute(wire, axis_name, perm)
+        wire, bad = _ppermute_guarded(wire, axis_name, perm, guard)
         state = setc(state, addc(getc(state, recv_idx), unpack_codes(wire)), recv_idx)
-        return state, overflow
+        return state, overflow | bad
 
     state, overflow = lax.fori_loop(0, n - 1, rs_body, (state, overflow))
     own_idx = (r + 1) % n
@@ -756,13 +958,16 @@ def _allreduce_intring(x, axis_name, cfg: GZConfig):
     overflow |= nwords > cap
 
     def ag_body(s, carry):
-        state, cur = carry
-        nxt = _ppermute(cur, axis_name, perm)
+        state, cur, bad = carry
+        nxt, b = _ppermute_guarded(cur, axis_name, perm, guard)
         recv_idx = (r - s) % n
         state = setc(state, unpack_codes(nxt), recv_idx)
-        return state, nxt
+        return state, nxt, bad | b
 
-    state, _ = lax.fori_loop(0, n - 1, ag_body, (state, wire))
+    state, _, bad = lax.fori_loop(
+        0, n - 1, ag_body, (state, wire, jnp.zeros((), jnp.bool_))
+    )
+    overflow |= bad
     d, anchor = state
     q = anchor[:, None] + jnp.cumsum(d, axis=1)
     out = (q.astype(jnp.float32) * (2.0 * eb)).reshape(-1)
@@ -970,11 +1175,12 @@ def _execute_allgather(x, axis_name, cfg: GZConfig):
         out, pieces, ovf = _compress_own_pieces(
             padded, r, cfg.eb, cfg, chunk_n, piece_n, jnp.zeros((), jnp.bool_)
         )
-        out = _forward_pieces_ring(
+        out, bad = _forward_pieces_ring(
             out, pieces, axis_name, cfg,
             lambda s: (r - s - 1) % n,  # piece sent by rank (r - 1 - s)
             chunk_n, piece_n,
         )
+        ovf |= bad
         out = out.reshape(n, chunk_n)[:, :n_orig].reshape(-1)
         out = out.reshape((n * x.shape[0],) + x.shape[1:]) if x.ndim else out
         return out.astype(dtype), ovf
@@ -985,17 +1191,20 @@ def _execute_allgather(x, axis_name, cfg: GZConfig):
     ovf = c_own.overflowed()
     out = _set_chunk(out, comp.decompress(c_own), r, chunk_n)
     perm = _ring_perm(n)
+    guard = cfg.verify_streams
 
     def body(s, carry):
-        out, c_cur = carry
-        c_new = _ppermute(c_cur, axis_name, perm)
+        out, c_cur, bad = carry
+        c_new, b = _ppermute_guarded(c_cur, axis_name, perm, guard)
         src = (r - s - 1) % n
         out = _set_chunk(out, comp.decompress(c_new), src, chunk_n)
-        return out, c_new
+        return out, c_new, bad | b
 
-    out, _ = lax.fori_loop(0, n - 1, body, (out, c_own))
+    out, _, bad = lax.fori_loop(
+        0, n - 1, body, (out, c_own, jnp.zeros((), jnp.bool_))
+    )
     out = out.reshape((n * x.shape[0],) + x.shape[1:]) if x.ndim else out
-    return out.astype(dtype), ovf
+    return out.astype(dtype), ovf | bad
 
 
 def gz_allgather(
@@ -1058,10 +1267,14 @@ def _scatter_held_buffers(x_full, n, cfg: GZConfig):
     return held, rows, chunk_n, n_virt, ovf
 
 
-def _slab_exchange(held, axis_name, r, perm, start, slab, n_virt, is_recv):
+def _slab_exchange(held, axis_name, r, perm, start, slab, n_virt, is_recv,
+                   guard=False):
     """Ship a ``slab``-chunk window of the held buffers along ``perm`` and
     install it at the receiver's own rank index (everyone else keeps its
-    buffer).  One static ppermute shape per call."""
+    buffer).  One static ppermute shape per call.  Returns
+    ``(held, bad)`` — ``bad`` is the receive-side stream-verification
+    flag (always False when ``guard`` is off), masked to actual
+    receivers."""
     piece = jax.tree.map(
         lambda h: lax.dynamic_slice(
             h, (start % n_virt,) + (0,) * (h.ndim - 1),
@@ -1069,7 +1282,7 @@ def _slab_exchange(held, axis_name, r, perm, start, slab, n_virt, is_recv):
         ),
         held,
     )
-    recv = _ppermute(piece, axis_name, perm)
+    recv, bad = _ppermute_guarded(piece, axis_name, perm, guard)
     installed = jax.tree.map(
         lambda h, rv: lax.dynamic_update_slice(
             h, rv, (r,) + (0,) * (h.ndim - 1)
@@ -1077,9 +1290,10 @@ def _slab_exchange(held, axis_name, r, perm, start, slab, n_virt, is_recv):
         held,
         recv,
     )
-    return jax.tree.map(
+    held = jax.tree.map(
         lambda new, old: jnp.where(is_recv, new, old), installed, held
     )
+    return held, bad & is_recv
 
 
 def _scatter_tree_trimmed(held, axis_name, r, n, n_virt, cfg: GZConfig):
@@ -1095,6 +1309,8 @@ def _scatter_tree_trimmed(held, axis_name, r, n, n_virt, cfg: GZConfig):
     not piece-split).  The padding slots of the held buffers never travel:
     the root ships exactly n-1 chunk streams at any axis size.
     """
+    guard = cfg.verify_streams
+    corrupt = jnp.zeros((), jnp.bool_)
     for span, full_senders, trim in cost_model.binomial_slab_table(n):
         start = r + span  # sender's outgoing slab start (own subtree's right half)
         if full_senders:
@@ -1105,17 +1321,19 @@ def _scatter_tree_trimmed(held, axis_name, r, n, n_virt, cfg: GZConfig):
             groups = min(max(cfg.pipeline_chunks, 1), span)
             sub = span // groups
             for g in range(groups):
-                held = _slab_exchange(
+                held, bad = _slab_exchange(
                     held, axis_name, r + g * sub, perm, start + g * sub,
-                    sub, n_virt, is_recv,
+                    sub, n_virt, is_recv, guard,
                 )
+                corrupt |= bad
         if trim is not None:
             snd, rcv, slab = trim
-            held = _slab_exchange(
+            held, bad = _slab_exchange(
                 held, axis_name, r, [(snd, rcv)], start, slab, n_virt,
-                r == rcv,
+                r == rcv, guard,
             )
-    return held
+            corrupt |= bad
+    return held, corrupt
 
 
 def _scatter_tree_padded_reference(held, axis_name, r, n, n_virt,
@@ -1127,6 +1345,7 @@ def _scatter_tree_padded_reference(held, axis_name, r, n, n_virt,
     each sender ``i % 2**(k+1) == 0`` to ``i + 2**k``.
     """
     steps = n_virt.bit_length() - 1
+    corrupt = jnp.zeros((), jnp.bool_)
     for k in reversed(range(steps)):
         span = 1 << k
         perm = [(i, i + span) for i in range(0, n_virt, span * 2)
@@ -1135,11 +1354,12 @@ def _scatter_tree_padded_reference(held, axis_name, r, n, n_virt,
         groups = min(max(cfg.pipeline_chunks, 1), span)
         sub = span // groups
         for g in range(groups):
-            held = _slab_exchange(
+            held, bad = _slab_exchange(
                 held, axis_name, r + g * sub, perm, r + span + g * sub,
-                sub, n_virt, is_recv,
+                sub, n_virt, is_recv, cfg.verify_streams,
             )
-    return held
+            corrupt |= bad
+    return held, corrupt
 
 
 def _execute_scatter(x_full, axis_name, cfg: GZConfig, *, root: int = 0,
@@ -1175,14 +1395,16 @@ def _execute_scatter(x_full, axis_name, cfg: GZConfig, *, root: int = 0,
     held, rows, chunk_n, n_virt, ovf = _scatter_held_buffers(x_full, n, cfg)
     tree = (_scatter_tree_padded_reference if _padded_reference
             else _scatter_tree_trimmed)
-    held_packed, held_bw, held_anchor = tree(
+    (held_packed, held_bw, held_anchor), corrupt = tree(
         held, axis_name, r, n, n_virt, cfg
     )
 
     # Only the root compresses significant data; the SPMD packs of the
     # other ranks' local buffers are meaningless and must not pollute the
-    # global overflow OR below.
-    ovf &= r == 0
+    # global overflow OR below.  Wire corruption is a receive-side event
+    # and is NOT root-masked: a corrupted stream is unusable wherever it
+    # lands.
+    ovf = (ovf & (r == 0)) | corrupt
 
     # Decompress own chunk (the single lossy hop).
     my_pk = jnp.take(held_packed, r, axis=0)
@@ -1316,12 +1538,14 @@ def _execute_broadcast(x, axis_name, cfg: GZConfig, *, root: int = 0):
     # Non-root ranks compress their (insignificant) local x in SPMD; only
     # the root's stream travels, so only its flag is meaningful.
     ovf = c.overflowed() & (r == 0)
+    guard = cfg.verify_streams
     for span, full_senders, trim in cost_model.binomial_slab_table(n):
         perm = [(i, i + span) for i in full_senders]
         if trim is not None:
             perm.append((trim[0], trim[1]))
-        c_recv = _ppermute(c, axis_name, perm)
+        c_recv, bad = _ppermute_guarded(c, axis_name, perm, guard)
         has = (r % (span * 2)) == span
+        ovf |= bad & has
         c = jax.tree.map(lambda new, old: jnp.where(has, new, old), c_recv, c)
     return comp.decompress(c).reshape(shape).astype(dtype), ovf
 

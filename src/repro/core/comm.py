@@ -64,14 +64,16 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
-from repro.core import cost_model, error_budget
+from repro.core import cost_model, error_budget, faults
 from repro.core.compressed import capacity_words_for
 from repro.kernels import ops
 
 __all__ = [
     "Plan",
     "HierPlan",
+    "FallbackPlan",
     "CollectiveResult",
     "GZCommunicator",
     "GZHierCommunicator",
@@ -80,6 +82,9 @@ __all__ = [
     "policy_names",
     "plan_cache_stats",
     "clear_plan_cache",
+    "enable_health_tracking",
+    "health_stats",
+    "clear_health_stats",
     "fit_hardware",
     "fit_network",
     "measure_codec",
@@ -108,6 +113,43 @@ _OP_ALGO = {
 # ---------------------------------------------------------------------------
 # Plan & CollectiveResult
 # ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FallbackPlan:
+    """The lossless degradation target of a compressed plan (DESIGN.md §9).
+
+    Every resolved :class:`Plan`/:class:`HierPlan` carries one: the
+    uncompressed schedule over the SAME axis/topology that
+    ``on_overflow="fallback"`` re-executes through when a stream
+    overflowed, a verified hop failed its checksum, or an input held
+    NaN/Inf.  Static and hashable like every other plan field.
+    """
+
+    op: str
+    kind: str          # lossless primitive: psum | psum_scatter | ...
+    axis_size: int
+    wire_bytes: int    # raw uncompressed bytes the fallback moves per rank
+    t_model: float     # modeled seconds of one fallback execution
+
+
+# Lossless primitive each op degrades to (FallbackPlan.kind).
+_FALLBACK_KIND = {
+    "allreduce": "psum",
+    "reduce_scatter": "psum_scatter",
+    "allgather": "all_gather",
+    "scatter": "raw_slab_tree",
+    "broadcast": "raw_tree_forward",
+    "all_to_all": "all_to_all",
+}
+
+
+def _fallback_plan(op, n_elems, axis_size, hw) -> FallbackPlan:
+    return FallbackPlan(
+        op=op, kind=_FALLBACK_KIND[op], axis_size=axis_size,
+        wire_bytes=n_elems * 4,
+        t_model=cost_model.fallback_time(op, n_elems * 4, axis_size, hw),
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +189,13 @@ class Plan:
     # same single authority, so this can never disagree with what runs.
     # Static and hashable like every other field; () for non-tree ops.
     slab_table: tuple = ()
+    # Degradation policy (DESIGN.md §9): what the communicator does when
+    # overflow/NaN/Inf/corruption fires, and whether hops ship checksums.
+    on_overflow: str = "flag"   # flag | fallback | raise
+    verify_streams: bool = False
+    # The resolved lossless degradation target — always present (the
+    # fallback schedule exists whether or not the policy executes it).
+    fallback: Optional[FallbackPlan] = None
 
     def as_config(self):
         """The concrete GZConfig the execute layer dispatches on."""
@@ -160,6 +209,8 @@ class Plan:
             pipeline_chunks=self.pipeline_chunks,
             fused=self.fused,
             fused_hop=self.fused_hop,
+            on_overflow=self.on_overflow,
+            verify_streams=self.verify_streams,
         )
 
 
@@ -210,6 +261,11 @@ class HierPlan:
     t_model: float         # modeled seconds of the chosen path
     t_flat: float          # modeled seconds of the flat alternative
     policy: str
+    # Degradation policy + the composite-axis lossless target (§9); the
+    # sub-plans carry their own fallback/verify knobs via as_config().
+    on_overflow: str = "flag"
+    verify_streams: bool = False
+    fallback: Optional[FallbackPlan] = None
 
     @property
     def ratio(self) -> float:
@@ -226,14 +282,23 @@ class HierPlan:
 class CollectiveResult:
     """Uniform result-and-stats channel of every communicator method.
 
-    ``value``/``overflow`` are traced; ``wire_bytes``/``ratio`` are static
-    (pytree aux data) so the container flows through ``jit``/``shard_map``
-    like a 2-leaf pytree.
+    ``value``/``overflow``/``nonfinite`` are traced; ``wire_bytes``/
+    ``ratio`` are static (pytree aux data) so the container flows through
+    ``jit``/``shard_map`` like a 3-leaf pytree.
 
     ``overflow`` is the global OR across the axis ("did any piece of any
-    hop anywhere exceed its provisioned capacity") — the per-rank local
-    flag alone can be silently False on a rank whose *received* data was
-    truncated elsewhere.
+    hop anywhere exceed its provisioned capacity, or fail stream
+    verification") — the per-rank local flag alone can be silently False
+    on a rank whose *received* data was truncated elsewhere.
+
+    ``nonfinite`` is the distinct health bit for NaN/Inf detected in the
+    INPUT before compression (a non-finite value entering the quantizer
+    poisons the packed stream undetectably, so it is checked up front) —
+    global OR across the axis, root-masked for scatter/broadcast where
+    only the root's payload is significant.  Under
+    ``on_overflow="fallback"`` either bit routes the call through the
+    lossless schedule (``overflow | nonfinite`` is the re-execute
+    predicate; the ``degraded`` property).
 
     ``wire_bytes`` is the statically provisioned payload a rank ships for
     the whole collective (XLA moves provisioned capacity, not the ragged
@@ -244,11 +309,19 @@ class CollectiveResult:
 
     value: jnp.ndarray
     overflow: jnp.ndarray
+    nonfinite: jnp.ndarray
     wire_bytes: int = dataclasses.field(metadata=dict(static=True))
     ratio: float = dataclasses.field(metadata=dict(static=True))
 
+    @property
+    def degraded(self) -> jnp.ndarray:
+        """True iff this call could not complete losslessly-bounded
+        compressed (the fallback predicate)."""
+        return self.overflow | self.nonfinite
+
     def astuple(self):
-        return self.value, self.overflow, self.wire_bytes, self.ratio
+        return (self.value, self.overflow, self.nonfinite,
+                self.wire_bytes, self.ratio)
 
 
 # ---------------------------------------------------------------------------
@@ -631,7 +704,7 @@ def clear_plan_cache() -> None:
 def _resolve_plan(
     op, n_elems, dtype, axis_size, eb, *, policy, requested_algo,
     requested_chunks, capacity_factor, worst_case_budget, fused, fused_hop,
-    ratio, hw,
+    ratio, hw, on_overflow="flag", verify_streams=False,
 ) -> Plan:
     key = (
         # The canonical identity of a plan...
@@ -639,6 +712,7 @@ def _resolve_plan(
         # ...plus the communicator knobs that parameterize resolution.
         policy, requested_algo, requested_chunks, capacity_factor,
         worst_case_budget, fused, fused_hop, ratio, hw,
+        on_overflow, verify_streams,
     )
     hit = _PLAN_CACHE.get(key)
     if hit is not None:
@@ -672,6 +746,8 @@ def _resolve_plan(
         ratio=(raw / wire) if wire else 1.0, policy=policy,
         slab_table=(cost_model.binomial_slab_table(axis_size)
                     if algo == "binomial" else ()),
+        on_overflow=on_overflow, verify_streams=verify_streams,
+        fallback=_fallback_plan(op, n_elems, axis_size, hw),
     )
     _PLAN_CACHE[key] = plan
     return plan
@@ -703,7 +779,7 @@ def _allreduce_model_time(algo, nbytes, n, ratio, hw, chunks, fused_hop):
 def _resolve_hier_plan(
     op, n_elems, dtype, topology, eb, *, policy, requested_algo,
     requested_chunks, capacity_factor, worst_case_budget, fused, fused_hop,
-    ratio, hw,
+    ratio, hw, on_overflow="flag", verify_streams=False,
 ) -> HierPlan:
     """Resolve the frozen two-level plan for ``topology = (n_nodes, L)``.
 
@@ -732,6 +808,7 @@ def _resolve_hier_plan(
         op, n_elems * 4, str(dtype), topology, eb,
         policy, requested_algo, requested_chunks, capacity_factor,
         worst_case_budget, fused, fused_hop, ratio, hw,
+        on_overflow, verify_streams,
     )
     hit = _HIER_PLAN_CACHE.get(key)
     if hit is not None:
@@ -750,6 +827,7 @@ def _resolve_hier_plan(
         requested_chunks=requested_chunks, capacity_factor=capacity_factor,
         worst_case_budget=worst_case_budget, fused=fused,
         fused_hop=fused_hop, ratio=ratio, hw=hw,
+        on_overflow=on_overflow, verify_streams=verify_streams,
     )
     flat_plan = _resolve_plan(op, n_elems, dtype, N, eb, **knobs)
     t_flat = _allreduce_model_time(
@@ -793,6 +871,8 @@ def _resolve_hier_plan(
         intra_wire_bytes=0 if flat else intra_wire,
         inter_wire_bytes=inter_wire, t_model=t_model, t_flat=t_flat,
         policy=policy,
+        on_overflow=on_overflow, verify_streams=verify_streams,
+        fallback=_fallback_plan(op, n_elems, N, hw),
     )
     _HIER_PLAN_CACHE[key] = plan
     return plan
@@ -825,6 +905,72 @@ def _a2a_planned_bwd(axis_name, plan, _, g):
 
 
 _a2a_planned.defvjp(_a2a_planned_fwd, _a2a_planned_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Health counters (observable outside the trace, like the plan-cache stats)
+# ---------------------------------------------------------------------------
+#
+# Per-(op, axis) counts of calls / overflow events / non-finite events /
+# fallback executions, accumulated host-side via jax.debug.callback from
+# rank 0 of each collective (once per call, not once per rank).  OFF by
+# default: the enable flag is read at TRACE time, so traces built while
+# tracking is disabled carry no callback at all (zero overhead), and
+# functions jitted under `enable_health_tracking()` keep emitting until
+# re-traced.  Call `jax.effects_barrier()` before reading if the enclosing
+# computation may still be in flight.
+
+_HEALTH: dict = {}
+_HEALTH_ENABLED = False
+
+
+def enable_health_tracking(enabled: bool = True) -> None:
+    """Toggle per-communicator health counters (trace-time gate)."""
+    global _HEALTH_ENABLED
+    _HEALTH_ENABLED = enabled
+
+
+def health_stats() -> dict:
+    """{(op, axis_repr): {'calls', 'overflow', 'nonfinite', 'fallbacks'}}"""
+    return {k: dict(v) for k, v in _HEALTH.items()}
+
+
+def clear_health_stats() -> None:
+    _HEALTH.clear()
+
+
+def _health_cb(key, is_r0, ovf, nonfinite, fell_back):
+    if not bool(is_r0):
+        return
+    rec = _HEALTH.setdefault(
+        key, {"calls": 0, "overflow": 0, "nonfinite": 0, "fallbacks": 0}
+    )
+    rec["calls"] += 1
+    rec["overflow"] += int(bool(ovf))
+    rec["nonfinite"] += int(bool(nonfinite))
+    rec["fallbacks"] += int(bool(fell_back))
+
+
+def _emit_health(op, axis_name, overflow, nonfinite, fell_back) -> None:
+    if not _HEALTH_ENABLED:
+        return
+    from repro.core.collectives import _axis_rank
+
+    jax.debug.callback(
+        partial(_health_cb, (op, repr(axis_name))),
+        _axis_rank(axis_name) == 0, overflow, nonfinite, fell_back,
+    )
+
+
+def _raise_degraded(what, ovf, nonfinite):
+    if bool(ovf) or bool(nonfinite):
+        raise RuntimeError(
+            f"gZ collective degraded ({what}): overflow={bool(ovf)} "
+            f"nonfinite={bool(nonfinite)} — a compressed stream exceeded "
+            "its provisioned capacity (or failed verification) or the "
+            "input held NaN/Inf.  Use on_overflow='fallback' for in-trace "
+            "lossless recovery, or 'flag' to only report."
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -947,84 +1093,129 @@ class GZCommunicator:
             capacity_factor=cfg.capacity_factor,
             worst_case_budget=cfg.worst_case_budget, fused=cfg.fused,
             fused_hop=cfg.fused_hop, ratio=self.ratio, hw=self.hw,
+            on_overflow=cfg.on_overflow, verify_streams=cfg.verify_streams,
         )
 
     # -- collectives ---------------------------------------------------------
 
     def _trivial(self, x) -> CollectiveResult:
-        return CollectiveResult(x, jnp.zeros((), jnp.bool_), 0, 1.0)
+        zero = jnp.zeros((), jnp.bool_)
+        return CollectiveResult(x, zero, zero, 0, 1.0)
 
-    def _result(self, out, ovf, plan: Plan) -> CollectiveResult:
-        from repro.core.collectives import _or_across
+    def _finish(self, op, x, out, ovf, plan: Plan, *,
+                root: int = 0) -> CollectiveResult:
+        """Shared epilogue: global-OR the health bits, apply the plan's
+        degradation policy (DESIGN.md §9), emit health counters.
 
+        ``x`` is the (possibly poisoned) input the compressed schedule
+        consumed — the fallback branch re-executes the LOSSLESS schedule
+        over exactly that payload inside ``lax.cond`` (the predicate is
+        psum-derived, hence replicated and cond-safe), so the recovered
+        result is bitwise the uncompressed collective of the sanitized
+        input.
+        """
+        from repro.core.collectives import (
+            _axis_rank, _execute_lossless, _flags_across, _nonfinite_local,
+        )
+
+        nf_loc = _nonfinite_local(x)
+        if op in ("scatter", "broadcast"):
+            # Only the root's payload is significant; non-root junk must
+            # not trip the non-finite guard.
+            nf_loc &= _axis_rank(self.axis_name) == root
+        overflow, nonfinite = _flags_across(ovf, nf_loc, self.axis_name)
+        degraded = overflow | nonfinite
+        fell_back = jnp.zeros((), jnp.bool_)
+        if plan.on_overflow == "fallback":
+            cfg = plan.as_config()
+            out = lax.cond(
+                degraded,
+                lambda: _execute_lossless(
+                    op, x, self.axis_name, cfg, root=root
+                ),
+                lambda: out,
+            )
+            fell_back = degraded
+        elif plan.on_overflow == "raise":
+            jax.debug.callback(
+                partial(_raise_degraded, f"{op} over {self.axis_name!r}"),
+                overflow, nonfinite,
+            )
+        _emit_health(op, self.axis_name, overflow, nonfinite, fell_back)
         return CollectiveResult(
-            out, _or_across(ovf, self.axis_name), plan.wire_bytes, plan.ratio
+            out, overflow, nonfinite, plan.wire_bytes, plan.ratio
         )
 
     def allreduce(self, x, *, plan: Optional[Plan] = None) -> CollectiveResult:
         """Compressed sum-allreduce of ``x`` over the bound axis."""
         if self.axis_size() == 1:
             return self._trivial(x)
+        x = faults.maybe_poison_input(x, self.axis_name)
         plan = plan or self.plan("allreduce", x.shape, x.dtype)
         from repro.core.collectives import _execute_allreduce
 
         out, ovf = _execute_allreduce(x, self.axis_name, plan.as_config())
-        return self._result(out, ovf, plan)
+        return self._finish("allreduce", x, out, ovf, plan)
 
     def reduce_scatter(self, x, *, plan: Optional[Plan] = None) -> CollectiveResult:
         """Ring reduce-scatter: rank r returns summed chunk r (flat view)."""
         if self.axis_size() == 1:
             return self._trivial(x)
+        x = faults.maybe_poison_input(x, self.axis_name)
         plan = plan or self.plan("reduce_scatter", x.shape, x.dtype)
         from repro.core.collectives import _execute_reduce_scatter
 
         out, ovf = _execute_reduce_scatter(x, self.axis_name, plan.as_config())
-        return self._result(out, ovf, plan)
+        return self._finish("reduce_scatter", x, out, ovf, plan)
 
     def allgather(self, x, *, plan: Optional[Plan] = None) -> CollectiveResult:
         """Ring allgather: compress once, forward compressed N-1 times."""
         if self.axis_size() == 1:
             return self._trivial(x)
+        x = faults.maybe_poison_input(x, self.axis_name)
         plan = plan or self.plan("allgather", x.shape, x.dtype)
         from repro.core.collectives import _execute_allgather
 
         out, ovf = _execute_allgather(x, self.axis_name, plan.as_config())
-        return self._result(out, ovf, plan)
+        return self._finish("allgather", x, out, ovf, plan)
 
     def scatter(self, x_full, *, root: int = 0,
                 plan: Optional[Plan] = None) -> CollectiveResult:
         """Binomial-tree compressed scatter from ``root`` (root 0 only)."""
         if self.axis_size() == 1:
             return self._trivial(x_full)
+        x_full = faults.maybe_poison_input(x_full, self.axis_name)
         plan = plan or self.plan("scatter", x_full.shape, x_full.dtype)
         from repro.core.collectives import _execute_scatter
 
         out, ovf = _execute_scatter(
             x_full, self.axis_name, plan.as_config(), root=root
         )
-        return self._result(out, ovf, plan)
+        return self._finish("scatter", x_full, out, ovf, plan, root=root)
 
     def broadcast(self, x, *, root: int = 0,
                   plan: Optional[Plan] = None) -> CollectiveResult:
         """Binomial-tree broadcast: compress once at root."""
         if self.axis_size() == 1:
             return self._trivial(x)
+        x = faults.maybe_poison_input(x, self.axis_name)
         plan = plan or self.plan("broadcast", x.shape, x.dtype)
         from repro.core.collectives import _execute_broadcast
 
         out, ovf = _execute_broadcast(
             x, self.axis_name, plan.as_config(), root=root
         )
-        return self._result(out, ovf, plan)
+        return self._finish("broadcast", x, out, ovf, plan, root=root)
 
     def all_to_all(self, x, *, plan: Optional[Plan] = None) -> CollectiveResult:
         """Compressed rank-exchange; differentiable (straight-through the
         quantizer, compressed cotangent — see ``_a2a_planned``)."""
         if self.axis_size() == 1:
             return self._trivial(x)
+        x = faults.maybe_poison_input(x, self.axis_name)
         plan = plan or self.plan("all_to_all", x.shape, x.dtype)
         out, ovf = _a2a_planned(x, self.axis_name, plan)
-        return self._result(out, ovf, plan)
+        return self._finish("all_to_all", x, out, ovf, plan)
 
     def __repr__(self):
         return (
@@ -1139,21 +1330,47 @@ class GZHierCommunicator:
             capacity_factor=cfg.capacity_factor,
             worst_case_budget=cfg.worst_case_budget, fused=cfg.fused,
             fused_hop=cfg.fused_hop, ratio=self.ratio, hw=self.hw,
+            on_overflow=cfg.on_overflow, verify_streams=cfg.verify_streams,
         )
 
     def allreduce(self, x, *, plan: Optional[HierPlan] = None) -> CollectiveResult:
         """Two-level compressed sum-allreduce over ``node × local``."""
         n_nodes, L = self.topology()
         if n_nodes * L == 1:
-            return CollectiveResult(x, jnp.zeros((), jnp.bool_), 0, 1.0)
+            zero = jnp.zeros((), jnp.bool_)
+            return CollectiveResult(x, zero, zero, 0, 1.0)
+        axes = self._composite_axes()
+        x = faults.maybe_poison_input(x, axes)
         hplan = plan or self.plan(x.shape, x.dtype)
-        from repro.core.collectives import _execute_allreduce_hier, _or_across
+        from repro.core.collectives import (
+            _execute_allreduce_hier, _execute_lossless, _flags_across,
+            _nonfinite_local,
+        )
 
         out, ovf = _execute_allreduce_hier(
             x, self.node_axis, self.local_axis, hplan
         )
+        overflow, nonfinite = _flags_across(ovf, _nonfinite_local(x), axes)
+        degraded = overflow | nonfinite
+        fell_back = jnp.zeros((), jnp.bool_)
+        if hplan.on_overflow == "fallback":
+            # The lossless twin of either branch (flat or hierarchical) is
+            # the exact psum over the composite axes.
+            cfg = (hplan.flat_plan or hplan.inter).as_config()
+            out = lax.cond(
+                degraded,
+                lambda: _execute_lossless("allreduce", x, axes, cfg),
+                lambda: out,
+            )
+            fell_back = degraded
+        elif hplan.on_overflow == "raise":
+            jax.debug.callback(
+                partial(_raise_degraded, f"allreduce over {axes!r}"),
+                overflow, nonfinite,
+            )
+        _emit_health("allreduce", axes, overflow, nonfinite, fell_back)
         return CollectiveResult(
-            out, _or_across(ovf, self._composite_axes()),
+            out, overflow, nonfinite,
             hplan.inter_wire_bytes, hplan.ratio,
         )
 

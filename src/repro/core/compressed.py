@@ -66,6 +66,26 @@ class Compressed:
         return self.nwords.astype(jnp.int32) * 4 + meta
 
 
+MAX_CAPACITY_FACTOR = 2.0
+
+
+def validate_capacity_factor(capacity_factor: float, *, knob: str) -> None:
+    """Reject capacity factors that would fail deep in the pack kernel.
+
+    Non-positive factors provision a zero/negative buffer (shape error at
+    trace time); factors beyond ``MAX_CAPACITY_FACTOR`` over-provision past
+    the worst incompressible stream (32-bit codes + per-block metadata fit
+    comfortably under 2x the raw f32 size) and usually indicate a units
+    mistake (bytes vs fraction).
+    """
+    if not (0.0 < float(capacity_factor) <= MAX_CAPACITY_FACTOR):
+        raise ValueError(
+            f"{knob}={capacity_factor!r} is outside the legal range "
+            f"(0.0, {MAX_CAPACITY_FACTOR}]: it is the fraction of the raw "
+            "f32 byte size to provision for the packed stream."
+        )
+
+
 def capacity_words_for(n: int, capacity_factor: float, block: int) -> int:
     """Provisioned uint32 words for an ``n``-element f32 payload.
 
@@ -74,6 +94,11 @@ def capacity_words_for(n: int, capacity_factor: float, block: int) -> int:
     per block so a pathological incompressible block cannot overflow by
     construction when factor >= 1.0.
     """
+    if n <= 0:
+        raise ValueError(f"capacity_words_for: n={n} must be positive")
+    if block <= 0:
+        raise ValueError(f"capacity_words_for: block={block} must be positive")
+    validate_capacity_factor(capacity_factor, knob="capacity_factor")
     n_blocks = -(-n // block)
     words = int(n * capacity_factor)  # n f32 == n 4-byte words
     return max(words, n_blocks, 8)

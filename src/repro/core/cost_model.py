@@ -52,6 +52,8 @@ __all__ = [
     "allgather_ring_gz",
     "best_pipeline_chunks",
     "best_scatter_pipeline_chunks",
+    "fallback_time",
+    "expected_collective_time",
 ]
 
 
@@ -585,3 +587,48 @@ def scatter_uncompressed_binomial(D, N, hw: Hardware) -> float:
         t_net(_root_slab_chunks(entry)[0] * chunk, hw)
         for entry in binomial_slab_table(N)
     )
+
+
+# --- Degradation pricing (DESIGN.md §9) ---
+
+
+def fallback_time(op: str, D, N, hw: Hardware) -> float:
+    """Seconds the LOSSLESS fallback schedule of ``op`` costs: the price
+    of one degraded call (``collectives._execute_lossless``), recorded on
+    every ``Plan.fallback`` so the planner can expose what an overflow /
+    non-finite event will cost at runtime.
+
+    ``D`` is the raw f32 byte size of the op's input payload.  The
+    fallback is algorithm-UNIFORM — the same uncompressed schedule runs
+    regardless of which compressed algo the plan picked — so this is
+    informational/observable, never a re-ranking input for the selector
+    (a fallback should be rare; pricing it into the ranking would just
+    bias against compression everywhere).
+    """
+    N = int(N)
+    if N <= 1:
+        return 0.0
+    if op == "allreduce":
+        return allreduce_uncompressed_ring(D, N, hw)
+    if op == "reduce_scatter":
+        return (N - 1) * (t_net(D / N, hw) + t_reduce(D / N, hw))
+    if op == "allgather":
+        return (N - 1) * t_net(D, hw)
+    if op == "scatter":
+        return scatter_uncompressed_binomial(D, N, hw)
+    if op == "broadcast":
+        return steps_for("binomial", N) * t_net(D, hw)
+    if op == "all_to_all":
+        return t_net(D, hw)
+    raise ValueError(f"fallback_time: unknown op {op!r}")
+
+
+def expected_collective_time(
+    t_compressed: float, t_fallback: float, p_degraded: float
+) -> float:
+    """Expected wall time when a fraction ``p_degraded`` of calls degrade:
+    a degraded call pays the compressed schedule (the overflow is only
+    known once the streams have been exchanged) AND the lossless
+    re-execute on top."""
+    p = min(max(float(p_degraded), 0.0), 1.0)
+    return float(t_compressed) + p * float(t_fallback)

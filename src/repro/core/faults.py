@@ -1,0 +1,212 @@
+"""Deterministic fault injection for the gZ collectives (DESIGN.md §9).
+
+The degradation layer (overflow detection, non-finite guards, stream
+verification, lossless fallback) is only trustworthy if its detection
+paths can be DRIVEN: this module provides seeded injectors that force
+each failure mode on chosen ranks, usable both in the numpy replays
+(``simulator.sim_allreduce_guarded``) and in real multi-device shard_map
+children (``tests/_mp_faults_child.py``), proving detection fires and
+the fallback recovers exactly.
+
+Fault kinds (:class:`FaultSpec.kind`):
+
+  ``"nan"`` / ``"inf"``  poison ``n`` seeded positions of the INPUT with
+                         NaN/Inf on the target ranks (pre-compression —
+                         exercises the non-finite guard).
+  ``"overflow"``         replace the target ranks' input with seeded
+                         high-entropy noise (sigma 1e6) that no capacity
+                         factor <= 1 can pack — forces a genuine
+                         capacity overflow through the real kernels, no
+                         flag is faked.
+  ``"bitflip"``          XOR ``n`` seeded bits into the first uint32
+                         leaf (the packed stream) of every compressed
+                         wire payload RECEIVED on the target ranks —
+                         in-flight corruption; detected only when
+                         ``verify_streams`` ships checksums.  Raw f32
+                         (lossless-fallback) trees are never touched,
+                         so a fallback re-execute is immune.
+
+Injection is TRACE-TIME gated: the collectives consult the installed
+spec while being traced, so a function jitted under ``inject(...)``
+keeps its faults until re-traced, and a function traced without faults
+stays clean (zero overhead — the hooks are identity).  Build the jit
+inside the ``with inject(spec):`` block.
+
+The injected values come from ``numpy.random.default_rng(spec.seed)``
+and are embedded as constants at trace time — ``poison_np`` produces
+bitwise the same poisoned array for host-side twins/references.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FaultSpec",
+    "install",
+    "clear",
+    "active",
+    "inject",
+    "poison_np",
+    "maybe_poison_input",
+    "maybe_corrupt_wire",
+]
+
+KINDS = ("nan", "inf", "overflow", "bitflip")
+
+# Sigma of the "overflow" replacement noise: a seeded N(0, 1e6) payload
+# needs ~all 32 bits per code at any practical eb, so every capacity
+# factor < 1 genuinely overflows the pack kernel.
+OVERFLOW_SIGMA = 1e6
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic fault: what, where, and from which seed."""
+
+    kind: str
+    ranks: tuple = (0,)
+    seed: int = 0
+    n: int = 1  # poisoned positions (nan/inf) or flipped bits (bitflip)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"FaultSpec.kind must be one of {KINDS}; got {self.kind!r}"
+            )
+        object.__setattr__(
+            self, "ranks", tuple(int(r) for r in self.ranks)
+        )
+        if self.n < 1:
+            raise ValueError(f"FaultSpec.n must be >= 1; got {self.n!r}")
+
+
+_ACTIVE: Optional[FaultSpec] = None
+
+
+def install(spec: FaultSpec) -> None:
+    """Arm ``spec`` process-wide (until :func:`clear`)."""
+    global _ACTIVE
+    _ACTIVE = spec
+
+
+def clear() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def active() -> Optional[FaultSpec]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def inject(spec: FaultSpec):
+    """Arm ``spec`` for the duration of the block (trace-time gate: jit
+    the faulty function INSIDE the block)."""
+    install(spec)
+    try:
+        yield spec
+    finally:
+        clear()
+
+
+# ---------------------------------------------------------------------------
+# Seeded fault material (shared by the device hooks and the numpy twins)
+# ---------------------------------------------------------------------------
+
+
+def _poison_positions(size: int, spec: FaultSpec) -> np.ndarray:
+    rng = np.random.default_rng(spec.seed)
+    k = max(1, min(spec.n, size))
+    return np.sort(rng.choice(size, size=k, replace=False))
+
+
+def _overflow_noise(shape, spec: FaultSpec) -> np.ndarray:
+    rng = np.random.default_rng(spec.seed)
+    return rng.normal(0.0, OVERFLOW_SIGMA, size=shape).astype(np.float32)
+
+
+def poison_np(x, rank: int, spec: Optional[FaultSpec]):
+    """Numpy twin of :func:`maybe_poison_input`: what rank ``rank``'s
+    input looks like under ``spec`` — bitwise identical to the device
+    path (same seeded constants), for building host-side references."""
+    x = np.array(x, copy=True)
+    if (
+        spec is None
+        or spec.kind == "bitflip"
+        or rank not in spec.ranks
+        or not np.issubdtype(x.dtype, np.floating)
+    ):
+        return x
+    if spec.kind == "overflow":
+        return _overflow_noise(x.shape, spec).astype(x.dtype)
+    flat = x.reshape(-1)
+    flat[_poison_positions(flat.size, spec)] = (
+        np.nan if spec.kind == "nan" else np.inf
+    )
+    return flat.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Device-side hooks (identity when no fault is armed)
+# ---------------------------------------------------------------------------
+
+
+def _rank_mask(axis_name, ranks):
+    from repro.core.collectives import _axis_rank
+
+    r = _axis_rank(axis_name)
+    m = jnp.zeros((), jnp.bool_)
+    for k in ranks:
+        m = m | (r == jnp.int32(k))
+    return m
+
+
+def maybe_poison_input(x, axis_name):
+    """Input-poisoning hook, called by every communicator method on the
+    payload before detection/compression.  Identity unless a nan/inf/
+    overflow fault is armed AT TRACE TIME."""
+    spec = _ACTIVE
+    if spec is None or spec.kind == "bitflip":
+        return x
+    if not jnp.issubdtype(x.dtype, jnp.floating):
+        return x
+    on = _rank_mask(axis_name, spec.ranks)
+    if spec.kind == "overflow":
+        noise = jnp.asarray(_overflow_noise(x.shape, spec)).astype(x.dtype)
+        return jnp.where(on, noise, x)
+    val = np.nan if spec.kind == "nan" else np.inf
+    flat = x.reshape(-1)
+    idx = _poison_positions(flat.shape[0], spec)
+    vals = jnp.where(on, jnp.asarray(val, flat.dtype), flat[idx])
+    return flat.at[idx].set(vals).reshape(x.shape)
+
+
+def maybe_corrupt_wire(tree, axis_name):
+    """Wire-corruption hook, applied by ``collectives._ppermute_guarded``
+    to every RECEIVED compressed payload.  Flips ``spec.n`` seeded bits
+    of the first uint32 leaf (the packed stream) on the target ranks;
+    identity for non-bitflip faults and for raw (non-uint32-first)
+    trees — the lossless fallback's f32 slabs never corrupt."""
+    spec = _ACTIVE
+    if spec is None or spec.kind != "bitflip":
+        return tree
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves or leaves[0].dtype != jnp.uint32 or leaves[0].size == 0:
+        return tree
+    leaf = leaves[0]
+    rng = np.random.default_rng(spec.seed)
+    on = _rank_mask(axis_name, spec.ranks)
+    flat = leaf.reshape(-1)
+    for _ in range(spec.n):
+        word = int(rng.integers(flat.shape[0]))
+        bit = int(rng.integers(32))
+        flipped = flat.at[word].set(flat[word] ^ jnp.uint32(1 << bit))
+        flat = jnp.where(on, flipped, flat)
+    leaves[0] = flat.reshape(leaf.shape)
+    return jax.tree.unflatten(treedef, leaves)

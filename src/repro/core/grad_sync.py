@@ -46,7 +46,14 @@ from jax.flatten_util import ravel_pytree
 from repro.core.collectives import GZConfig, _axis_size
 from repro.core.comm import GZCommunicator, GZHierCommunicator
 
-__all__ = ["SyncConfig", "dp_allreduce_grads", "fsdp_all_gather", "fsdp_reduce_scatter"]
+__all__ = [
+    "SyncConfig",
+    "SyncStats",
+    "dp_allreduce_grads",
+    "dp_allreduce_grads_stats",
+    "fsdp_all_gather",
+    "fsdp_reduce_scatter",
+]
 
 CHUNK = 4 * 1024 * 1024  # elements per compression call (f32: 16 MiB)
 
@@ -96,6 +103,29 @@ class SyncConfig:
         )
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SyncStats:
+    """Health flags of one gradient sync, OR-ed across every scan chunk.
+
+    ``overflow``/``nonfinite`` are replicated bool scalars (they come out
+    of ``CollectiveResult`` already psum-combined across the axes), so
+    they are safe predicates for a skip-step ``jnp.where`` and identical
+    on every rank.  The old single-return ``dp_allreduce_grads`` used to
+    DROP these flags on the scan floor — a silent-corruption hazard when
+    ``on_overflow="flag"`` — hence the ``_stats`` entry point.
+    """
+
+    overflow: jnp.ndarray
+    nonfinite: jnp.ndarray
+
+    @property
+    def degraded(self) -> jnp.ndarray:
+        """True iff this sync overflowed or saw non-finite input (the
+        GradScaler-style skip predicate)."""
+        return self.overflow | self.nonfinite
+
+
 def _comm(axis_name, sync: "SyncConfig") -> GZCommunicator:
     """The per-axis communicator for this sync policy (memoized).
 
@@ -140,11 +170,20 @@ def _global_rms(flat: jnp.ndarray, axis_names) -> jnp.ndarray:
     return jnp.sqrt(ss / max(cnt, 1.0))
 
 
-def _allreduce_flat(flat: jnp.ndarray, axis_names, sync: SyncConfig) -> jnp.ndarray:
+def _allreduce_flat(flat: jnp.ndarray, axis_names, sync: SyncConfig):
+    """Sync one flat vector; returns ``(out, SyncStats)``."""
+    no = jnp.zeros((), jnp.bool_)
     if sync.gz is None:
-        return lax.psum(flat, tuple(axis_names))
+        out = lax.psum(flat, tuple(axis_names))
+        nf = lax.psum(
+            jnp.any(~jnp.isfinite(flat)).astype(jnp.int32), tuple(axis_names)
+        ) > 0
+        return out, SyncStats(overflow=no, nonfinite=nf)
     if sync.relative_eb:
         scale = jnp.maximum(_global_rms(flat, axis_names), 1e-30)
+        # A non-finite gradient poisons the RMS too; pin the scale so the
+        # fallback's sanitized sum still rescales to something finite.
+        scale = jnp.where(jnp.isfinite(scale), scale, jnp.ones_like(scale))
         # eb must be a static trace-time constant shape; keep it as a traced
         # scalar by folding into the data instead: normalize, sync, rescale.
         flat = flat / scale
@@ -157,7 +196,9 @@ def _allreduce_flat(flat: jnp.ndarray, axis_names, sync: SyncConfig) -> jnp.ndar
         comm = _comm(axis_names[0], sync)
 
         def body(carry, xc):
-            return carry, comm.allreduce(xc).value
+            o, f = carry
+            res = comm.allreduce(xc)
+            return (o | res.overflow, f | res.nonfinite), res.value
     else:
         # ONE two-level plan over node × local replaces the sequential
         # per-axis allreduce loop: compression runs only on the slow
@@ -166,22 +207,30 @@ def _allreduce_flat(flat: jnp.ndarray, axis_names, sync: SyncConfig) -> jnp.ndar
         hcomm = _hier_comm(axis_names, sync)
 
         def body(carry, xc):
-            return carry, hcomm.allreduce(xc).value
+            o, f = carry
+            res = hcomm.allreduce(xc)
+            return (o | res.overflow, f | res.nonfinite), res.value
 
-    _, synced = lax.scan(body, (), padded.reshape(n_chunks, chunk))
+    (ovf, nf), synced = lax.scan(body, (no, no), padded.reshape(n_chunks, chunk))
     out = synced.reshape(-1)[:n]
     if sync.relative_eb:
         out = out * scale
-    return out
+    return out, SyncStats(overflow=ovf, nonfinite=nf)
 
 
-def dp_allreduce_grads(grads, axis_names: Sequence[str], sync: SyncConfig = SyncConfig()):
+def dp_allreduce_grads_stats(
+    grads, axis_names: Sequence[str], sync: SyncConfig = SyncConfig()
+):
     """Sum a gradient pytree across data-parallel mesh axes (gZ-accelerated).
 
-    Returns the summed pytree (callers divide by the DP degree for a mean).
-    Mesh axes may have ANY size (non-power-of-two data-parallel degrees
-    route through the remainder-stage redoub / generalized ring schedules
-    — DESIGN.md §7); an empty axis list is a config error, not a no-op.
+    Returns ``(summed_pytree, SyncStats)`` — callers divide by the DP
+    degree for a mean, and should consult ``stats.degraded`` before
+    applying the update when running ``on_overflow="flag"`` (with
+    ``"fallback"`` the values are already exact; the flags then just say
+    the lossless path ran).  Mesh axes may have ANY size (non-power-of-two
+    data-parallel degrees route through the remainder-stage redoub /
+    generalized ring schedules — DESIGN.md §7); an empty axis list is a
+    config error, not a no-op.
     """
     axis_names = tuple(axis_names)
     if not axis_names:
@@ -191,8 +240,14 @@ def dp_allreduce_grads(grads, axis_names: Sequence[str], sync: SyncConfig = Sync
         )
     flat, unravel = ravel_pytree(grads)
     dtype = flat.dtype
-    out = _allreduce_flat(flat.astype(jnp.float32), axis_names, sync)
-    return unravel(out.astype(dtype))
+    out, stats = _allreduce_flat(flat.astype(jnp.float32), axis_names, sync)
+    return unravel(out.astype(dtype)), stats
+
+
+def dp_allreduce_grads(grads, axis_names: Sequence[str], sync: SyncConfig = SyncConfig()):
+    """Back-compat single-return wrapper over :func:`dp_allreduce_grads_stats`
+    (drops the health flags — prefer the ``_stats`` form in new code)."""
+    return dp_allreduce_grads_stats(grads, axis_names, sync)[0]
 
 
 # ---------------------------------------------------------------------------

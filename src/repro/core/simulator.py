@@ -23,13 +23,14 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.collectives import GZConfig
-from repro.core import cost_model, error_budget
+from repro.core import cost_model, error_budget, faults
 
 __all__ = [
     "sim_allreduce_redoub",
     "sim_allreduce_ring",
     "sim_allreduce_intring",
     "sim_allreduce_hier",
+    "sim_allreduce_guarded",
     "sim_allgather_ring",
     "sim_reduce_scatter_ring",
     "sim_scatter_binomial",
@@ -168,6 +169,58 @@ def sim_allreduce_hier(xs: List[np.ndarray], topology, cfg: GZConfig,
     return [
         np.concatenate(node_shards[r // L])[:d] for r in range(len(xs))
     ]
+
+
+def sim_allreduce_guarded(xs: List[np.ndarray], cfg: GZConfig,
+                          *, algo: str = "redoub", spec=None):
+    """Global-view replay of the ``on_overflow="fallback"`` allreduce
+    epilogue (DESIGN.md §9), optionally under an injected fault.
+
+    Mirrors the device path stage for stage: poison the per-rank inputs
+    through the SAME seeded injector the communicators consult
+    (``faults.poison_np`` — bitwise identical constants), detect
+    non-finite input and capacity overflow (per-rank compressor probe
+    with the plan's own capacity factor; skipped when the input is
+    already non-finite, matching the device path where a poisoned stream
+    never reaches a meaningful pack), then either run the requested
+    compressed algorithm sim or the exact lossless recovery — the sum of
+    sanitized (NaN/Inf → 0) inputs, identical on every rank.
+
+    Returns ``(outs, flags)`` with ``flags = {"overflow", "nonfinite",
+    "fallback"}`` (python bools — the sim is the observable twin of the
+    device health counters).  Recovery sums in f32 on one host, so
+    device-vs-sim comparisons should use allclose, not bitwise: a psum's
+    reduction order differs from ``np.sum``.
+    """
+    n = len(xs)
+    poisoned = [
+        faults.poison_np(np.asarray(x, np.float32), r, spec)
+        for r, x in enumerate(xs)
+    ]
+    nonfinite = any(not np.isfinite(p).all() for p in poisoned)
+    overflow = False
+    if not nonfinite:
+        comp = cfg.compressor()
+        for p in poisoned:
+            c = comp.compress(jnp.asarray(p), cfg.eb)
+            if bool(np.asarray(c.overflowed())):
+                overflow = True
+                break
+    fallback = overflow or nonfinite
+    if fallback:
+        san = [np.where(np.isfinite(p), p, 0.0) for p in poisoned]
+        out = np.sum(san, axis=0, dtype=np.float32)
+        outs = [out.copy() for _ in range(n)]
+    else:
+        sim = {
+            "redoub": sim_allreduce_redoub,
+            "ring": sim_allreduce_ring,
+            "intring": sim_allreduce_intring,
+        }[algo]
+        outs = sim(poisoned, cfg)
+    return outs, {
+        "overflow": overflow, "nonfinite": nonfinite, "fallback": fallback,
+    }
 
 
 def sim_reduce_scatter_ring(xs: List[np.ndarray], cfg: GZConfig):

@@ -54,6 +54,13 @@ class TrainSetup:
     # mesh axis sizes at setup time (plan resolution is a cache hit inside
     # the traced step body) — empty when gradient sync is plain psum
     grad_comms: tuple = ()
+    # GradScaler-style degraded-step skip: when True, a train step whose
+    # gradient sync reports overflow or non-finite input keeps the OLD
+    # params/opt state (jnp.where merge, donation-safe) and flags it in
+    # metrics["skipped"] instead of applying a corrupted update.  Mostly
+    # useful with on_overflow="flag"; with "fallback" the values are
+    # already exact and steps are never skipped for overflow alone.
+    skip_on_overflow: bool = False
 
     def opt_specs(self):
         return {
@@ -91,6 +98,7 @@ def make_setup(
     grad_policy: str = "auto",
     remat: str = "full",
     fsdp: bool = True,
+    skip_on_overflow: bool = False,
 ) -> TrainSetup:
     """``fsdp=False`` replicates parameters over the data axis (no per-layer
     gathers) — the weights-resident serving mode (§Perf hillclimb 1).
@@ -129,7 +137,7 @@ def make_setup(
     return TrainSetup(
         cfg=cfg, ctx=ctx, model=model, mesh=mesh, defs=defs,
         specs=param_specs(defs), opt=opt, grad_gz=grad_gz,
-        grad_comms=grad_comms,
+        grad_comms=grad_comms, skip_on_overflow=skip_on_overflow,
     )
 
 
@@ -142,8 +150,14 @@ def _sync_grads(grads, specs, mesh_axes, grad_comms: dict):
 
     Reductions over dp axes with a bound communicator go through the
     compressed ``comm.allreduce`` (plan pre-resolved at setup time); the
-    tiny "model"-axis cases stay psum.
+    tiny "model"-axis cases stay psum.  Returns ``(grads, degraded)``
+    where ``degraded`` ORs every leaf's overflow/nonfinite health bit
+    (False scalar when every reduction is plain psum).
     """
+    # A mutable cell: jax.tree.map's per-leaf callback can't return two
+    # things without restructuring every caller, so the health bit
+    # accumulates on the side (trace-safe — it's just op building).
+    flag = [jnp.zeros((), jnp.bool_)]
 
     def sync(g, s):
         present = _axes_in_spec(s)
@@ -152,12 +166,25 @@ def _sync_grads(grads, specs, mesh_axes, grad_comms: dict):
                 continue
             comm = grad_comms.get(ax)
             if comm is not None:
-                g = comm.allreduce(g).value
+                res = comm.allreduce(g)
+                g = res.value
+                flag[0] = flag[0] | res.overflow | res.nonfinite
             else:
                 g = lax.psum(g, ax)
         return g
 
-    return jax.tree.map(sync, grads, specs)
+    out = jax.tree.map(sync, grads, specs)
+    return out, flag[0]
+
+
+def _skip_merge(degraded, new_tree, old_tree):
+    """Keep ``old_tree`` wherever this step degraded (replicated bool
+    scalar predicate), else take ``new_tree`` — the GradScaler-style skip.
+    Elementwise ``jnp.where`` (not lax.cond) so both sides stay donatable
+    and the merge vectorizes into the update itself."""
+    return jax.tree.map(
+        lambda new, old: jnp.where(degraded, old, new), new_tree, old_tree
+    )
 
 
 def _global_grad_norm(grads, specs, sizes) -> jnp.ndarray:
@@ -197,16 +224,29 @@ def make_train_step(setup: TrainSetup, batch_specs):
         loss = loss / scale
         for ax in ctx.dp_axes:
             loss = lax.pmean(loss, ax)
-        grads = _sync_grads(grads, specs, mesh_axes, dict(setup.grad_comms))
+        grads, degraded = _sync_grads(
+            grads, specs, mesh_axes, dict(setup.grad_comms)
+        )
+        # Each health bit is replicated over its OWN dp axis only; make
+        # the skip predicate globally consistent before it gates state.
+        degraded = lax.psum(degraded.astype(jnp.int32), mesh_axes) > 0
         gnorm = _global_grad_norm(grads, specs, sizes)
-        params, opt_state, om = adamw_update(
+        new_params, new_opt, om = adamw_update(
             params, grads, opt_state, setup.opt, grad_norm=gnorm
         )
-        metrics = {"loss": loss, "gnorm": om["gnorm"], "lr": om["lr"]}
-        return params, opt_state, metrics
+        skipped = jnp.zeros((), jnp.bool_)
+        if setup.skip_on_overflow:
+            new_params = _skip_merge(degraded, new_params, params)
+            new_opt = _skip_merge(degraded, new_opt, opt_state)
+            skipped = degraded
+        metrics = {
+            "loss": loss, "gnorm": om["gnorm"], "lr": om["lr"],
+            "skipped": skipped,
+        }
+        return new_params, new_opt, metrics
 
     ospecs = setup.opt_specs()
-    mspecs = {"loss": P(), "gnorm": P(), "lr": P()}
+    mspecs = {"loss": P(), "gnorm": P(), "lr": P(), "skipped": P()}
     step = shard_map(
         body,
         mesh=setup.mesh,

@@ -14,6 +14,7 @@ import pytest
 CHILD = pathlib.Path(__file__).parent / "_mp_collectives_child.py"
 NONPOW2_CHILD = pathlib.Path(__file__).parent / "_mp_nonpow2_child.py"
 HIER_CHILD = pathlib.Path(__file__).parent / "_mp_hier_child.py"
+FAULTS_CHILD = pathlib.Path(__file__).parent / "_mp_faults_child.py"
 SRC = str(pathlib.Path(__file__).parent.parent / "src")
 
 
@@ -58,6 +59,14 @@ def test_hier_allreduce_3x2():
     # Same checks with the node/local extents swapped: 3 nodes of 2 GPUs
     # resolve a different inter fan-out and shard size than 2 nodes of 3.
     _run_child(HIER_CHILD, GZ_HIER_TOPOLOGY="3x2")
+
+
+@pytest.mark.slow
+def test_faults_child_on_8_devices():
+    # ISSUE 7 acceptance: forced overflow / NaN poisoning / wire bitflips
+    # are detected and the in-trace lossless fallback recovers bitwise;
+    # undetected corruption is fatal inside the child.
+    _run_child(FAULTS_CHILD)
 
 
 @pytest.mark.slow

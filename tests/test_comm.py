@@ -355,7 +355,7 @@ def test_collective_result_single_device_identity():
 def test_collective_result_astuple():
     comm = _comm(n=1)
     r = comm.allreduce(jnp.ones((8,)))
-    v, o, w, ratio = r.astuple()
+    v, o, nf, w, ratio = r.astuple()
     assert w == 0 and ratio == 1.0
 
 

@@ -1,0 +1,338 @@
+"""Tier-1 (single-process) coverage for the degradation layer (ISSUE 7):
+config validation, the fault-injection harness, fallback plan resolution,
+degradation pricing, health counters and the skip-step helper.  The
+multi-device proof (fallback bitwise == psum under forced faults) lives
+in tests/_mp_faults_child.py."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import comm, cost_model, faults
+from repro.core.collectives import GZConfig
+from repro.core.compressed import (
+    MAX_CAPACITY_FACTOR,
+    capacity_words_for,
+    validate_capacity_factor,
+)
+from repro.core.grad_sync import SyncStats
+from repro.core.simulator import sim_allreduce_guarded
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container ships without hypothesis; the
+    HAVE_HYPOTHESIS = False  # deterministic shrink loop below still runs
+
+
+# ---------------------------------------------------------------------------
+# Knob validation at construction time (satellite)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad", [0.0, -0.5, MAX_CAPACITY_FACTOR + 0.01, 100.0])
+def test_capacity_factor_rejected_at_construction(bad):
+    with pytest.raises(ValueError, match="GZConfig.capacity_factor"):
+        GZConfig(eb=1e-3, capacity_factor=bad)
+    with pytest.raises(ValueError, match="capacity_factor"):
+        capacity_words_for(1024, bad, 256)
+
+
+def test_capacity_factor_legal_range_accepted():
+    for ok in (1e-6, 0.5, 1.0, MAX_CAPACITY_FACTOR):
+        GZConfig(eb=1e-3, capacity_factor=ok)
+        validate_capacity_factor(ok, knob="x")
+
+
+def test_capacity_words_for_rejects_degenerate_shapes():
+    with pytest.raises(ValueError, match="n=0"):
+        capacity_words_for(0, 0.5, 256)
+    with pytest.raises(ValueError, match="block=-1"):
+        capacity_words_for(16, 0.5, -1)
+
+
+def test_on_overflow_validated():
+    for ok in ("flag", "fallback", "raise"):
+        GZConfig(eb=1e-3, on_overflow=ok)
+    with pytest.raises(ValueError, match="on_overflow"):
+        GZConfig(eb=1e-3, on_overflow="panic")
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.floats(allow_nan=True, allow_infinity=True, width=32))
+    def test_capacity_factor_property(cf):
+        legal = 0.0 < cf <= MAX_CAPACITY_FACTOR
+        if legal:
+            validate_capacity_factor(cf, knob="x")
+        else:
+            with pytest.raises(ValueError):
+                validate_capacity_factor(cf, knob="x")
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec + numpy twin
+# ---------------------------------------------------------------------------
+
+
+def test_faultspec_validates():
+    with pytest.raises(ValueError, match="kind"):
+        faults.FaultSpec(kind="gamma-ray")
+    with pytest.raises(ValueError, match="n"):
+        faults.FaultSpec(kind="nan", n=0)
+    s = faults.FaultSpec(kind="nan", ranks=[2, 0])
+    assert s.ranks == (2, 0)  # normalized to an int tuple (hashable)
+
+
+def test_poison_np_deterministic_and_targeted():
+    x = np.linspace(0.0, 1.0, 64, dtype=np.float32)
+    spec = faults.FaultSpec(kind="nan", ranks=(1,), seed=9, n=4)
+    a = faults.poison_np(x, 1, spec)
+    b = faults.poison_np(x, 1, spec)
+    assert np.array_equal(a, b, equal_nan=True)  # same seed, same holes
+    assert np.isnan(a).sum() == 4
+    # non-target rank untouched; bitflip never touches inputs
+    assert np.array_equal(faults.poison_np(x, 0, spec), x)
+    bf = faults.FaultSpec(kind="bitflip", ranks=(1,))
+    assert np.array_equal(faults.poison_np(x, 1, bf), x)
+    inf = faults.poison_np(x, 1, dataclasses.replace(spec, kind="inf"))
+    assert np.isinf(inf).sum() == 4
+    noisy = faults.poison_np(x, 1, faults.FaultSpec(kind="overflow", ranks=(1,)))
+    assert np.abs(noisy).max() > 1e3  # full replacement with sigma-1e6 noise
+
+
+def test_inject_scopes_the_active_spec():
+    assert faults.active() is None
+    spec = faults.FaultSpec(kind="inf")
+    with faults.inject(spec) as s:
+        assert faults.active() is spec and s is spec
+    assert faults.active() is None
+
+
+def test_hooks_are_identity_without_a_fault():
+    x = jnp.arange(8.0)
+    assert np.array_equal(np.asarray(faults.maybe_poison_input(x, "x")), np.asarray(x))
+    tree = (jnp.zeros((4,), jnp.uint32), jnp.ones((2,), jnp.int32))
+    out = faults.maybe_corrupt_wire(tree, "x")
+    assert out is tree
+
+
+# ---------------------------------------------------------------------------
+# Plan resolution carries the fallback sub-plan + the new knobs
+# ---------------------------------------------------------------------------
+
+
+def _plan(cfg, n=4096, axis=8, op="allreduce"):
+    c = comm.GZCommunicator("x", config=cfg, axis_size=axis)
+    return c.plan(op, (n,), np.float32)
+
+
+def test_plan_resolves_fallback_subplan():
+    comm.clear_plan_cache()
+    for op in ("allreduce", "reduce_scatter", "scatter", "broadcast"):
+        n = 4096
+        p = _plan(GZConfig(eb=1e-3), n=n, op=op)
+        fb = p.fallback
+        assert fb is not None and fb.op == op
+        assert fb.kind == comm._FALLBACK_KIND[op]
+        assert fb.axis_size == 8
+        assert fb.wire_bytes == n * 4  # raw f32, no compression
+        assert fb.t_model > 0.0
+
+
+def test_plan_cache_keys_on_overflow_policy():
+    comm.clear_plan_cache()
+    p_flag = _plan(GZConfig(eb=1e-3, on_overflow="flag"))
+    p_fb = _plan(GZConfig(eb=1e-3, on_overflow="fallback"))
+    p_vs = _plan(GZConfig(eb=1e-3, verify_streams=True))
+    assert p_flag is not p_fb and p_flag is not p_vs
+    assert p_flag.on_overflow == "flag" and p_fb.on_overflow == "fallback"
+    assert p_vs.verify_streams
+    # same knobs -> same memoized object
+    assert _plan(GZConfig(eb=1e-3, on_overflow="fallback")) is p_fb
+
+
+def test_collective_result_nonfinite_field_and_degraded():
+    z = jnp.zeros((), jnp.bool_)
+    o = jnp.ones((), jnp.bool_)
+    r = comm.CollectiveResult(jnp.zeros((4,)), z, o, 16, 2.0)
+    v, ovf, nf, w, ratio = r.astuple()
+    assert w == 16 and ratio == 2.0
+    assert bool(r.degraded)
+    r2 = comm.CollectiveResult(jnp.zeros((4,)), z, z, 16, 2.0)
+    assert not bool(r2.degraded)
+
+
+# ---------------------------------------------------------------------------
+# Degradation pricing
+# ---------------------------------------------------------------------------
+
+
+def test_fallback_time_sanity():
+    hw = cost_model.TPU_V5E
+    D = 1 << 20
+    for op in ("allreduce", "reduce_scatter", "allgather", "scatter",
+               "broadcast", "all_to_all"):
+        t = cost_model.fallback_time(op, D, 8, hw)
+        assert t > 0.0, op
+        assert cost_model.fallback_time(op, D, 1, hw) == 0.0, op
+    # allreduce fallback is exactly the uncompressed-ring baseline
+    assert cost_model.fallback_time("allreduce", D, 8, hw) == \
+        cost_model.allreduce_uncompressed_ring(D, 8, hw)
+    with pytest.raises(ValueError, match="unknown op"):
+        cost_model.fallback_time("gossip", D, 8, hw)
+
+
+def test_expected_collective_time_clamps_probability():
+    assert cost_model.expected_collective_time(1.0, 2.0, 0.0) == 1.0
+    assert cost_model.expected_collective_time(1.0, 2.0, 1.0) == 3.0
+    assert cost_model.expected_collective_time(1.0, 2.0, -5.0) == 1.0
+    assert cost_model.expected_collective_time(1.0, 2.0, 7.0) == 3.0
+    # a degraded call pays BOTH schedules (overflow known post-exchange)
+    assert cost_model.expected_collective_time(1.0, 2.0, 0.5) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Health counters (pure-python layer; the traced path is proven in the
+# multi-device child)
+# ---------------------------------------------------------------------------
+
+
+def test_health_counter_masking_and_reset():
+    comm.clear_health_stats()
+    comm.enable_health_tracking(True)
+    try:
+        key = ("allreduce", "'x'")
+        comm._health_cb(key, True, True, False, True)
+        comm._health_cb(key, False, True, False, True)  # non-root: ignored
+        comm._health_cb(key, True, False, True, False)
+        stats = comm.health_stats()
+        assert stats[key] == {
+            "calls": 2, "overflow": 1, "nonfinite": 1, "fallbacks": 1,
+        }
+        # health_stats returns a snapshot, not the live dict
+        stats[key]["calls"] = 99
+        assert comm.health_stats()[key]["calls"] == 2
+    finally:
+        comm.enable_health_tracking(False)
+    comm.clear_health_stats()
+    assert comm.health_stats() == {}
+
+
+# ---------------------------------------------------------------------------
+# Guarded simulator replay (numpy twin of the device epilogue)
+# ---------------------------------------------------------------------------
+
+
+def _smooth(n, d=2048, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.cumsum(rng.normal(0, 0.01, d)).astype(np.float32)
+            for _ in range(n)]
+
+
+def test_sim_guarded_clean_path():
+    xs = _smooth(4)
+    outs, flags = sim_allreduce_guarded(xs, GZConfig(eb=1e-3))
+    assert flags == {"overflow": False, "nonfinite": False, "fallback": False}
+    assert np.allclose(outs[0], np.sum(xs, axis=0), atol=1e-2)
+
+
+def test_sim_guarded_nan_recovers_exact_sanitized_sum():
+    xs = _smooth(4)
+    spec = faults.FaultSpec(kind="nan", ranks=(2,), seed=5, n=8)
+    outs, flags = sim_allreduce_guarded(xs, GZConfig(eb=1e-3), spec=spec)
+    assert flags["nonfinite"] and flags["fallback"] and not flags["overflow"]
+    twins = [faults.poison_np(x, r, spec) for r, x in enumerate(xs)]
+    want = np.sum([np.where(np.isfinite(t), t, 0.0) for t in twins],
+                  axis=0, dtype=np.float32)
+    assert np.array_equal(outs[0], want)
+    assert all(np.array_equal(o, outs[0]) for o in outs)
+
+
+def test_sim_guarded_overflow_fault():
+    xs = _smooth(4)
+    spec = faults.FaultSpec(kind="overflow", ranks=(0,), seed=2)
+    outs, flags = sim_allreduce_guarded(
+        xs, GZConfig(eb=1e-3, capacity_factor=0.8), spec=spec)
+    assert flags["overflow"] and flags["fallback"] and not flags["nonfinite"]
+    assert np.isfinite(outs[0]).all()
+
+
+def test_shrink_capacity_until_overflow_fires():
+    """Geometric shrink of capacity_factor to the first failing value —
+    the hypothesis-style shrinking property, dependency-free: at every
+    passing factor the flags stay down; at the first failing factor the
+    sim recovers the exact sanitized sum."""
+    xs = _smooth(3, d=4096, seed=1)
+    factor, first_failing = 1.2, None
+    while factor > 1e-3:
+        outs, flags = sim_allreduce_guarded(
+            xs, GZConfig(eb=1e-5, capacity_factor=factor))
+        if flags["overflow"]:
+            first_failing = factor
+            want = np.sum(xs, axis=0, dtype=np.float32)
+            assert np.array_equal(outs[0], want)
+            break
+        assert not flags["fallback"]
+        factor /= 2.0
+    assert first_failing is not None, \
+        "no capacity_factor in (1e-3, 1.2] overflowed 1e-5-eb streams"
+
+
+# ---------------------------------------------------------------------------
+# SyncStats + the train-step skip merge
+# ---------------------------------------------------------------------------
+
+
+def test_sync_stats_degraded_property():
+    t = jnp.ones((), jnp.bool_)
+    f = jnp.zeros((), jnp.bool_)
+    assert bool(SyncStats(overflow=t, nonfinite=f).degraded)
+    assert bool(SyncStats(overflow=f, nonfinite=t).degraded)
+    assert not bool(SyncStats(overflow=f, nonfinite=f).degraded)
+    leaves, _ = jax.tree.flatten(SyncStats(overflow=t, nonfinite=f))
+    assert len(leaves) == 2  # registered pytree: scan-carry compatible
+
+
+def test_skip_merge_keeps_old_state_when_degraded():
+    from repro.launch.training import _skip_merge
+
+    old = {"w": jnp.zeros((4,)), "step": jnp.int32(7)}
+    new = {"w": jnp.ones((4,)), "step": jnp.int32(8)}
+    kept = _skip_merge(jnp.bool_(True), new, old)
+    assert np.array_equal(np.asarray(kept["w"]), np.zeros(4))
+    assert int(kept["step"]) == 7
+    taken = _skip_merge(jnp.bool_(False), new, old)
+    assert np.array_equal(np.asarray(taken["w"]), np.ones(4))
+    assert int(taken["step"]) == 8
+
+
+def test_sync_grads_accumulates_health_flags():
+    from repro.launch.training import _sync_grads
+    from jax.sharding import PartitionSpec as P
+
+    class FakeComm:
+        def __init__(self, ovf):
+            self.ovf = ovf
+
+        def allreduce(self, g):
+            return comm.CollectiveResult(
+                g * 2.0, jnp.bool_(self.ovf), jnp.zeros((), jnp.bool_), 0, 1.0
+            )
+
+    grads = {"a": jnp.ones((4,)), "b": jnp.ones((2,))}
+    specs = {"a": P(), "b": P()}
+    out, degraded = _sync_grads(grads, specs, ("data",),
+                                {"data": FakeComm(ovf=True)})
+    assert bool(degraded)
+    assert np.array_equal(np.asarray(out["a"]), 2 * np.ones(4))
+    _, clean = _sync_grads(grads, specs, ("data",), {"data": FakeComm(False)})
+    assert not bool(clean)
+    # no communicator bound -> plain psum path, flag stays down (trivial
+    # here: no mesh axis matches, so leaves pass through untouched)
+    _, none = _sync_grads(grads, specs, (), {})
+    assert not bool(none)
