@@ -165,6 +165,47 @@ def check_faults_overhead(here: pathlib.Path) -> None:
           f"{len(base)} (op, axis-size) points")
 
 
+def check_codec_ratio(here: pathlib.Path) -> None:
+    """Per-codec wire ratio vs the committed BENCH_codec.json.
+
+    ``payload_bytes``/``ratio`` are deterministic given (data, eb) — the
+    bench compresses a fixed-seed tensor — so the comparison is EXACT and
+    any drift is fatal regardless of ``--strict``: an entropy-stage or
+    provisioning change that quietly fattens the wire (or a registry edit
+    that silently swaps a codec's compressor) is a structural regression
+    on the ISSUE 8 contract and must not hide inside a timing threshold.
+    Wall-clock fields (``*_us``) are machine-specific and excluded.
+    """
+    from benchmarks import codec_bench
+
+    base_path = here / "BENCH_codec.json"
+    if not base_path.exists():
+        # A missing baseline must not read as "no regression".
+        print(f"::error::codec ratio baseline missing: {base_path}")
+        sys.exit(1)
+    base = json.loads(base_path.read_text())["codec"]
+    now = codec_bench.run([], record_baseline=False)
+    bad = []
+    for name, rec in sorted(base.items()):
+        cur = now.get(name)
+        if cur is None:
+            bad.append(f"{name}: baseline codec missing from current run")
+            continue
+        for field, want in sorted(rec.items()):
+            if field.endswith("_us"):
+                continue  # wall-clock: machine-specific, not comparable
+            got = cur.get(field)
+            if got != want:
+                bad.append(f"{name}.{field}: {want} -> {got} "
+                           f"(re-record the baseline if intended)")
+    if bad:
+        for msg in bad:
+            print(f"::error::codec ratio regression: {msg}")
+        sys.exit(1)
+    print(f"codec ratio: payload/ratio match baseline for codecs "
+          f"{sorted(base)}")
+
+
 def _ratios(record):
     """{size: {fused metric: fused_us / reference_us}} for a benchmark
     record shaped {size: {"fused": {..._us}, "unfused"|"two_kernel": {...}}}.
@@ -216,6 +257,7 @@ def main() -> None:
     check_scatter_wire(here)
     check_hier_wire(here)
     check_faults_overhead(here)
+    check_codec_ratio(here)
 
     regressions = []
 

@@ -11,6 +11,7 @@ import traceback
 from benchmarks import (
     allreduce_bench,
     breakdown,
+    codec_bench,
     compressor_char,
     faults_bench,
     hier_bench,
@@ -32,6 +33,7 @@ MODULES = [
     ("beyond_moe_a2a_ablation", moe_a2a_ablation),
     ("issue2_fused_hop", hop_bench),
     ("issue7_faults", faults_bench),
+    ("issue8_codecs", codec_bench),
 ]
 
 

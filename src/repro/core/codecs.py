@@ -1,0 +1,234 @@
+"""Pluggable wire-codec registry (DESIGN.md §10).
+
+Mirrors the policy registry in ``comm``: a codec is a named entry that
+says how payload bytes become wire bytes — which compressor class to
+build, whether it has a fused single-pass hop kernel, how its capacity is
+provisioned, and how the planner should price it before calibration has
+measured it.  ``GZConfig.codec`` names an entry (or ``"auto"`` to let the
+plan layer pick per tensor class from modeled collective time), the plan
+cache keys on it, and the execute layer resolves the compressor instance
+from the frozen plan — there is no module-global compressor anymore
+(``compressor.DEFAULT`` is a deprecation shim).
+
+Built-in entries:
+
+  * ``lorenzo``          — today's dense per-block bitpack, the bitwise-
+                           unchanged default;
+  * ``lorenzo+entropy``  — the same quantizer with a per-sub-block
+                           entropy trim on the wire (strictly smaller
+                           streams, error bound untouched);
+  * ``lossless``         — the entropy stage over bitcast IEEE words
+                           (eb=0 semantics, exact round trip);
+  * ``passthrough``      — raw f32 words in the same container.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core import compressor as compressor_lib
+from repro.core import cost_model
+from repro.core.compressed import capacity_words_for
+from repro.kernels import ops
+
+__all__ = [
+    "AUTO",
+    "CodecSpec",
+    "register_codec",
+    "codec_names",
+    "get_codec",
+    "auto_codecs",
+    "validate_codec",
+    "codec_capacity_words",
+    "build_compressor",
+]
+
+# Sentinel config value: the plan layer resolves a concrete codec from
+# modeled collective time.  Never a registry key.
+AUTO = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecSpec:
+    """One wire-codec registry entry.
+
+    Attributes:
+      name: registry key (``GZConfig.codec`` value, plan-cache key part).
+      factory: ``(capacity_factor, fused) -> compressor`` — builds the
+        instance the execute layer uses; must honor the ``Compressed``
+        container protocol (compress/decompress/decompress_reduce/
+        decompress_reduce_compress).
+      fused_hop: whether the codec has a single-pass fused hop kernel
+        (unpack+reduce+repack).  When False the plan layer downgrades
+        ``fused_hop`` to the two-pass composition and records why.
+      lossy: bounded-lossy (the error bound applies) vs bit-exact.
+      eb_scaled: the achievable ratio tracks the caller's assumed dense
+        ratio (quantized codecs) vs being data-intrinsic (lossless /
+        passthrough ship the same bytes whatever the bound).
+      capacity_factor: provisioning override (None = the config knob; the
+        entropy stream is never longer than dense, so it shares the dense
+        provisioning).
+      capacity_words: structural provisioning hook ``n_elems -> words``
+        that bypasses factor-based sizing entirely (passthrough).
+      terms: modeled default ``CodecTerms`` used by the planner until
+        ``comm.calibrate()`` measures this codec on this machine.
+      auto_selectable: legal candidate for ``codec="auto"``.
+      description: one-liner for docs/benchmarks.
+    """
+
+    name: str
+    factory: Callable
+    fused_hop: bool
+    lossy: bool
+    eb_scaled: bool
+    terms: cost_model.CodecTerms
+    description: str
+    auto_selectable: bool = True
+    capacity_factor: Optional[float] = None
+    capacity_words: Optional[Callable] = None
+
+
+_CODECS: dict = {}
+
+
+def register_codec(spec: CodecSpec) -> None:
+    """Register (or replace) a wire codec."""
+    if not isinstance(spec, CodecSpec):
+        raise TypeError(f"register_codec needs a CodecSpec, got {spec!r}")
+    if spec.name == AUTO:
+        raise ValueError(f"codec name {AUTO!r} is reserved for planner selection")
+    if spec.terms.codec != spec.name:
+        raise ValueError(
+            f"codec {spec.name!r}: terms are labeled {spec.terms.codec!r}"
+        )
+    _CODECS[spec.name] = spec
+
+
+def codec_names() -> tuple:
+    return tuple(_CODECS)
+
+
+def get_codec(name: str) -> CodecSpec:
+    try:
+        return _CODECS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown codec {name!r}; registered: {sorted(_CODECS)} "
+            f"(or {AUTO!r} for planner selection)"
+        ) from None
+
+
+def auto_codecs() -> tuple:
+    """Candidate codecs the planner may pick for ``codec='auto'``."""
+    return tuple(n for n, s in _CODECS.items() if s.auto_selectable)
+
+
+def validate_codec(name: str, *, knob: str) -> None:
+    """Constructor-time validation for codec knobs (``auto`` allowed)."""
+    if name != AUTO:
+        try:
+            get_codec(name)
+        except ValueError as e:
+            raise ValueError(f"{knob}={name!r}: {e}") from None
+
+
+def codec_capacity_words(
+    name: str, n_elems: int, capacity_factor: float, block: int = ops.BLOCK
+) -> int:
+    """Provisioned packed-stream words for ``n_elems`` f32 under ``name``.
+
+    The single provisioning authority shared by the compressor factories
+    and the plan layer's wire accounting, so the bytes a plan prices are
+    the bytes the execute layer ships.
+    """
+    spec = get_codec(name)
+    if spec.capacity_words is not None:
+        return int(spec.capacity_words(n_elems))
+    factor = (
+        spec.capacity_factor if spec.capacity_factor is not None
+        else capacity_factor
+    )
+    return capacity_words_for(n_elems, factor, block)
+
+
+def build_compressor(name: str, *, capacity_factor: float, fused: bool):
+    """Resolve a compressor instance from a codec entry.
+
+    This replaces the old module-global ``compressor.DEFAULT``: the
+    instance is derived from the (frozen) plan/config, so two configs with
+    different codecs can never alias one global.
+    """
+    if name == AUTO:
+        raise ValueError(
+            "codec='auto' must be resolved by the plan layer before the "
+            "execute layer builds a compressor (Plan.codec is always "
+            "concrete); construct the config from plan.as_config()."
+        )
+    spec = get_codec(name)
+    factor = (
+        spec.capacity_factor if spec.capacity_factor is not None
+        else capacity_factor
+    )
+    return spec.factory(factor, fused)
+
+
+register_codec(CodecSpec(
+    name="lorenzo",
+    factory=lambda cf, fused: compressor_lib.ErrorBoundedLorenzo(
+        capacity_factor=cf, fused=fused
+    ),
+    fused_hop=True,
+    lossy=True,
+    eb_scaled=True,
+    terms=cost_model.CodecTerms("lorenzo"),
+    description="dense per-block bitpack over Lorenzo-quantized codes "
+                "(the gZCCL default)",
+))
+
+register_codec(CodecSpec(
+    name="lorenzo+entropy",
+    factory=lambda cf, fused: compressor_lib.EntropyLorenzo(
+        capacity_factor=cf, fused=fused
+    ),
+    fused_hop=False,  # no fused unpack+reduce+repack kernel (yet)
+    lossy=True,
+    eb_scaled=True,
+    # Modeled default until calibration: the per-sub-block trim buys
+    # ~25-40% on smooth tensors (BENCH_codec.json), at slightly more
+    # pack-side arithmetic which the measured terms capture when fitted.
+    terms=cost_model.CodecTerms("lorenzo+entropy", ratio_scale=1.3),
+    description="same quantizer, per-sub-block entropy-coded wire "
+                "(smaller streams, identical error bound)",
+))
+
+register_codec(CodecSpec(
+    name="lossless",
+    factory=lambda cf, fused: compressor_lib.EntropyLorenzo(
+        capacity_factor=cf, fused=fused, lossless=True
+    ),
+    fused_hop=False,
+    lossy=False,
+    eb_scaled=False,
+    # Structural worst case (each block's sub-streams total <= BLOCK
+    # words): overflow is impossible by construction, and the bound is
+    # tighter than any factor-based provisioning.
+    capacity_words=compressor_lib.lossless_capacity_words,
+    terms=cost_model.CodecTerms("lossless", ratio_abs=1.3),
+    description="entropy stage over bitcast IEEE words: eb=0 semantics, "
+                "bit-exact round trip",
+))
+
+register_codec(CodecSpec(
+    name="passthrough",
+    factory=lambda cf, fused: compressor_lib.Passthrough(),
+    fused_hop=False,
+    lossy=False,
+    eb_scaled=False,
+    capacity_words=lambda n: max(int(n), 8),
+    terms=cost_model.CodecTerms(
+        "passthrough", ratio_abs=1.0, cmp_overhead_us=1.0
+    ),
+    auto_selectable=False,  # explicit-opt-in control codec
+    description="raw f32 words in the compressed container (control / "
+                "compression-never-pays escape hatch)",
+))

@@ -65,11 +65,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import bitpack, cost_model, error_budget, faults
+from repro.core import bitpack, codecs, cost_model, error_budget, faults
 from repro.core.compressed import (
     Compressed, capacity_words_for, validate_capacity_factor,
 )
-from repro.core.compressor import DEFAULT, ErrorBoundedLorenzo
 from repro.kernels import ops
 from repro.kernels.ref import bitwidth_of as _ref_bitwidth
 
@@ -130,6 +129,15 @@ class GZConfig:
     compressed ppermute and treats a mismatch exactly like overflow
     (the stream is unusable either way) — detects in-flight wire
     corruption at the cost of one extra scalar ppermute per hop.
+
+    ``codec`` names a wire-codec registry entry (``repro.core.codecs``,
+    DESIGN.md §10): how payload bytes become wire bytes.  "lorenzo" (the
+    default) is the dense bitpack — bitwise-unchanged pre-registry
+    behavior; "lorenzo+entropy" adds the per-sub-block entropy trim;
+    "lossless" / "passthrough" are the eb-free endpoints.  "auto" defers
+    the choice to the plan layer, which prices every auto-selectable
+    codec through the cost model (calibrated per-codec terms when
+    available) and freezes the winner into ``Plan.codec``.
     """
 
     eb: float = 1e-4
@@ -141,6 +149,7 @@ class GZConfig:
     fused_hop: bool = True
     on_overflow: str = "flag"  # flag | fallback | raise
     verify_streams: bool = False
+    codec: str = "lorenzo"  # registry entry name, or "auto"
 
     def __post_init__(self):
         # Fail at construction time with an actionable message, not via a
@@ -162,10 +171,16 @@ class GZConfig:
                 "'fallback' (in-trace lossless re-execute) or 'raise' "
                 f"(host-side error); got {self.on_overflow!r}"
             )
+        codecs.validate_codec(self.codec, knob="GZConfig.codec")
 
-    def compressor(self) -> ErrorBoundedLorenzo:
-        return ErrorBoundedLorenzo(
-            capacity_factor=self.capacity_factor, fused=self.fused
+    def compressor(self):
+        """The wire compressor this config's codec entry resolves to.
+
+        ``codec="auto"`` has no compressor — the plan layer must freeze a
+        concrete codec first (``Plan.as_config()`` always does).
+        """
+        return codecs.build_compressor(
+            self.codec, capacity_factor=self.capacity_factor, fused=self.fused
         )
 
 
@@ -1226,6 +1241,17 @@ def gz_allgather(
 # ---------------------------------------------------------------------------
 
 
+def _wire_container(comp, packed, bitwidth, anchor, eb, n) -> Compressed:
+    """Rebuild a ``Compressed`` from bare wire parts on the receive side
+    (the batched scatter/all-to-all paths ship the leaves, not the pytree);
+    the true stream size is recomputed from the codec's own metadata."""
+    return Compressed(
+        packed=packed, bitwidth=bitwidth, anchor=anchor,
+        nwords=comp.stream_nwords(bitwidth, n),
+        eb=jnp.asarray(eb, jnp.float32), n=n, block=ops.BLOCK,
+    )
+
+
 def _scatter_held_buffers(x_full, n, cfg: GZConfig):
     """Batched per-chunk compression into the tree's held buffers.
 
@@ -1242,27 +1268,44 @@ def _scatter_held_buffers(x_full, n, cfg: GZConfig):
     rows = ops.n_blocks_for(chunk_n)
     B = ops.BLOCK
     chunks = x_full.astype(jnp.float32).reshape(n, chunk_n)
-    x2d = (
-        jnp.zeros((n, rows * B), jnp.float32).at[:, :chunk_n].set(chunks)
-    ).reshape(n * rows, B)
-    codes, bw, anchor = ops.quantize(x2d, cfg.eb)
-    cap = capacity_words_for(chunk_n, cfg.capacity_factor, B)
-    ovf = jnp.zeros((), jnp.bool_)
-    pk_list = []
-    for i in range(n):
-        pk, nw = bitpack.pack(
-            codes[i * rows : (i + 1) * rows], bw[i * rows : (i + 1) * rows], cap
-        )
-        pk_list.append(pk)
-        ovf |= nw > cap
     n_virt = 1 << cost_model.steps_for("binomial", n)
-    packed0 = jnp.stack(pk_list)  # (n, cap)
+    if cfg.codec != "lorenzo":
+        # Non-default codecs go through the compressor interface per chunk
+        # (their pack kernels are not batched across chunk boundaries);
+        # the held-buffer layout (packed, bitwidth, anchor) is identical.
+        comp = cfg.compressor()
+        ovf = jnp.zeros((), jnp.bool_)
+        cs = []
+        for i in range(n):
+            c = comp.compress(chunks[i], cfg.eb)
+            cs.append(c)
+            ovf |= c.overflowed()
+        packed0 = jnp.stack([c.packed for c in cs])
+        bw = jnp.stack([c.bitwidth for c in cs])
+        anchor = jnp.stack([c.anchor for c in cs])
+    else:
+        x2d = (
+            jnp.zeros((n, rows * B), jnp.float32).at[:, :chunk_n].set(chunks)
+        ).reshape(n * rows, B)
+        codes, bw, anchor = ops.quantize(x2d, cfg.eb)
+        cap = capacity_words_for(chunk_n, cfg.capacity_factor, B)
+        ovf = jnp.zeros((), jnp.bool_)
+        pk_list = []
+        for i in range(n):
+            pk, nw = bitpack.pack(
+                codes[i * rows : (i + 1) * rows],
+                bw[i * rows : (i + 1) * rows], cap
+            )
+            pk_list.append(pk)
+            ovf |= nw > cap
+        packed0 = jnp.stack(pk_list)  # (n, cap)
+        bw = bw.reshape(n, rows)
+        anchor = anchor.reshape(n, rows)
     held = (
         jnp.zeros((n_virt,) + packed0.shape[1:], packed0.dtype).at[:n].set(
             packed0),
-        jnp.zeros((n_virt, rows), bw.dtype).at[:n].set(bw.reshape(n, rows)),
-        jnp.zeros((n_virt, rows), anchor.dtype).at[:n].set(
-            anchor.reshape(n, rows)),
+        jnp.zeros((n_virt, rows), bw.dtype).at[:n].set(bw),
+        jnp.zeros((n_virt, rows), anchor.dtype).at[:n].set(anchor),
     )
     return held, rows, chunk_n, n_virt, ovf
 
@@ -1410,6 +1453,10 @@ def _execute_scatter(x_full, axis_name, cfg: GZConfig, *, root: int = 0,
     my_pk = jnp.take(held_packed, r, axis=0)
     my_bw = jnp.take(held_bw, r, axis=0)
     my_anchor = jnp.take(held_anchor, r, axis=0)
+    if cfg.codec != "lorenzo":
+        comp = cfg.compressor()
+        c = _wire_container(comp, my_pk, my_bw, my_anchor, cfg.eb, chunk_n)
+        return comp.decompress(c).astype(dtype), ovf
     if cfg.fused:
         x2d = ops.unpack_dequantize(my_pk, my_bw, my_anchor, cfg.eb)
     else:
@@ -1475,22 +1522,35 @@ def _execute_all_to_all(x, axis_name, cfg: GZConfig):
     B = ops.BLOCK
     rows = ops.n_blocks_for(chunk_n)
     flat = x.reshape(n, chunk_n).astype(jnp.float32)
-    x2d = (
-        jnp.zeros((n, rows * B), jnp.float32).at[:, :chunk_n].set(flat)
-    ).reshape(n * rows, B)
-    codes, bw, anchor = ops.quantize(x2d, cfg.eb)
-    cap = capacity_words_for(chunk_n, cfg.capacity_factor, B)
-    ovf = jnp.zeros((), jnp.bool_)
-    pk = []
-    for i in range(n):
-        p, nw = bitpack.pack(
-            codes[i * rows : (i + 1) * rows], bw[i * rows : (i + 1) * rows], cap
-        )
-        pk.append(p)
-        ovf |= nw > cap
-    packed = jnp.stack(pk)  # (n, cap)
-    bw = bw.reshape(n, rows)
-    anchor = anchor.reshape(n, rows)
+    if cfg.codec != "lorenzo":
+        comp = cfg.compressor()
+        ovf = jnp.zeros((), jnp.bool_)
+        cs = []
+        for i in range(n):
+            c = comp.compress(flat[i], cfg.eb)
+            cs.append(c)
+            ovf |= c.overflowed()
+        packed = jnp.stack([c.packed for c in cs])
+        bw = jnp.stack([c.bitwidth for c in cs])
+        anchor = jnp.stack([c.anchor for c in cs])
+    else:
+        x2d = (
+            jnp.zeros((n, rows * B), jnp.float32).at[:, :chunk_n].set(flat)
+        ).reshape(n * rows, B)
+        codes, bw, anchor = ops.quantize(x2d, cfg.eb)
+        cap = capacity_words_for(chunk_n, cfg.capacity_factor, B)
+        ovf = jnp.zeros((), jnp.bool_)
+        pk = []
+        for i in range(n):
+            p, nw = bitpack.pack(
+                codes[i * rows : (i + 1) * rows],
+                bw[i * rows : (i + 1) * rows], cap
+            )
+            pk.append(p)
+            ovf |= nw > cap
+        packed = jnp.stack(pk)  # (n, cap)
+        bw = bw.reshape(n, rows)
+        anchor = anchor.reshape(n, rows)
     # ship: tiled=False removes the leading (== axis size) dim and stacks
     # the received peers' chunks back at position 0
     recv = jax.tree.map(
@@ -1500,13 +1560,19 @@ def _execute_all_to_all(x, axis_name, cfg: GZConfig):
     )
     rp, rb, ra = recv
     out = []
-    for i in range(n):
-        if cfg.fused:
-            x2d = ops.unpack_dequantize(rp[i], rb[i], ra[i], cfg.eb)
-        else:
-            c = bitpack.unpack(rp[i], rb[i], B)
-            x2d = ops.dequantize(c, ra[i], cfg.eb)
-        out.append(ops.from_blocks(x2d, chunk_n))
+    if cfg.codec != "lorenzo":
+        comp = cfg.compressor()
+        for i in range(n):
+            c = _wire_container(comp, rp[i], rb[i], ra[i], cfg.eb, chunk_n)
+            out.append(comp.decompress(c))
+    else:
+        for i in range(n):
+            if cfg.fused:
+                x2d = ops.unpack_dequantize(rp[i], rb[i], ra[i], cfg.eb)
+            else:
+                c = bitpack.unpack(rp[i], rb[i], B)
+                x2d = ops.dequantize(c, ra[i], cfg.eb)
+            out.append(ops.from_blocks(x2d, chunk_n))
     out = jnp.stack(out).reshape(shape).astype(dtype)
     return out, ovf
 

@@ -66,7 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import cost_model, error_budget, faults
+from repro.core import codecs, cost_model, error_budget, faults
 from repro.core.compressed import capacity_words_for
 from repro.kernels import ops
 
@@ -87,7 +87,9 @@ __all__ = [
     "clear_health_stats",
     "fit_hardware",
     "fit_network",
+    "fit_codec_terms",
     "measure_codec",
+    "measure_codecs",
     "measure_ppermute",
 ]
 
@@ -196,6 +198,17 @@ class Plan:
     # The resolved lossless degradation target — always present (the
     # fallback schedule exists whether or not the policy executes it).
     fallback: Optional[FallbackPlan] = None
+    # Wire codec (DESIGN.md §10): always a CONCRETE registry name, never
+    # "auto" — the planner resolves selection before freezing the plan.
+    # ``codec_ratio`` is the measured-or-modeled payload ratio the codec
+    # was priced at (calibrated ``Hardware.codec_terms`` win over the
+    # registry's modeled defaults); ``ratio`` above stays the provisioned
+    # wire reduction.  ``notes`` records resolution decisions a caller
+    # would otherwise have to re-derive (codec forcing, fused-hop
+    # downgrades, auto selection).
+    codec: str = "lorenzo"
+    codec_ratio: float = 1.0
+    notes: tuple = ()
 
     def as_config(self):
         """The concrete GZConfig the execute layer dispatches on."""
@@ -211,6 +224,7 @@ class Plan:
             fused_hop=self.fused_hop,
             on_overflow=self.on_overflow,
             verify_streams=self.verify_streams,
+            codec=self.codec,
         )
 
 
@@ -266,6 +280,10 @@ class HierPlan:
     on_overflow: str = "flag"
     verify_streams: bool = False
     fallback: Optional[FallbackPlan] = None
+    # Wire codec of the path that executes (the flat sub-plan's, or the
+    # inter stage's on the hierarchical path — the intra stages are
+    # uncompressed and carry no codec).
+    codec: str = "lorenzo"
 
     @property
     def ratio(self) -> float:
@@ -329,9 +347,18 @@ class CollectiveResult:
 # ---------------------------------------------------------------------------
 
 
-def _stream_bytes(n_elems: int, capacity_factor: float) -> int:
-    """Wire bytes of one provisioned ``Compressed`` stream for n f32."""
-    cap = capacity_words_for(n_elems, capacity_factor, ops.BLOCK)
+def _stream_bytes(n_elems: int, capacity_factor: float,
+                  codec: str = "lorenzo") -> int:
+    """Wire bytes of one provisioned ``Compressed`` stream for n f32.
+
+    Capacity comes from :func:`codecs.codec_capacity_words` — the same
+    provisioning authority the compressor factories use — so per-codec
+    overrides (lossless' 1.25 factor, passthrough's structural n words)
+    price exactly the buffers the execute layer ships.  The metadata
+    sidecar (per-block bitwidth/descriptor + anchor) is the same
+    container shape for every codec.
+    """
+    cap = codecs.codec_capacity_words(codec, n_elems, capacity_factor)
     n_blocks = ops.n_blocks_for(n_elems)
     return cap * 4 + 2 * n_blocks * 4 + 8  # packed + bitwidth + anchor + meta
 
@@ -365,7 +392,8 @@ def _ring_piece_sizes(n_elems, n, chunks):
     return chunk, chunk
 
 
-def _wire_accounting(op, algo, n_elems, n, capacity_factor, chunks):
+def _wire_accounting(op, algo, n_elems, n, capacity_factor, chunks,
+                     codec: str = "lorenzo"):
     """(capacity_words, wire_bytes, uncompressed_bytes) for one call.
 
     Per-rank send bytes, upper bound (tree collectives report the busiest
@@ -383,8 +411,8 @@ def _wire_accounting(op, algo, n_elems, n, capacity_factor, chunks):
     if op == "allreduce":
         if algo == "redoub":
             steps = cost_model.steps_for("redoub", n)
-            cap = capacity_words_for(n_elems, capacity_factor, ops.BLOCK)
-            wire = steps * _stream_bytes(n_elems, capacity_factor)
+            cap = codecs.codec_capacity_words(codec, n_elems, capacity_factor)
+            wire = steps * _stream_bytes(n_elems, capacity_factor, codec)
             raw = steps * n_elems * 4
             return cap, wire, raw
         if algo == "intring":
@@ -395,8 +423,8 @@ def _wire_accounting(op, algo, n_elems, n, capacity_factor, chunks):
             raw = 2 * (n - 1) * (-(-n_elems // n)) * 4
             return cap, wire, raw
         chunk, piece = _ring_piece_sizes(n_elems, n, chunks)
-        cap = capacity_words_for(piece, capacity_factor, ops.BLOCK)
-        wire = 2 * (n - 1) * p * _stream_bytes(piece, capacity_factor)
+        cap = codecs.codec_capacity_words(codec, piece, capacity_factor)
+        wire = 2 * (n - 1) * p * _stream_bytes(piece, capacity_factor, codec)
         raw = 2 * (n - 1) * (-(-n_elems // n)) * 4
         return cap, wire, raw
     if op == "reduce_scatter":
@@ -406,8 +434,8 @@ def _wire_accounting(op, algo, n_elems, n, capacity_factor, chunks):
             piece = (-(-chunk_in // quantum) * quantum) // p
         else:
             piece = chunk_in
-        cap = capacity_words_for(piece, capacity_factor, ops.BLOCK)
-        wire = (n - 1) * p * _stream_bytes(piece, capacity_factor)
+        cap = codecs.codec_capacity_words(codec, piece, capacity_factor)
+        wire = (n - 1) * p * _stream_bytes(piece, capacity_factor, codec)
         raw = (n - 1) * chunk_in * 4
         return cap, wire, raw
     if op == "allgather":
@@ -416,32 +444,32 @@ def _wire_accounting(op, algo, n_elems, n, capacity_factor, chunks):
             piece = (-(-n_elems // quantum) * quantum) // p
         else:
             piece = n_elems
-        cap = capacity_words_for(piece, capacity_factor, ops.BLOCK)
-        wire = (n - 1) * p * _stream_bytes(piece, capacity_factor)
+        cap = codecs.codec_capacity_words(codec, piece, capacity_factor)
+        wire = (n - 1) * p * _stream_bytes(piece, capacity_factor, codec)
         raw = (n - 1) * n_elems * 4
         return cap, wire, raw
     if op == "scatter":
         chunk = -(-n_elems // n)
-        cap = capacity_words_for(chunk, capacity_factor, ops.BLOCK)
+        cap = codecs.codec_capacity_words(codec, chunk, capacity_factor)
         # Trimmed-slab schedule: the root ships one stream per REAL rank
         # in its children's subtrees — exactly n-1 chunk streams at ANY
         # axis size (the padded virtual tree's 2**ceil(log2 n) - 1 is
         # gone; its zero-padding chunks no longer travel).  Summed from
         # the same slab table the execute layer walks.
         streams = cost_model.scatter_root_chunk_streams(n)
-        wire = streams * _stream_bytes(chunk, capacity_factor)
+        wire = streams * _stream_bytes(chunk, capacity_factor, codec)
         raw = (n - 1) * chunk * 4
         return cap, wire, raw
     if op == "broadcast":
         steps = cost_model.steps_for("binomial", n)
-        cap = capacity_words_for(n_elems, capacity_factor, ops.BLOCK)
-        wire = steps * _stream_bytes(n_elems, capacity_factor)  # root's sends
+        cap = codecs.codec_capacity_words(codec, n_elems, capacity_factor)
+        wire = steps * _stream_bytes(n_elems, capacity_factor, codec)  # root
         raw = steps * n_elems * 4
         return cap, wire, raw
     if op == "all_to_all":
         chunk = -(-n_elems // n)
-        cap = capacity_words_for(chunk, capacity_factor, ops.BLOCK)
-        wire = n * _stream_bytes(chunk, capacity_factor)
+        cap = codecs.codec_capacity_words(codec, chunk, capacity_factor)
+        wire = n * _stream_bytes(chunk, capacity_factor, codec)
         raw = n * chunk * 4
         return cap, wire, raw
     raise ValueError(f"unknown op {op!r}")
@@ -677,12 +705,34 @@ register_policy("accuracy", _policy_accuracy)
 
 _PLAN_CACHE: dict = {}
 _PLAN_STATS = {"hits": 0, "misses": 0}
+# Per-codec-key hit/miss counters ("auto" is its own bucket: the REQUESTED
+# codec is the cache identity; the resolved one lives on the Plan).
+_PLAN_STATS_BY_CODEC: dict = {}
+
+
+def _codec_stat(codec: str, field: str) -> None:
+    rec = _PLAN_STATS_BY_CODEC.setdefault(codec, {"hits": 0, "misses": 0})
+    rec[field] += 1
 
 
 def plan_cache_stats() -> dict:
-    """{'hits', 'misses', 'entries', 'keys'} — observability for tests and
-    the acceptance criterion "exactly one cache entry per distinct
-    (op, nbytes, dtype, axis_size, eb)"."""
+    """{'hits', 'misses', 'entries', 'keys', 'by_codec', ...} —
+    observability for tests and the acceptance criterion "exactly one
+    cache entry per distinct (op, nbytes, dtype, axis_size, eb, codec)".
+
+    ``by_codec`` breaks hits/misses AND entry counts (both the flat and
+    the hier plan cache — the codec is the last key component of each)
+    down by the requested codec key, so a test can pin
+    one-entry-per-(op, codec) without parsing raw key tuples.
+    """
+    by_codec = {}
+    for c, rec in _PLAN_STATS_BY_CODEC.items():
+        by_codec[c] = {
+            "hits": rec["hits"],
+            "misses": rec["misses"],
+            "entries": sum(1 for k in _PLAN_CACHE if k[-1] == c),
+            "hier_entries": sum(1 for k in _HIER_PLAN_CACHE if k[-1] == c),
+        }
     return {
         "hits": _PLAN_STATS["hits"],
         "misses": _PLAN_STATS["misses"],
@@ -690,6 +740,7 @@ def plan_cache_stats() -> dict:
         "keys": tuple(_PLAN_CACHE),
         "hier_entries": len(_HIER_PLAN_CACHE),
         "hier_keys": tuple(_HIER_PLAN_CACHE),
+        "by_codec": by_codec,
     }
 
 
@@ -699,12 +750,144 @@ def clear_plan_cache() -> None:
     _COMM_CACHE.clear()  # the memoized one-shot communicators, too
     _PLAN_STATS["hits"] = 0
     _PLAN_STATS["misses"] = 0
+    _PLAN_STATS_BY_CODEC.clear()
+
+
+def _codec_adjusted(codec, ratio, hw):
+    """(effective_ratio, adjusted_hw, codec_fused_hop) for pricing a codec.
+
+    Calibrated per-codec terms on the Hardware (``hw.terms_for``, fitted
+    by :func:`fit_codec_terms`) win over the registry's modeled defaults.
+    Identity terms short-circuit to the caller's own (ratio, hw) — the
+    default ``lorenzo`` entry ships identity terms, so an uncalibrated
+    default plan prices bit-for-bit as it did before the registry.
+    """
+    spec = codecs.get_codec(codec)
+    terms = hw.terms_for(codec) or spec.terms
+    if terms == cost_model.CodecTerms(codec):
+        return ratio, hw, spec.fused_hop
+    return terms.effective_ratio(ratio), terms.apply(hw), spec.fused_hop
+
+
+def _op_model_time(op, algo, nbytes, n, ratio, hw, chunks, fused_hop):
+    """Modeled seconds of one collective under (algo, ratio, hw) — the
+    per-op comparator ``codec='auto'`` ranks candidates with.  Allreduce
+    and the modeled data movers use the cost model's own functions; the
+    remaining ops are priced from the primitive compress/net/decompress
+    terms (coarse, but the comparison only needs to order codecs whose
+    ratio and throughput terms differ)."""
+    if n <= 1:
+        return 0.0
+    if op == "allreduce":
+        return _allreduce_model_time(algo, nbytes, n, ratio, hw, chunks,
+                                     fused_hop)
+    if op == "scatter":
+        return cost_model.scatter_binomial_gz_chunked(
+            nbytes, n, ratio, hw, max(chunks, 1)
+        )
+    if op == "allgather":
+        return cost_model.allgather_ring_gz(nbytes, n, ratio, hw)
+    if op == "broadcast":
+        steps = cost_model.steps_for("binomial", n)
+        return (cost_model.t_compress(nbytes, hw)
+                + steps * cost_model.t_net(nbytes / ratio, hw)
+                + cost_model.t_decompress(nbytes, hw))
+    chunk = nbytes / n
+    if op == "reduce_scatter":
+        return (n - 1) * (cost_model.t_compress(chunk, hw)
+                          + cost_model.t_net(chunk / ratio, hw)
+                          + cost_model.t_decompress(chunk, hw))
+    # all_to_all: compress/decompress the whole payload, n exchange lanes.
+    return (cost_model.t_compress(nbytes, hw)
+            + n * cost_model.t_net(chunk / ratio, hw)
+            + cost_model.t_decompress(nbytes, hw))
+
+
+# Policies that rank algorithms by modeled time — the only ones where
+# ranking CODECS by the same model is meaningful (paper reproduces the
+# published selector; accuracy pins the integer ring).
+_CODEC_AUTO_POLICIES = ("auto", "throughput")
+
+
+def _resolve_codec(op, policy, policy_fn, req, codec):
+    """(codec, algo, chunks, codec_ratio, fused_hop, notes) — one place
+    owns every codec-resolution rule so ``_resolve_plan`` stays linear:
+
+      * explicit codec: price the policy under its adjusted (ratio, hw);
+      * ``auto`` under an auto/throughput policy: run the policy per
+        candidate and argmin the per-op modeled time;
+      * ``auto`` under other policies: default codec, with a note;
+      * ``intring`` ships its own integer wire format: codec forced back
+        to ``lorenzo`` (noted);
+      * codecs without a fused hop kernel downgrade ``fused_hop`` (noted).
+    """
+    notes = []
+    if codec == codecs.AUTO:
+        if policy in _CODEC_AUTO_POLICIES:
+            best = None
+            for cand in codecs.auto_codecs():
+                eff_ratio, hw_c, cand_fh = _codec_adjusted(
+                    cand, req.ratio, req.hw
+                )
+                fh = req.fused_hop and cand_fh
+                req_c = dataclasses.replace(
+                    req, fused_hop=fh, ratio=eff_ratio, hw=hw_c
+                )
+                algo_c, chunks_c = policy_fn(req_c)
+                t = _op_model_time(
+                    op, algo_c, req.nbytes, req.axis_size, eff_ratio, hw_c,
+                    chunks_c, fh,
+                )
+                if best is None or t < best[0]:
+                    best = (t, cand, algo_c, chunks_c, eff_ratio)
+            _, codec, algo, chunks, codec_ratio = best
+            notes.append(
+                f"codec auto->{codec!r} (fastest modeled {op} of "
+                f"{codecs.auto_codecs()})"
+            )
+        else:
+            codec = "lorenzo"
+            notes.append(
+                f"codec auto->'lorenzo' (policy {policy!r} does not rank "
+                "codecs by modeled time)"
+            )
+            codec_ratio, hw_c, cand_fh = _codec_adjusted(
+                codec, req.ratio, req.hw
+            )
+            req_c = dataclasses.replace(
+                req, fused_hop=req.fused_hop and cand_fh, ratio=codec_ratio,
+                hw=hw_c,
+            )
+            algo, chunks = policy_fn(req_c)
+    else:
+        codec_ratio, hw_c, cand_fh = _codec_adjusted(codec, req.ratio, req.hw)
+        req_c = dataclasses.replace(
+            req, fused_hop=req.fused_hop and cand_fh, ratio=codec_ratio,
+            hw=hw_c,
+        )
+        algo, chunks = policy_fn(req_c)
+    if algo == "intring" and codec != "lorenzo":
+        notes.append(
+            f"codec {codec!r}->'lorenzo' (intring ships its own integer "
+            "wire format)"
+        )
+        codec = "lorenzo"
+        codec_ratio, _, _ = _codec_adjusted(codec, req.ratio, req.hw)
+    spec = codecs.get_codec(codec)
+    fused_hop = req.fused_hop and spec.fused_hop
+    if req.fused_hop and not spec.fused_hop:
+        notes.append(
+            f"fused_hop off (codec {codec!r} has no fused "
+            "unpack+reduce+repack kernel; hops run the two-pass "
+            "composition)"
+        )
+    return codec, algo, max(chunks, 1), codec_ratio, fused_hop, tuple(notes)
 
 
 def _resolve_plan(
     op, n_elems, dtype, axis_size, eb, *, policy, requested_algo,
     requested_chunks, capacity_factor, worst_case_budget, fused, fused_hop,
-    ratio, hw, on_overflow="flag", verify_streams=False,
+    ratio, hw, on_overflow="flag", verify_streams=False, codec="lorenzo",
 ) -> Plan:
     key = (
         # The canonical identity of a plan...
@@ -713,12 +896,17 @@ def _resolve_plan(
         policy, requested_algo, requested_chunks, capacity_factor,
         worst_case_budget, fused, fused_hop, ratio, hw,
         on_overflow, verify_streams,
+        # The codec is appended LAST: existing tests pin key prefixes, and
+        # plan_cache_stats' by_codec breakdown reads key[-1].
+        codec,
     )
     hit = _PLAN_CACHE.get(key)
     if hit is not None:
         _PLAN_STATS["hits"] += 1
+        _codec_stat(codec, "hits")
         return hit
     _PLAN_STATS["misses"] += 1
+    _codec_stat(codec, "misses")
     if op not in OPS:
         raise ValueError(f"unknown collective op {op!r}")
     try:
@@ -732,9 +920,11 @@ def _resolve_plan(
         requested_algo=requested_algo, requested_chunks=requested_chunks,
         fused_hop=fused_hop, ratio=ratio, hw=hw,
     )
-    algo, chunks = policy_fn(req)
+    codec, algo, chunks, codec_ratio, fused_hop, notes = _resolve_codec(
+        op, policy, policy_fn, req, codec
+    )
     cap, wire, raw = _wire_accounting(
-        op, algo, n_elems, axis_size, capacity_factor, chunks
+        op, algo, n_elems, axis_size, capacity_factor, chunks, codec
     )
     plan = Plan(
         op=op, algo=algo, n_elems=n_elems, nbytes=n_elems * 4,
@@ -748,6 +938,7 @@ def _resolve_plan(
                     if algo == "binomial" else ()),
         on_overflow=on_overflow, verify_streams=verify_streams,
         fallback=_fallback_plan(op, n_elems, axis_size, hw),
+        codec=codec, codec_ratio=codec_ratio, notes=notes,
     )
     _PLAN_CACHE[key] = plan
     return plan
@@ -779,7 +970,7 @@ def _allreduce_model_time(algo, nbytes, n, ratio, hw, chunks, fused_hop):
 def _resolve_hier_plan(
     op, n_elems, dtype, topology, eb, *, policy, requested_algo,
     requested_chunks, capacity_factor, worst_case_budget, fused, fused_hop,
-    ratio, hw, on_overflow="flag", verify_streams=False,
+    ratio, hw, on_overflow="flag", verify_streams=False, codec="lorenzo",
 ) -> HierPlan:
     """Resolve the frozen two-level plan for ``topology = (n_nodes, L)``.
 
@@ -809,12 +1000,15 @@ def _resolve_hier_plan(
         policy, requested_algo, requested_chunks, capacity_factor,
         worst_case_budget, fused, fused_hop, ratio, hw,
         on_overflow, verify_streams,
+        codec,  # appended LAST, like the flat cache (by_codec reads k[-1])
     )
     hit = _HIER_PLAN_CACHE.get(key)
     if hit is not None:
         _PLAN_STATS["hits"] += 1
+        _codec_stat(codec, "hits")
         return hit
     _PLAN_STATS["misses"] += 1
+    _codec_stat(codec, "misses")
     if op != "allreduce":
         raise ValueError(
             f"hierarchical plans support op='allreduce' only; got {op!r}"
@@ -828,11 +1022,16 @@ def _resolve_hier_plan(
         worst_case_budget=worst_case_budget, fused=fused,
         fused_hop=fused_hop, ratio=ratio, hw=hw,
         on_overflow=on_overflow, verify_streams=verify_streams,
+        codec=codec,
     )
     flat_plan = _resolve_plan(op, n_elems, dtype, N, eb, **knobs)
+    # Price the flat-vs-hier comparison at the RESOLVED codec's terms
+    # (identity for the default, so the pre-registry comparison is
+    # bit-for-bit unchanged).
+    flat_ratio, flat_hw, _ = _codec_adjusted(flat_plan.codec, ratio, hw)
     t_flat = _allreduce_model_time(
-        flat_plan.algo, nbytes, N, ratio, hw, flat_plan.pipeline_chunks,
-        fused_hop,
+        flat_plan.algo, nbytes, N, flat_ratio, flat_hw,
+        flat_plan.pipeline_chunks, flat_plan.fused_hop,
     )
 
     inter = None
@@ -847,11 +1046,14 @@ def _resolve_hier_plan(
             inter = _resolve_plan(
                 op, shard_elems, dtype, n_nodes, eb_inter, **knobs
             )
+        inter_ratio, inter_hw, _ = _codec_adjusted(
+            inter.codec if inter else "lorenzo", ratio, hw
+        )
         t_hier = cost_model.allreduce_hier_gz(
-            nbytes, n_nodes, L, ratio, hw,
+            nbytes, n_nodes, L, inter_ratio, inter_hw,
             inter_algo=inter.algo if inter else "ring",
             chunks=inter.pipeline_chunks if inter else 1,
-            fused_hop=fused_hop,
+            fused_hop=inter.fused_hop if inter else fused_hop,
         )
 
     flat = t_flat <= t_hier
@@ -873,6 +1075,8 @@ def _resolve_hier_plan(
         policy=policy,
         on_overflow=on_overflow, verify_streams=verify_streams,
         fallback=_fallback_plan(op, n_elems, N, hw),
+        codec=(flat_plan.codec if flat
+               else (inter.codec if inter else "lorenzo")),
     )
     _HIER_PLAN_CACHE[key] = plan
     return plan
@@ -1034,7 +1238,8 @@ class GZCommunicator:
 
     def calibrate(self, *, sizes=(1 << 16, 1 << 18, 1 << 20), reps: int = 3,
                   interpret: Optional[bool] = None,
-                  network: Optional[dict] = None) -> "GZCommunicator":
+                  network: Optional[dict] = None,
+                  fit_codecs: bool = True) -> "GZCommunicator":
         """Return a communicator whose cost model is fitted to THIS host.
 
         Times the actual codec (``measure_codec``) at ``sizes`` elements
@@ -1045,6 +1250,14 @@ class GZCommunicator:
         (see :func:`measure_ppermute`) — in which case each named link's
         alpha-beta terms are least-squares-fitted too
         (:func:`fit_network`).
+
+        With ``fit_codecs`` (the default) every registered wire codec is
+        additionally timed on the same sample tensors
+        (:func:`measure_codecs`) and its measured ratio/throughput written
+        into per-codec ``Hardware.codec_terms`` — the terms
+        ``codec='auto'`` ranks candidates with, so after calibration the
+        auto/throughput policies pick the codec per tensor class from
+        MEASURED collective time, not the registry's modeled defaults.
         """
         samples_c, samples_d = measure_codec(
             self.config, sizes=sizes, reps=reps, interpret=interpret
@@ -1052,6 +1265,10 @@ class GZCommunicator:
         hw = fit_hardware(samples_c, samples_d, base=self.hw)
         for link, samples in (network or {}).items():
             hw = fit_network(samples, base=hw, link=link)
+        if fit_codecs:
+            hw = fit_codec_terms(
+                measure_codecs(self.config, sizes=sizes, reps=reps), base=hw
+            )
         return GZCommunicator(
             self.axis_name, config=self.config, policy=self.policy, hw=hw,
             ratio=self.ratio, axis_size=self._axis_size,
@@ -1094,6 +1311,7 @@ class GZCommunicator:
             worst_case_budget=cfg.worst_case_budget, fused=cfg.fused,
             fused_hop=cfg.fused_hop, ratio=self.ratio, hw=self.hw,
             on_overflow=cfg.on_overflow, verify_streams=cfg.verify_streams,
+            codec=cfg.codec,
         )
 
     # -- collectives ---------------------------------------------------------
@@ -1331,6 +1549,7 @@ class GZHierCommunicator:
             worst_case_budget=cfg.worst_case_budget, fused=cfg.fused,
             fused_hop=cfg.fused_hop, ratio=self.ratio, hw=self.hw,
             on_overflow=cfg.on_overflow, verify_streams=cfg.verify_streams,
+            codec=cfg.codec,
         )
 
     def allreduce(self, x, *, plan: Optional[HierPlan] = None) -> CollectiveResult:
@@ -1375,7 +1594,8 @@ class GZHierCommunicator:
         )
 
     def calibrate(self, *, sizes=(1 << 16, 1 << 18, 1 << 20), reps: int = 3,
-                  network: Optional[dict] = None) -> "GZHierCommunicator":
+                  network: Optional[dict] = None,
+                  fit_codecs: bool = True) -> "GZHierCommunicator":
         """Codec-fitted (and optionally network-fitted) communicator: like
         ``GZCommunicator.calibrate`` plus per-link-class network terms via
         ``network={'inter': samples, 'intra': samples}`` (measured
@@ -1387,6 +1607,10 @@ class GZHierCommunicator:
         hw = fit_hardware(samples_c, samples_d, base=self.hw)
         for link, samples in (network or {}).items():
             hw = fit_network(samples, base=hw, link=link)
+        if fit_codecs:
+            hw = fit_codec_terms(
+                measure_codecs(self.config, sizes=sizes, reps=reps), base=hw
+            )
         return GZHierCommunicator(
             self.node_axis, self.local_axis, config=self.config,
             policy=self.policy, hw=hw, ratio=self.ratio,
@@ -1549,6 +1773,10 @@ def measure_codec(config=None, *, sizes=(1 << 16, 1 << 18, 1 << 20),
     from repro.core.collectives import GZConfig
 
     cfg = config if config is not None else GZConfig()
+    if cfg.codec == codecs.AUTO:
+        # Only a concrete codec can be timed; the default is the dense
+        # reference every auto candidate is compared against anyway.
+        cfg = dataclasses.replace(cfg, codec="lorenzo")
     comp = cfg.compressor()
     del interpret  # kernels select interpret mode from the backend
 
@@ -1573,3 +1801,80 @@ def measure_codec(config=None, *, sizes=(1 << 16, 1 << 18, 1 << 20),
         decompress = jax.jit(comp.decompress)
         samples_d.append((n * 4, _time(lambda: decompress(c))))
     return samples_c, samples_d
+
+
+def measure_codecs(config=None, *, sizes=(1 << 16, 1 << 18, 1 << 20),
+                   reps: int = 3, names=None) -> dict:
+    """Time EVERY registered wire codec on this host's smooth sample data.
+
+    Returns ``{codec: {'samples_compress': [(bytes, s), ...],
+    'samples_decompress': [...], 'ratio': float}}`` — the input of
+    :func:`fit_codec_terms`.  ``ratio`` is the measured payload reduction
+    (uncompressed bytes over the TRUE stream bytes, ``payload_bytes``) at
+    the largest size — the quantity ``benchmarks/codec_bench.py`` records
+    and ``codec='auto'`` ranks with after calibration.  Same smooth-tensor
+    and min-of-reps discipline as :func:`measure_codec`.
+    """
+    from repro.core.collectives import GZConfig
+
+    cfg = config if config is not None else GZConfig()
+    measured = {}
+    for name in (names if names is not None else codecs.codec_names()):
+        cfg_c = dataclasses.replace(cfg, codec=name)
+        samples_c, samples_d = measure_codec(cfg_c, sizes=sizes, reps=reps)
+        comp = cfg_c.compressor()
+        n = max(sizes)
+        x = jnp.asarray(
+            np.cumsum(np.random.default_rng(0).normal(0, 0.01, n)),
+            jnp.float32,
+        )
+        c = jax.jit(lambda v: comp.compress(v, cfg_c.eb))(x)
+        payload = float(jax.device_get(c.payload_bytes()))
+        measured[name] = {
+            "samples_compress": samples_c,
+            "samples_decompress": samples_d,
+            "ratio": (n * 4) / max(payload, 1.0),
+        }
+    return measured
+
+
+def fit_codec_terms(measured: dict, *,
+                    base: cost_model.Hardware,
+                    name: Optional[str] = None) -> cost_model.Hardware:
+    """Fit per-codec ``CodecTerms`` from :func:`measure_codecs` output.
+
+    Each codec gets its measured compress/decompress throughput (the same
+    linear fit as :func:`fit_hardware`) and its measured ratio — recorded
+    as a SCALE relative to the dense ``lorenzo`` ratio for eb-scaled
+    codecs (their achievable ratio tracks the caller's assumed dense
+    ratio across tensor classes) and as an absolute ratio for
+    data-intrinsic codecs (lossless/passthrough ship the same bytes
+    whatever the bound).  Returns a ``Hardware`` whose ``codec_terms``
+    the planner's :func:`_codec_adjusted` resolves ahead of the registry
+    defaults.
+    """
+    def _peak_gbps(samples):
+        pts = np.asarray(sorted(samples), dtype=np.float64)
+        if pts.ndim != 2 or pts.shape[0] < 2:
+            return 0.0
+        slope, _ = np.polyfit(pts[:, 0], pts[:, 1], 1)
+        return (1.0 / max(slope, 1e-18)) * 8 / 1e9
+
+    dense = measured.get("lorenzo", {}).get("ratio", 1.0)
+    terms = []
+    for codec in sorted(measured):
+        m = measured[codec]
+        spec = codecs.get_codec(codec)
+        kw = dict(
+            cmp_peak_gbps=_peak_gbps(m["samples_compress"]),
+            dec_peak_gbps=_peak_gbps(m["samples_decompress"]),
+        )
+        if spec.eb_scaled:
+            kw["ratio_scale"] = m["ratio"] / max(dense, 1e-9)
+        else:
+            kw["ratio_abs"] = max(m["ratio"], 1.0)
+        terms.append(cost_model.CodecTerms(codec, **kw))
+    return dataclasses.replace(
+        base, codec_terms=tuple(terms),
+        name=name or f"{base.name}-codecs",
+    )

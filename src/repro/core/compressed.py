@@ -9,6 +9,13 @@ padded.
 
 The container is a pytree, so it can flow through ``lax.ppermute``,
 ``lax.scan`` carries, ``jax.jit`` and ``custom_vjp`` unchanged.
+
+Wire codecs reinterpret the slots, not the shape (DESIGN.md §10): under
+``codec="lorenzo+entropy"``/``"lossless"`` the per-block ``bitwidth``
+slot carries the packed 4x6-bit sub-block width descriptor instead of a
+single dense width — same container pytree, same provisioned capacity,
+different stream layout inside ``packed``.  Only the codec that wrote a
+container may read it; the plan layer guarantees that pairing.
 """
 from __future__ import annotations
 

@@ -27,6 +27,7 @@ import math
 
 __all__ = [
     "Hardware",
+    "CodecTerms",
     "A100_SLINGSHOT",
     "TPU_V5E",
     "steps_for",
@@ -58,6 +59,55 @@ __all__ = [
 
 
 @dataclasses.dataclass(frozen=True)
+class CodecTerms:
+    """Per-codec pricing terms for the planner (DESIGN.md §10).
+
+    Every field except ``codec`` is optional-by-sentinel so a terms entry
+    only overrides what was actually measured or modeled:
+
+      * ``ratio_scale``  — wire-ratio multiplier applied to the caller's
+        assumed dense-Lorenzo ratio (eb-scaled codecs: the achievable
+        ratio tracks the data/eb regime, only the *relative* win is
+        codec-intrinsic);
+      * ``ratio_abs``    — absolute wire ratio (> 0 overrides the scale;
+        eb-independent codecs: lossless / passthrough ship the same bytes
+        whatever the bound);
+      * ``cmp_peak_gbps`` / ``dec_peak_gbps`` / ``cmp_overhead_us`` —
+        codec-specific compressor terms (sentinels: 0 / 0 / negative mean
+        "inherit the Hardware point's dense-Lorenzo terms").
+
+    Instances live in ``Hardware.codec_terms`` (a tuple, so the Hardware
+    point stays hashable for the plan-cache key) and are produced either
+    by the registry's modeled defaults (``codecs.get_codec(...).terms``)
+    or by ``comm.fit_codec_terms`` from measured samples.
+    """
+
+    codec: str
+    ratio_scale: float = 1.0
+    ratio_abs: float = 0.0
+    cmp_peak_gbps: float = 0.0
+    dec_peak_gbps: float = 0.0
+    cmp_overhead_us: float = -1.0
+
+    def effective_ratio(self, assumed_ratio: float) -> float:
+        if self.ratio_abs > 0.0:
+            return self.ratio_abs
+        # Entropy trim cannot make the wire worse than raw (ratio < 1).
+        return max(assumed_ratio * self.ratio_scale, 1.0)
+
+    def apply(self, hw: "Hardware") -> "Hardware":
+        """Hardware point with this codec's compressor terms swapped in."""
+        kw = {}
+        if self.cmp_peak_gbps > 0.0:
+            kw["cmp_peak_gbps"] = self.cmp_peak_gbps
+        if self.dec_peak_gbps > 0.0:
+            kw["dec_peak_gbps"] = self.dec_peak_gbps
+        if self.cmp_overhead_us >= 0.0:
+            kw["cmp_overhead_us"] = self.cmp_overhead_us
+        return dataclasses.replace(hw, **kw) if kw else hw
+
+
+@dataclasses.dataclass(frozen=True)
 class Hardware:
     name: str
     cmp_peak_gbps: float      # compressor throughput at full utilization
@@ -76,6 +126,17 @@ class Hardware:
     # so every existing Hardware point keeps its meaning.
     intra_gbps: float = 0.0       # intra-node per-link bandwidth
     intra_alpha_us: float = 0.0   # intra-node per-hop latency
+    # Measured per-codec pricing (tuple of CodecTerms so the point stays
+    # hashable for plan-cache keys).  Empty means "no codec was calibrated
+    # here": the planner falls back to the registry's modeled defaults.
+    codec_terms: tuple = ()
+
+    def terms_for(self, codec: str):
+        """The calibrated CodecTerms for ``codec``, or None."""
+        for t in self.codec_terms:
+            if t.codec == codec:
+                return t
+        return None
 
     def intra_terms(self) -> tuple:
         """(gbps, alpha_us) of the intra-node link class; falls back to

@@ -1,0 +1,189 @@
+"""Per-block entropy stage over the quantized Lorenzo codes (jnp oracle).
+
+The dense bitpack (``bitpack.py``) prices a whole 256-element block at the
+bitwidth of its *worst* zigzag delta.  The entropy stage is a bitplane
+trim at finer granularity: each block splits into ``SUBS`` sub-blocks of
+``SUB`` elements, and each sub-block is packed at its own width.  Because
+``SUB`` is a multiple of 32, every sub-block payload is a whole number of
+uint32 words (``SUB_WORDS_PER_BIT * bw`` words), so sub-block boundaries
+stay word-aligned and the single-pass Pallas packer
+(``kernels/entropy.py``) keeps the exact SMEM-carry structure of the dense
+one.
+
+Wire format (per block of ``BLOCK`` elements):
+
+  * the four 6-bit sub-widths travel packed into ONE int32 descriptor
+    (``bw0 | bw1<<6 | bw2<<12 | bw3<<18``) stored in the ``Compressed``
+    container's ``bitwidth`` slot — same metadata bytes as the dense
+    format, no extra header word;
+  * sub-block ``k``'s payload is ``SUB_WORDS_PER_BIT * bw_k`` words, laid
+    out in sub order inside the block's word segment.
+
+Size invariant: a block's entropy payload is ``2 * sum_k bw_k`` words
+versus the dense ``8 * max_k bw_k`` — entropy-coded wire bytes are <= the
+dense bitpack bytes for EVERY input, with equality only when all four
+sub-widths equal the block max (asserted as a hypothesis property in
+tests/test_codecs.py).
+
+``lossless`` mode replaces the error-bounded quantizer with a bit-exact
+``bitcast(f32) -> int32`` front end (the UCCL-Zip point): the Lorenzo
+delta + zigzag + entropy pack then act on raw IEEE bit patterns, and
+int32 wraparound makes the delta chain exact, so decompress reproduces
+the input bit-for-bit (NaN payloads included).
+
+Everything here is pure jnp — it is both the unfused compressor path and
+the oracle the Pallas kernels are byte-identity-tested against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+__all__ = [
+    "SUBS", "SUB", "SUB_WORDS_PER_BIT",
+    "sub_widths", "make_desc", "split_desc", "packed_words",
+    "pack", "unpack", "encode_blocks", "decode_blocks",
+]
+
+SUBS = 4
+SUB = ops.BLOCK // SUBS  # 64: sub payloads stay word-aligned (SUB % 32 == 0)
+SUB_WORDS_PER_BIT = SUB // 32  # 2 words per bit of sub-width
+_DESC_BITS = 6  # sub-widths are 0..32, 6 bits each; 4 of them fit one int32
+
+
+def _bitwidth_of(umax: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise bits needed for uint32 maxima (same table as lorenzo)."""
+    powers = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)).astype(jnp.uint32)
+    return jnp.sum((umax[..., None] >= powers).astype(jnp.int32), axis=-1)
+
+
+def sub_widths(codes: jnp.ndarray) -> jnp.ndarray:
+    """uint32 (n_blocks, BLOCK) -> int32 (n_blocks, SUBS) per-sub bitwidths."""
+    n_blocks, block = codes.shape
+    umax = jnp.max(codes.reshape(n_blocks, SUBS, block // SUBS), axis=2)
+    return _bitwidth_of(umax)
+
+
+def make_desc(sub_bw: jnp.ndarray) -> jnp.ndarray:
+    """int32 (n_blocks, SUBS) sub-widths -> packed int32 (n_blocks,) descriptor."""
+    desc = jnp.zeros((sub_bw.shape[0],), jnp.int32)
+    for k in range(SUBS):
+        desc = desc | (sub_bw[:, k] << (_DESC_BITS * k))
+    return desc
+
+
+def split_desc(desc: jnp.ndarray) -> jnp.ndarray:
+    """Packed descriptor (n_blocks,) -> int32 (n_blocks, SUBS) sub-widths."""
+    mask = (1 << _DESC_BITS) - 1
+    return jnp.stack(
+        [(desc >> (_DESC_BITS * k)) & mask for k in range(SUBS)], axis=1
+    )
+
+
+def packed_words(desc: jnp.ndarray) -> jnp.ndarray:
+    """True entropy-coded stream size in uint32 words (int32 scalar)."""
+    return (jnp.sum(split_desc(desc)) * SUB_WORDS_PER_BIT).astype(jnp.int32)
+
+
+def _positions(desc: jnp.ndarray, block: int):
+    """Per-element absolute word index / shift / width for the entropy layout.
+
+    Mirrors ``bitpack._positions`` with sub-block granularity: element ``j``
+    of block ``i`` lives in sub ``j // SUB`` at that sub's own width, at a
+    word offset of (blocks before i) + (subs before it inside i).
+    """
+    sub_bw = split_desc(desc)  # (nb, SUBS)
+    words_per_sub = sub_bw * SUB_WORDS_PER_BIT
+    words_per_block = jnp.sum(words_per_sub, axis=1)
+    block_off = jnp.cumsum(words_per_block) - words_per_block  # exclusive
+    sub_off = jnp.cumsum(words_per_sub, axis=1) - words_per_sub  # exclusive
+    j = jnp.arange(block, dtype=jnp.int32)
+    sub_idx = j // SUB
+    jj = j - sub_idx * SUB
+    bw = sub_bw[:, sub_idx]  # (nb, block)
+    off = block_off[:, None] + sub_off[:, sub_idx]
+    bitpos = off * 32 + jj[None, :] * bw
+    word = (bitpos >> 5).astype(jnp.int32)
+    shift = (bitpos & 31).astype(jnp.uint32)
+    return word, shift, bw.astype(jnp.uint32)
+
+
+def _width_mask(bw: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(
+        bw == 0,
+        jnp.uint32(0),
+        jnp.uint32(0xFFFFFFFF) >> jnp.minimum(32 - bw, jnp.uint32(31)),
+    )
+
+
+def pack(codes: jnp.ndarray, capacity_words: int):
+    """Entropy-pack zigzag codes at per-sub-block widths.
+
+    Args:
+      codes: uint32 (n_blocks, BLOCK).
+      capacity_words: static output capacity (same provisioning as dense —
+        the entropy stream can only be shorter).
+
+    Returns:
+      (packed uint32[capacity_words], desc int32 (n_blocks,), nwords int32).
+    """
+    n_blocks, block = codes.shape
+    assert block % SUBS == 0 and (block // SUBS) % 32 == 0, block
+    desc = make_desc(sub_widths(codes))
+    word, shift, bw = _positions(desc, block)
+    u = codes.astype(jnp.uint32) & _width_mask(bw)
+    lo = u << shift
+    hi = jnp.where(shift == 0, jnp.uint32(0),
+                   u >> jnp.minimum(32 - shift, jnp.uint32(31)))
+    packed = jnp.zeros((capacity_words,), jnp.uint32)
+    flat_word = word.reshape(-1)
+    # Disjoint bit ranges within a stream ==> OR == ADD (bitpack argument).
+    packed = packed.at[flat_word].add(lo.reshape(-1), mode="drop")
+    packed = packed.at[flat_word + 1].add(hi.reshape(-1), mode="drop")
+    return packed, desc, packed_words(desc)
+
+
+def unpack(packed: jnp.ndarray, desc: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Inverse of :func:`pack`.  Returns uint32 (n_blocks, block)."""
+    n_words = packed.shape[0]
+    word, shift, bw = _positions(desc, block)
+    w0 = jnp.clip(word, 0, n_words - 1)
+    w1 = jnp.clip(word + 1, 0, n_words - 1)
+    lo = packed[w0] >> shift
+    hi = jnp.where(shift == 0, jnp.uint32(0),
+                   packed[w1] << jnp.minimum(32 - shift, jnp.uint32(31)))
+    return (lo | hi) & _width_mask(bw)
+
+
+def encode_blocks(x2d: jnp.ndarray, eb, *, lossless: bool = False):
+    """f32 (nb, B) -> (zigzag codes uint32 (nb, B), anchor int32 (nb,)).
+
+    Same quantize + Lorenzo-delta + zigzag math as the Pallas quantize
+    kernel; with ``lossless`` the quantizer is a bit-exact int32 bitcast
+    (wraparound deltas reconstruct exactly under two's complement).
+    """
+    if lossless:
+        q = jax.lax.bitcast_convert_type(x2d.astype(jnp.float32), jnp.int32)
+    else:
+        recip = (1.0 / (2.0 * jnp.asarray(eb, jnp.float32))).astype(jnp.float32)
+        q = jnp.rint(x2d * recip).astype(jnp.int32)
+    col = jax.lax.broadcasted_iota(jnp.int32, q.shape, 1)
+    prev = jnp.where(col == 0, q, jnp.roll(q, 1, axis=1))
+    d = q - prev
+    zig = ((d << 1) ^ (d >> 31)).astype(jnp.uint32)
+    return zig, q[:, 0]
+
+
+def decode_blocks(
+    codes: jnp.ndarray, anchor: jnp.ndarray, eb, *, lossless: bool = False
+) -> jnp.ndarray:
+    """Inverse of :func:`encode_blocks`: codes + anchor -> f32 (nb, B)."""
+    u = codes
+    d = (u >> 1).astype(jnp.int32) ^ (-(u & 1).astype(jnp.int32))
+    q = anchor[:, None] + jnp.cumsum(d, axis=1)
+    if lossless:
+        return jax.lax.bitcast_convert_type(q, jnp.float32)
+    twoeb = (2.0 * jnp.asarray(eb, jnp.float32)).astype(jnp.float32)
+    return q.astype(jnp.float32) * twoeb

@@ -1,0 +1,313 @@
+"""Pallas TPU kernels for the entropy-coded wire stage (DESIGN.md §10).
+
+Same single-pass structure as the dense kernels in ``lorenzo.py`` — one
+``(TILE_ROWS, BLOCK)`` tile per grid step, a resident packed window, and
+an SMEM word-offset carry across the sequential grid — but each block's
+payload is packed at FOUR per-sub-block widths instead of one: block
+``i`` splits into ``entropy.SUBS`` sub-blocks of ``entropy.SUB`` elements
+and sub ``k`` occupies exactly ``SUB_WORDS_PER_BIT * bw_k`` words (SUB is
+a multiple of 32, so sub boundaries stay word-aligned and the dense
+packer's alignment argument carries over unchanged).
+
+The four 6-bit sub-widths travel packed into one int32 descriptor in the
+``Compressed.bitwidth`` slot, so the tile's worst case is still
+``TILE_ROWS * BLOCK`` words and the dense kernels' PACK_PAD window and
+dump-tail overflow clamp apply verbatim.
+
+Per-element widths/offsets are computed with a static unroll over the
+``SUBS`` sub indices (one-hot sums) rather than a gather: TPU vector
+lanes hate data-dependent gathers, and with SUBS=4 the unroll is four
+masked adds.
+
+A static ``lossless`` flag swaps the error-bounded quantizer for a
+bit-exact ``bitcast(f32)->int32`` front end; everything downstream
+(delta, zigzag, entropy pack) is shared, and int32 wraparound makes the
+delta chain reconstruct exactly.
+
+Byte streams are IDENTICAL to the jnp oracle in ``core/entropy.py``
+(asserted in tests/test_codecs.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.lorenzo import (
+    BLOCK,
+    PACK_PAD_WORDS,
+    TILE_ROWS,
+    _row_spec,
+    _scalar_spec,
+    _width_mask,
+)
+
+SUBS = 4
+SUB = BLOCK // SUBS
+SUB_WORDS_PER_BIT = SUB // 32
+_DESC_BITS = 6
+
+
+def _codes_tile(x, recip, lossless):
+    """f32 tile -> (zigzag codes, anchor col); lossless bitcasts instead of
+    quantizing so the delta chain acts on raw IEEE bit patterns."""
+    if lossless:
+        q = jax.lax.bitcast_convert_type(x, jnp.int32)
+    else:
+        q = jnp.rint(x * recip).astype(jnp.int32)
+    col = jax.lax.broadcasted_iota(jnp.int32, q.shape, 1)
+    prev = jnp.where(col == 0, q, jnp.roll(q, 1, axis=1))
+    d = q - prev
+    zig = ((d << 1) ^ (d >> 31)).astype(jnp.uint32)
+    return zig, q[:, :1]
+
+
+def _sub_widths_tile(zig):
+    """(TILE_ROWS, BLOCK) zigzag codes -> (TILE_ROWS, SUBS) int32 widths.
+
+    Masked per-sub maxima via a static unroll — no reshape of the lane
+    dimension, no gather.
+    """
+    j = jax.lax.broadcasted_iota(jnp.int32, (TILE_ROWS, BLOCK), 1)
+    sub_idx = j // SUB
+    powers = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)).astype(jnp.uint32)
+    widths = []
+    for k in range(SUBS):
+        umax_k = jnp.max(jnp.where(sub_idx == k, zig, jnp.uint32(0)), axis=1)
+        widths.append(
+            jnp.sum((umax_k[:, None] >= powers[None, :]).astype(jnp.int32), axis=1)
+        )
+    return jnp.stack(widths, axis=1)
+
+
+def _make_desc_col(sub_bw):
+    desc = sub_bw[:, 0]
+    for k in range(1, SUBS):
+        desc = desc | (sub_bw[:, k] << (_DESC_BITS * k))
+    return desc[:, None]
+
+
+def _split_desc_col(desc_col):
+    mask = (1 << _DESC_BITS) - 1
+    return jnp.concatenate(
+        [(desc_col >> (_DESC_BITS * k)) & mask for k in range(SUBS)], axis=1
+    )
+
+
+def _entropy_tile_geometry(sub_bw):
+    """Tile-local per-element word / shift / width for the entropy layout.
+
+    ``sub_bw``: (TILE_ROWS, SUBS) int32.  Word offsets are exclusive
+    cumsums at sub then block granularity; per-element selection is a
+    one-hot sum over the SUBS static sub indices.
+    """
+    words_per_sub = sub_bw * SUB_WORDS_PER_BIT
+    words_per_block = jnp.sum(words_per_sub, axis=1)
+    block_off = jnp.cumsum(words_per_block) - words_per_block  # exclusive
+    sub_off = jnp.cumsum(words_per_sub, axis=1) - words_per_sub  # exclusive
+    j = jax.lax.broadcasted_iota(jnp.int32, (TILE_ROWS, BLOCK), 1)
+    sub_idx = j // SUB
+    jj = j - sub_idx * SUB
+    bw_el = jnp.zeros((TILE_ROWS, BLOCK), jnp.int32)
+    off_el = jnp.zeros((TILE_ROWS, BLOCK), jnp.int32)
+    for k in range(SUBS):
+        m = (sub_idx == k).astype(jnp.int32)
+        bw_el = bw_el + m * sub_bw[:, k:k + 1]
+        off_el = off_el + m * sub_off[:, k:k + 1]
+    bitpos = (block_off[:, None] + off_el) * 32 + jj * bw_el
+    word = bitpos >> 5
+    shift = (bitpos & 31).astype(jnp.uint32)
+    return word, shift, bw_el.astype(jnp.uint32), words_per_block
+
+
+def _entropy_pack_tile(zig, sub_bw, packed_ref, off_ref):
+    """Pack one tile at per-sub widths into the resident packed window,
+    advancing the SMEM word-offset carry (same clamp/dump-tail overflow
+    handling as the dense ``_pack_tile``)."""
+    word, shift, bwu, words_per_block = _entropy_tile_geometry(sub_bw)
+    u = zig & _width_mask(bwu)
+    lo = u << shift
+    hi = jnp.where(shift == 0, jnp.uint32(0),
+                   u >> jnp.minimum(32 - shift, jnp.uint32(31)))
+    fw = word.reshape(-1)
+    local = jnp.zeros((PACK_PAD_WORDS,), jnp.uint32)
+    local = local.at[fw].add(lo.reshape(-1))
+    local = local.at[fw + 1].add(hi.reshape(-1))
+
+    start = off_ref[0]
+    capacity = packed_ref.shape[0] - PACK_PAD_WORDS
+    s = jnp.minimum(start, capacity)
+    window = packed_ref[pl.ds(s, PACK_PAD_WORDS)]
+    packed_ref[pl.ds(s, PACK_PAD_WORDS)] = window | local
+    off_ref[0] = start + jnp.sum(words_per_block)
+
+
+def _entropy_unpack_tile(packed_ref, desc_col, off_ref):
+    """Gather + unpack one tile's segment at per-sub widths from the
+    resident packed window, advancing the SMEM carry."""
+    sub_bw = _split_desc_col(desc_col)
+    word, shift, bwu, words_per_block = _entropy_tile_geometry(sub_bw)
+    start = off_ref[0]
+    capacity = packed_ref.shape[0] - PACK_PAD_WORDS
+    s = jnp.minimum(start, capacity)
+    window = packed_ref[pl.ds(s, PACK_PAD_WORDS)]
+    lo = window[word] >> shift
+    hi = jnp.where(shift == 0, jnp.uint32(0),
+                   window[word + 1] << jnp.minimum(32 - shift, jnp.uint32(31)))
+    off_ref[0] = start + jnp.sum(words_per_block)
+    return (lo | hi) & _width_mask(bwu)
+
+
+def _reconstruct(u, anchor_col, twoeb, lossless):
+    d = (u >> 1).astype(jnp.int32) ^ (-(u & 1).astype(jnp.int32))
+    q = anchor_col + jnp.cumsum(d, axis=1)
+    if lossless:
+        return jax.lax.bitcast_convert_type(q, jnp.float32)
+    return q.astype(jnp.float32) * twoeb
+
+
+def _quantize_pack_kernel(lossless, x_ref, recip_ref, packed_ref, desc_ref,
+                          anchor_ref, off_ref):
+    """quantize (or bitcast) + zigzag + entropy pack in one pass."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        packed_ref[...] = jnp.zeros_like(packed_ref[...])
+        off_ref[0] = 0
+
+    zig, anchor = _codes_tile(x_ref[...], recip_ref[0, 0], lossless)
+    sub_bw = _sub_widths_tile(zig)
+    desc_ref[...] = _make_desc_col(sub_bw)
+    anchor_ref[...] = anchor
+    _entropy_pack_tile(zig, sub_bw, packed_ref, off_ref)
+
+
+def _unpack_dequantize_kernel(lossless, packed_ref, desc_ref, anchor_ref,
+                              twoeb_ref, out_ref, off_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        off_ref[0] = 0
+
+    u = _entropy_unpack_tile(packed_ref, desc_ref[...], off_ref)
+    out_ref[...] = _reconstruct(u, anchor_ref[...], twoeb_ref[0, 0], lossless)
+
+
+def _unpack_dequantize_reduce_kernel(lossless, packed_ref, desc_ref,
+                                     anchor_ref, twoeb_ref, acc_ref, out_ref,
+                                     off_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        off_ref[0] = 0
+
+    u = _entropy_unpack_tile(packed_ref, desc_ref[...], off_ref)
+    out_ref[...] = acc_ref[...] + _reconstruct(
+        u, anchor_ref[...], twoeb_ref[0, 0], lossless
+    )
+
+
+def _eb_scalars(eb, lossless):
+    """(recip, twoeb) (1,1) f32 operands; inert ones in lossless mode so an
+    eb of zero can't divide by zero on a path that never reads it."""
+    if lossless:
+        one = jnp.ones((1, 1), jnp.float32)
+        return one, one
+    recip = (1.0 / (2.0 * eb)).reshape(1, 1).astype(jnp.float32)
+    twoeb = (2.0 * eb).reshape(1, 1).astype(jnp.float32)
+    return recip, twoeb
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity_words", "lossless", "interpret")
+)
+def quantize_pack(
+    x2d: jnp.ndarray, eb: jnp.ndarray, capacity_words: int, *,
+    lossless: bool = False, interpret: bool = True,
+):
+    """f32 (n_blocks, BLOCK) -> (packed uint32[capacity_words], desc int32
+    (n_blocks,), anchor int32 (n_blocks,)) at per-sub-block widths.
+
+    Byte stream identical to ``core.entropy.pack(encode_blocks(x2d, eb))``.
+    """
+    n_blocks = x2d.shape[0]
+    recip, _ = _eb_scalars(eb, lossless)
+    cap_pad = capacity_words + PACK_PAD_WORDS
+    packed, desc, anchor = pl.pallas_call(
+        functools.partial(_quantize_pack_kernel, lossless),
+        grid=(n_blocks // TILE_ROWS,),
+        in_specs=[_row_spec(BLOCK), _scalar_spec()],
+        out_specs=[
+            pl.BlockSpec((cap_pad,), lambda i: (0,)),
+            _row_spec(1),
+            _row_spec(1),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cap_pad,), jnp.uint32),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(x2d, recip)
+    return packed[:capacity_words], desc[:, 0], anchor[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("lossless", "interpret"))
+def unpack_dequantize(
+    packed: jnp.ndarray, desc: jnp.ndarray, anchor: jnp.ndarray,
+    eb: jnp.ndarray, *, lossless: bool = False, interpret: bool = True,
+):
+    """Entropy stream -> f32 (n_blocks, BLOCK), no accumulator."""
+    n_blocks = desc.shape[0]
+    _, twoeb = _eb_scalars(eb, lossless)
+    cap_pad = packed.shape[0] + PACK_PAD_WORDS
+    packed_pad = jnp.zeros((cap_pad,), jnp.uint32).at[: packed.shape[0]].set(packed)
+    return pl.pallas_call(
+        functools.partial(_unpack_dequantize_kernel, lossless),
+        grid=(n_blocks // TILE_ROWS,),
+        in_specs=[
+            pl.BlockSpec((cap_pad,), lambda i: (0,)),
+            _row_spec(1),
+            _row_spec(1),
+            _scalar_spec(),
+        ],
+        out_specs=_row_spec(BLOCK),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(packed_pad, desc[:, None], anchor[:, None], twoeb)
+
+
+@functools.partial(jax.jit, static_argnames=("lossless", "interpret"))
+def unpack_dequantize_reduce(
+    packed: jnp.ndarray, desc: jnp.ndarray, anchor: jnp.ndarray,
+    eb: jnp.ndarray, acc: jnp.ndarray, *,
+    lossless: bool = False, interpret: bool = True,
+):
+    """Entropy stream + acc -> acc + decompressed f32 (n_blocks, BLOCK)."""
+    n_blocks = acc.shape[0]
+    _, twoeb = _eb_scalars(eb, lossless)
+    cap_pad = packed.shape[0] + PACK_PAD_WORDS
+    packed_pad = jnp.zeros((cap_pad,), jnp.uint32).at[: packed.shape[0]].set(packed)
+    return pl.pallas_call(
+        functools.partial(_unpack_dequantize_reduce_kernel, lossless),
+        grid=(n_blocks // TILE_ROWS,),
+        in_specs=[
+            pl.BlockSpec((cap_pad,), lambda i: (0,)),
+            _row_spec(1),
+            _row_spec(1),
+            _scalar_spec(),
+            _row_spec(BLOCK),
+        ],
+        out_specs=_row_spec(BLOCK),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, BLOCK), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(packed_pad, desc[:, None], anchor[:, None], twoeb, acc)

@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import entropy as entropy_kernels
 from repro.kernels import lorenzo
 
 BLOCK = lorenzo.BLOCK
@@ -85,6 +86,44 @@ def unpack_dequantize_reduce(
     eb = jnp.asarray(eb, jnp.float32)
     return lorenzo.unpack_dequantize_reduce(
         packed, bitwidth, anchor, eb, acc2d, interpret=_interpret()
+    )
+
+
+def entropy_quantize_pack(
+    x2d: jnp.ndarray, eb, capacity_words: int, *, lossless: bool = False
+):
+    """Fused f32 -> entropy-coded wire words (DESIGN.md §10).
+
+    -> (packed uint32 (capacity_words,), desc int32 (nb,), anchor int32
+    (nb,)) where ``desc`` packs the four per-sub-block widths.  Byte-
+    identical to ``core.entropy.pack(core.entropy.encode_blocks(...))``.
+    """
+    eb = jnp.asarray(eb, jnp.float32)
+    return entropy_kernels.quantize_pack(
+        x2d, eb, int(capacity_words), lossless=lossless, interpret=_interpret()
+    )
+
+
+def entropy_unpack_dequantize(
+    packed: jnp.ndarray, desc: jnp.ndarray, anchor: jnp.ndarray, eb, *,
+    lossless: bool = False,
+) -> jnp.ndarray:
+    """Fused entropy wire words -> decompressed f32 (nb, BLOCK)."""
+    eb = jnp.asarray(eb, jnp.float32)
+    return entropy_kernels.unpack_dequantize(
+        packed, desc, anchor, eb, lossless=lossless, interpret=_interpret()
+    )
+
+
+def entropy_unpack_dequantize_reduce(
+    packed: jnp.ndarray, desc: jnp.ndarray, anchor: jnp.ndarray, eb,
+    acc2d: jnp.ndarray, *, lossless: bool = False,
+) -> jnp.ndarray:
+    """Fused entropy wire words + acc -> acc + decompressed f32 (nb, BLOCK)."""
+    eb = jnp.asarray(eb, jnp.float32)
+    return entropy_kernels.unpack_dequantize_reduce(
+        packed, desc, anchor, eb, acc2d, lossless=lossless,
+        interpret=_interpret(),
     )
 
 

@@ -1,0 +1,105 @@
+"""Hypothesis property: the codec subsystem over shapes x ebs x codecs
+(ISSUE 8 satellite).
+
+Kept in its own module because ``pytest.importorskip`` at module scope
+skips the whole file — the deterministic codec tests live in
+tests/test_codecs.py and must run even without hypothesis.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e .[dev])"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import codecs, compressor  # noqa: E402
+
+LOSSY = ("lorenzo", "lorenzo+entropy")
+EXACT = ("lossless", "passthrough")
+
+
+def _data(n, seed, smooth):
+    rng = np.random.default_rng(seed)
+    if smooth:
+        return jnp.asarray(np.cumsum(rng.normal(0, 0.01, n)), jnp.float32)
+    return jnp.asarray(rng.normal(0, 100.0, n), jnp.float32)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.sampled_from([64, 100, 256, 1537, 2048, 5000]),
+    eb=st.sampled_from([1e-2, 1e-3, 1e-4]),
+    codec=st.sampled_from(LOSSY + EXACT),
+    smooth=st.booleans(),
+    seed=st.integers(0, 1000),
+)
+def test_property_roundtrip_error_bounded(n, eb, codec, smooth, seed):
+    """Round-trip error <= eb for every lossy codec, bit-exact for the
+    exact codecs, at ANY shape/eb/data roughness."""
+    comp = codecs.build_compressor(codec, capacity_factor=2.0, fused=True)
+    x = _data(n, seed, smooth)
+    c = comp.compress(x, eb)
+    if bool(c.overflowed()):
+        return  # starved capacity is flagged, not silently wrong
+    y = comp.decompress(c)
+    if codec in EXACT:
+        np.testing.assert_array_equal(
+            np.asarray(x).view(np.uint32), np.asarray(y).view(np.uint32)
+        )
+    else:
+        assert float(jnp.max(jnp.abs(y - x))) <= eb * (1 + 1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.sampled_from([64, 100, 256, 1537, 2048, 5000]),
+    eb=st.sampled_from([1e-2, 1e-3, 1e-4]),
+    smooth=st.booleans(),
+    seed=st.integers(0, 1000),
+)
+def test_property_entropy_wire_never_longer_than_dense(n, eb, smooth, seed):
+    """The per-sub-block trimmed stream is <= the dense bitpack of the
+    SAME quantized codes for any input — the descriptor lives in the
+    existing bitwidth slot, so there is no header to amortize — and
+    strictly shorter on smooth data."""
+    x = _data(n, seed, smooth)
+    dense = codecs.build_compressor("lorenzo", capacity_factor=2.0, fused=True)
+    trim = codecs.build_compressor(
+        "lorenzo+entropy", capacity_factor=2.0, fused=True
+    )
+    cd, ct = dense.compress(x, eb), trim.compress(x, eb)
+    if bool(cd.overflowed()) or bool(ct.overflowed()):
+        return
+    assert int(ct.nwords) <= int(cd.nwords)
+    if smooth:
+        assert int(ct.nwords) < int(cd.nwords)
+    # Same quantization grid: decoded values identical across wires.
+    np.testing.assert_array_equal(
+        np.asarray(dense.decompress(cd)), np.asarray(trim.decompress(ct))
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([100, 1537, 4096]),
+    eb=st.sampled_from([1e-3, 1e-4]),
+    seed=st.integers(0, 1000),
+)
+def test_property_default_codec_bytes_unchanged(n, eb, seed):
+    """codec='lorenzo' through the registry is byte-identical to the
+    pre-registry compressor path on any input."""
+    x = _data(n, seed, smooth=True)
+    via_registry = codecs.build_compressor(
+        "lorenzo", capacity_factor=0.6, fused=True
+    )
+    direct = compressor.ErrorBoundedLorenzo(capacity_factor=0.6, fused=True)
+    a, b = via_registry.compress(x, eb), direct.compress(x, eb)
+    np.testing.assert_array_equal(np.asarray(a.packed), np.asarray(b.packed))
+    np.testing.assert_array_equal(
+        np.asarray(a.bitwidth), np.asarray(b.bitwidth)
+    )
+    np.testing.assert_array_equal(np.asarray(a.anchor), np.asarray(b.anchor))
+    assert int(a.nwords) == int(b.nwords)

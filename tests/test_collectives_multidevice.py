@@ -15,6 +15,7 @@ CHILD = pathlib.Path(__file__).parent / "_mp_collectives_child.py"
 NONPOW2_CHILD = pathlib.Path(__file__).parent / "_mp_nonpow2_child.py"
 HIER_CHILD = pathlib.Path(__file__).parent / "_mp_hier_child.py"
 FAULTS_CHILD = pathlib.Path(__file__).parent / "_mp_faults_child.py"
+CODECS_CHILD = pathlib.Path(__file__).parent / "_mp_codecs_child.py"
 SRC = str(pathlib.Path(__file__).parent.parent / "src")
 
 
@@ -75,3 +76,20 @@ def test_nonpow2_collectives_on_9_devices():
     # case (7/16 slots padding).  The trimmed schedule ships 8 chunk
     # streams; execute-vs-sim byte parity is asserted in the child.
     _run_child(NONPOW2_CHILD, GZ_CHILD_DEVICES="9")
+
+
+@pytest.mark.slow
+def test_codecs_child_on_8_devices():
+    # ISSUE 8 acceptance: codec="lorenzo+entropy" collective results match
+    # codec="lorenzo" (bitwise on allreduce — same quantization grid, FMA
+    # hop kernels), the default config stays bitwise the pre-registry
+    # lorenzo path, and exact codecs agree with the uncompressed schedule.
+    _run_child(CODECS_CHILD)
+
+
+@pytest.mark.slow
+def test_codecs_child_on_6_devices():
+    # Non-power-of-two leg of the same acceptance point: ring degenerates
+    # differently and redoub takes the non-pow2 pre-fold, so the
+    # entropy==lorenzo equivalence is re-proven at N=6.
+    _run_child(CODECS_CHILD, GZ_CHILD_DEVICES="6")
