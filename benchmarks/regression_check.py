@@ -165,6 +165,51 @@ def check_faults_overhead(here: pathlib.Path) -> None:
           f"{len(base)} (op, axis-size) points")
 
 
+def check_gradsync(here: pathlib.Path) -> None:
+    """Bucketed grad-sync provisioning vs the committed BENCH_gradsync.json.
+
+    Every compared field is a STATIC plan/model quantity — the co-planned
+    bucket size, bucket count, per-bucket and total provisioned wire
+    bytes, and the modeled schedule times (deterministic functions of the
+    calibrated Hardware point, no wall-clock) — so the comparison is
+    EXACT and any drift is fatal regardless of ``--strict``.  Wire GROWTH
+    in particular is the structural regression this gate exists for: a
+    planner or ledger change that quietly ships more gradient bytes per
+    step must not ride in under a timing threshold.  The bench itself
+    asserts the ISSUE 9 acceptance invariant (modeled overlapped step
+    strictly below serial backward+sync for every recorded model size).
+    """
+    from benchmarks import gradsync_bench
+
+    base_path = here / "BENCH_gradsync.json"
+    if not base_path.exists():
+        # A missing baseline must not read as "no regression".
+        print(f"::error::gradsync baseline missing: {base_path}")
+        sys.exit(1)
+    base = json.loads(base_path.read_text())["gradsync"]
+    now = gradsync_bench.run([], record_baseline=False)
+    bad = []
+    for name, rec in sorted(base.items()):
+        cur = now.get(name)
+        if cur is None:
+            bad.append(f"{name}: baseline model size missing from current run")
+            continue
+        for field, want in sorted(rec.items()):
+            got = cur.get(field)
+            if got != want:
+                grew = (field.endswith("wire_bytes") and isinstance(got, int)
+                        and got > want)
+                bad.append(f"{name}.{field}: {want} -> {got} "
+                           + ("(WIRE GROWTH)" if grew else
+                              "(re-record the baseline if intended)"))
+    if bad:
+        for msg in bad:
+            print(f"::error::gradsync regression: {msg}")
+        sys.exit(1)
+    print(f"gradsync: bucket plan/wire/schedule match baseline for model "
+          f"sizes {sorted(base)}")
+
+
 def check_codec_ratio(here: pathlib.Path) -> None:
     """Per-codec wire ratio vs the committed BENCH_codec.json.
 
@@ -258,6 +303,7 @@ def main() -> None:
     check_hier_wire(here)
     check_faults_overhead(here)
     check_codec_ratio(here)
+    check_gradsync(here)
 
     regressions = []
 

@@ -14,6 +14,7 @@ from benchmarks import (
     codec_bench,
     compressor_char,
     faults_bench,
+    gradsync_bench,
     hier_bench,
     hop_bench,
     image_stacking,
@@ -34,6 +35,7 @@ MODULES = [
     ("issue2_fused_hop", hop_bench),
     ("issue7_faults", faults_bench),
     ("issue8_codecs", codec_bench),
+    ("issue9_gradsync", gradsync_bench),
 ]
 
 

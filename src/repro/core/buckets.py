@@ -1,0 +1,241 @@
+"""Deterministic bucket ledger for gradient pytrees (ISSUE 9).
+
+``grad_sync`` used to ravel the whole gradient tree into one vector and
+scan a module-global fixed-size chunk schedule over it.  The ledger is
+that schedule made explicit, reusable and *orderable*: built once per
+(leaf shapes, bucket_bytes), it tiles the tree's ravel order into K
+equal-payload buckets (the last zero-padded) and records, for every
+bucket, exactly which slices of which leaves it carries.
+
+Two properties the rest of the stack leans on:
+
+  * **Exact tiling.**  Every element of every leaf lands in exactly one
+    bucket slice, with no gaps and no overlap — ``assert_tiles_exactly``
+    is the invariant the hypothesis property test sweeps over random
+    pytrees, and ``scatter`` relies on it to reassemble leaves.
+  * **Bitwise equivalence to the whole-tree chunk scan.**  Bucket ``i``'s
+    payload is element-for-element the old path's chunk ``i`` (slicing a
+    concatenation == concatenating slices; padding is zeros either way),
+    and every bucket's collective is independent of the others, so the
+    bucketed sync can issue in ANY order — last-layer-first, matching
+    backward completion order — and still produce bitwise-identical
+    values (asserted on multi-device meshes in
+    tests/_mp_gradsync_child.py).
+
+Ledgers are memoized: training steps rebuild the same (tree, SyncConfig)
+every trace, and construction walks every leaf.  ``ledger_cache_stats``
+mirrors the plan-cache observability convention of core/comm.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+__all__ = [
+    "LeafSlice",
+    "Bucket",
+    "BucketLedger",
+    "build_ledger",
+    "ledger_for",
+    "ledger_cache_stats",
+    "clear_ledger_cache",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlice:
+    """One contiguous run of a leaf's ravel order inside one bucket."""
+
+    leaf: int    # index into the flattened leaf list
+    start: int   # element range within the leaf's own ravel order
+    stop: int
+    offset: int  # where the run sits inside the bucket payload
+
+    @property
+    def size(self) -> int:
+        return self.stop - self.start
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One wire quantum: ``n_elems`` real elements, zero-padded to the
+    ledger's uniform ``bucket_elems`` payload (uniform payloads mean one
+    frozen Plan serves every bucket — one communicator-cache entry per
+    (op, bucket shape), however many buckets are in flight)."""
+
+    index: int     # position in ravel order (0 == first elements)
+    n_elems: int   # real elements; payload[n_elems:] is padding
+    slices: tuple  # LeafSlice runs, in ravel order
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLedger:
+    """Frozen tiling of a fixed leaf structure into equal buckets."""
+
+    shapes: tuple        # per-leaf shapes (the construction identity)
+    bucket_elems: int    # payload length of EVERY bucket
+    total_elems: int
+    buckets: tuple       # Bucket..., in ravel order
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    def issue_order(self) -> tuple:
+        """Buckets last-layer-first: the reverse of ravel order, i.e. the
+        order backward *completes* gradients in (the loss-side leaves sit
+        at the end of the tree), so bucket ``issue_order()[0]`` can hit
+        the wire while earlier layers are still differentiating."""
+        return tuple(reversed(self.buckets))
+
+    # -- flatten / unflatten ------------------------------------------------
+
+    def gather(self, flat_leaves, bucket: Bucket):
+        """Assemble one bucket's padded payload from 1-D leaf views.
+
+        Concatenating the recorded leaf runs reproduces the whole-tree
+        ravel's slice ``[index*B, index*B + n_elems)`` bitwise; the pad is
+        zeros, exactly like the old scan's padded tail.
+        """
+        parts = [flat_leaves[s.leaf][s.start:s.stop] for s in bucket.slices]
+        vec = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        if bucket.n_elems < self.bucket_elems:
+            vec = jnp.zeros(
+                (self.bucket_elems,), vec.dtype
+            ).at[:bucket.n_elems].set(vec)
+        return vec
+
+    def stack_payloads(self, flat_leaves):
+        """(n_buckets, bucket_elems) payload stack in ISSUE order —
+        the `lax.scan` input of the bucketed allreduce."""
+        return jnp.stack(
+            [self.gather(flat_leaves, b) for b in self.issue_order()]
+        )
+
+    def unstack(self, stacked):
+        """Invert :meth:`stack_payloads`: (n_buckets, bucket_elems) in
+        issue order -> per-leaf 1-D vectors (padding dropped)."""
+        pieces: list = [[] for _ in self.shapes]
+        for pos, bucket in enumerate(self.issue_order()):
+            vec = stacked[pos]
+            for s in bucket.slices:
+                pieces[s.leaf].append((s.start, vec[s.offset:s.offset + s.size]))
+        out = []
+        for runs in pieces:
+            runs.sort(key=lambda r: r[0])
+            parts = [v for _, v in runs]
+            out.append(parts[0] if len(parts) == 1 else jnp.concatenate(parts))
+        return out
+
+    # -- invariants ---------------------------------------------------------
+
+    def assert_tiles_exactly(self) -> None:
+        """Every leaf element covered exactly once, in ravel order, with
+        per-bucket offsets forming a gapless run of n_elems."""
+        sizes = [int(math.prod(s)) for s in self.shapes]
+        cursor = {i: 0 for i in range(len(sizes))}
+        global_off = 0
+        for bucket in self.buckets:
+            assert 0 < bucket.n_elems <= self.bucket_elems, bucket
+            off = 0
+            for s in bucket.slices:
+                assert s.offset == off, (s, off)
+                assert s.start == cursor[s.leaf], (s, cursor[s.leaf])
+                assert s.stop <= sizes[s.leaf], (s, sizes[s.leaf])
+                cursor[s.leaf] = s.stop
+                off += s.size
+            assert off == bucket.n_elems, (bucket, off)
+            global_off += bucket.n_elems
+        assert global_off == self.total_elems == sum(sizes), (
+            global_off, self.total_elems, sum(sizes))
+        assert all(cursor[i] == sizes[i] for i in cursor), (cursor, sizes)
+
+
+def build_ledger(shapes, bucket_bytes: int, *, elem_bytes: int = 4
+                 ) -> BucketLedger:
+    """Tile leaves of ``shapes`` (ravel order) into equal-payload buckets.
+
+    ``bucket_elems = min(bucket_bytes // elem_bytes, total)`` — clamped
+    exactly like the old ``chunk = min(sync.chunk, n)``, so a small tree
+    is one bucket and the default 16 MiB bucket reproduces the historic
+    4 Mi-element chunk payload bit for bit.
+    """
+    shapes = tuple(tuple(int(d) for d in s) for s in shapes)
+    sizes = [int(math.prod(s)) for s in shapes]
+    total = sum(sizes)
+    if total == 0:
+        raise ValueError(
+            "build_ledger: the leaf structure has zero elements — an "
+            "empty gradient tree cannot be bucketed (and silently "
+            "skipping gradient sync would be a correctness bug)"
+        )
+    if bucket_bytes < elem_bytes:
+        raise ValueError(
+            f"build_ledger: bucket_bytes={bucket_bytes!r} holds no "
+            f"{elem_bytes}-byte element"
+        )
+    bucket_elems = min(bucket_bytes // elem_bytes, total)
+    n_buckets = -(-total // bucket_elems)
+
+    buckets = []
+    leaf, leaf_off = 0, 0
+    for index in range(n_buckets):
+        lo = index * bucket_elems
+        hi = min(lo + bucket_elems, total)
+        slices, off = [], 0
+        while off < hi - lo:
+            take = min(sizes[leaf] - leaf_off, (hi - lo) - off)
+            if take > 0:
+                slices.append(LeafSlice(
+                    leaf=leaf, start=leaf_off, stop=leaf_off + take,
+                    offset=off,
+                ))
+                leaf_off += take
+                off += take
+            if leaf_off == sizes[leaf] and leaf < len(sizes) - 1:
+                leaf, leaf_off = leaf + 1, 0
+        buckets.append(Bucket(index=index, n_elems=hi - lo,
+                              slices=tuple(slices)))
+    ledger = BucketLedger(shapes=shapes, bucket_elems=bucket_elems,
+                          total_elems=total, buckets=tuple(buckets))
+    ledger.assert_tiles_exactly()
+    return ledger
+
+
+# ---------------------------------------------------------------------------
+# Memoization (one ledger per (leaf shapes, bucket_bytes))
+# ---------------------------------------------------------------------------
+
+_LEDGER_CACHE: dict = {}
+_LEDGER_STATS = {"hits": 0, "misses": 0}
+
+
+def ledger_for(shapes, bucket_bytes: int) -> BucketLedger:
+    """Memoized :func:`build_ledger` — the once-per-(param-tree,
+    SyncConfig) construction the training loop leans on."""
+    key = (tuple(tuple(int(d) for d in s) for s in shapes),
+           int(bucket_bytes))
+    hit = _LEDGER_CACHE.get(key)
+    if hit is not None:
+        _LEDGER_STATS["hits"] += 1
+        return hit
+    _LEDGER_STATS["misses"] += 1
+    ledger = build_ledger(shapes, bucket_bytes)
+    _LEDGER_CACHE[key] = ledger
+    return ledger
+
+
+def ledger_cache_stats() -> dict:
+    return {
+        "hits": _LEDGER_STATS["hits"],
+        "misses": _LEDGER_STATS["misses"],
+        "entries": len(_LEDGER_CACHE),
+    }
+
+
+def clear_ledger_cache() -> None:
+    _LEDGER_CACHE.clear()
+    _LEDGER_STATS["hits"] = 0
+    _LEDGER_STATS["misses"] = 0

@@ -715,6 +715,18 @@ def _codec_stat(codec: str, field: str) -> None:
     rec[field] += 1
 
 
+# Per-op hit/miss counters (op is key[0] of both caches).  The bucketed
+# grad sync resolves one plan per (op, bucket shape) and re-hits it every
+# step — by_op is how tests pin "K buckets -> K allreduce entries, all
+# later traces pure hits" without parsing raw key tuples (ISSUE 9).
+_PLAN_STATS_BY_OP: dict = {}
+
+
+def _op_stat(op: str, field: str) -> None:
+    rec = _PLAN_STATS_BY_OP.setdefault(op, {"hits": 0, "misses": 0})
+    rec[field] += 1
+
+
 def plan_cache_stats() -> dict:
     """{'hits', 'misses', 'entries', 'keys', 'by_codec', ...} —
     observability for tests and the acceptance criterion "exactly one
@@ -724,6 +736,10 @@ def plan_cache_stats() -> dict:
     the hier plan cache — the codec is the last key component of each)
     down by the requested codec key, so a test can pin
     one-entry-per-(op, codec) without parsing raw key tuples.
+
+    ``by_op`` is the same breakdown keyed on the op (key[0] of both
+    caches) — the bucketed grad sync's cache-growth contract ("one entry
+    per bucket shape, every later step a hit") reads directly off it.
     """
     by_codec = {}
     for c, rec in _PLAN_STATS_BY_CODEC.items():
@@ -733,6 +749,14 @@ def plan_cache_stats() -> dict:
             "entries": sum(1 for k in _PLAN_CACHE if k[-1] == c),
             "hier_entries": sum(1 for k in _HIER_PLAN_CACHE if k[-1] == c),
         }
+    by_op = {}
+    for o, rec in _PLAN_STATS_BY_OP.items():
+        by_op[o] = {
+            "hits": rec["hits"],
+            "misses": rec["misses"],
+            "entries": sum(1 for k in _PLAN_CACHE if k[0] == o),
+            "hier_entries": sum(1 for k in _HIER_PLAN_CACHE if k[0] == o),
+        }
     return {
         "hits": _PLAN_STATS["hits"],
         "misses": _PLAN_STATS["misses"],
@@ -741,6 +765,7 @@ def plan_cache_stats() -> dict:
         "hier_entries": len(_HIER_PLAN_CACHE),
         "hier_keys": tuple(_HIER_PLAN_CACHE),
         "by_codec": by_codec,
+        "by_op": by_op,
     }
 
 
@@ -751,6 +776,7 @@ def clear_plan_cache() -> None:
     _PLAN_STATS["hits"] = 0
     _PLAN_STATS["misses"] = 0
     _PLAN_STATS_BY_CODEC.clear()
+    _PLAN_STATS_BY_OP.clear()
 
 
 def _codec_adjusted(codec, ratio, hw):
@@ -904,9 +930,11 @@ def _resolve_plan(
     if hit is not None:
         _PLAN_STATS["hits"] += 1
         _codec_stat(codec, "hits")
+        _op_stat(op, "hits")
         return hit
     _PLAN_STATS["misses"] += 1
     _codec_stat(codec, "misses")
+    _op_stat(op, "misses")
     if op not in OPS:
         raise ValueError(f"unknown collective op {op!r}")
     try:
@@ -1006,9 +1034,11 @@ def _resolve_hier_plan(
     if hit is not None:
         _PLAN_STATS["hits"] += 1
         _codec_stat(codec, "hits")
+        _op_stat(op, "hits")
         return hit
     _PLAN_STATS["misses"] += 1
     _codec_stat(codec, "misses")
+    _op_stat(op, "misses")
     if op != "allreduce":
         raise ValueError(
             f"hierarchical plans support op='allreduce' only; got {op!r}"

@@ -53,6 +53,9 @@ __all__ = [
     "allgather_ring_gz",
     "best_pipeline_chunks",
     "best_scatter_pipeline_chunks",
+    "BucketPlan",
+    "best_bucket_plan",
+    "BUCKET_BYTES_CANDIDATES",
     "fallback_time",
     "expected_collective_time",
 ]
@@ -126,6 +129,11 @@ class Hardware:
     # so every existing Hardware point keeps its meaning.
     intra_gbps: float = 0.0       # intra-node per-link bandwidth
     intra_alpha_us: float = 0.0   # intra-node per-hop latency
+    # Dense matmul throughput of one accelerator (TFLOP/s) — the term the
+    # bucketed-overlap planner prices backward compute with.  0.0 means
+    # "uncalibrated": best_bucket_plan then treats backward as free and
+    # degenerates to pure wire-serialization planning.
+    compute_tflops: float = 0.0
     # Measured per-codec pricing (tuple of CodecTerms so the point stays
     # hashable for plan-cache keys).  Empty means "no codec was calibrated
     # here": the planner falls back to the registry's modeled defaults.
@@ -168,6 +176,7 @@ A100_SLINGSHOT = Hardware(
     pcie_gbps=64.0 * 8,
     intra_gbps=600.0 * 8,
     intra_alpha_us=2.0,
+    compute_tflops=312.0,  # A100 dense bf16 tensor-core peak
 )
 
 # TPU v5e: 819 GB/s HBM, ~50 GB/s/link ICI; Pallas dispatch overhead is
@@ -182,6 +191,7 @@ TPU_V5E = Hardware(
     net_gbps=50.0 * 8,
     net_alpha_us=1.0,
     reduce_gbps=819.0 * 8,
+    compute_tflops=197.0,  # v5e dense bf16 peak
 )
 
 
@@ -613,6 +623,111 @@ def best_scatter_pipeline_chunks(
         candidates,
         key=lambda c: scatter_binomial_gz_chunked(D, N, R, hw, c),
     )
+
+
+# --- Bucketed backward overlap (ISSUE 9) ---
+
+BUCKET_BYTES_CANDIDATES = tuple(
+    (1 << 20) * m for m in (1, 2, 4, 8, 16, 32, 64)
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Frozen co-plan of bucket size and ring pipeline depth for the
+    backward-overlapped gradient sync.
+
+    ``overlap_efficiency`` is the fraction of the total sync time hidden
+    under backward compute by the greedy schedule: 0.0 means fully serial
+    (one bucket, or no calibrated compute term), values approach 1.0 when
+    the wire is completely hidden.  All fields are static model outputs —
+    BENCH_gradsync.json pins them exactly in CI.
+    """
+
+    bucket_bytes: int        # payload per compressed allreduce
+    n_buckets: int
+    pipeline_chunks: int     # ring depth each bucket's plan resolves
+    t_backward: float        # seconds of backward compute (model)
+    t_bucket: float          # seconds per bucket allreduce (model)
+    t_sync_total: float      # n_buckets * t_bucket
+    t_serial: float          # backward THEN sync (the pre-ISSUE 9 shape)
+    t_overlapped: float      # greedy last-layer-first schedule finish
+    overlap_efficiency: float
+
+    @property
+    def speedup(self) -> float:
+        return self.t_serial / self.t_overlapped if self.t_overlapped else 1.0
+
+
+def _overlap_schedule(t_backward: float, n_buckets: int,
+                      t_bucket: float) -> float:
+    """Finish time of the greedy last-layer-first schedule.
+
+    Backward produces gradients in reverse layer order at a uniform
+    modeled rate, so bucket ``i`` (issue order) is ready at
+    ``(i+1) * t_backward / K``; the wire is a single serial resource, so
+    each bucket starts at ``max(ready_i, prev_finish)``.  Compute-bound
+    regimes finish at ``t_backward + t_bucket`` (all but the last bucket
+    fully hidden); wire-bound regimes at ``t_backward/K + K*t_bucket``
+    (the wire never idles after the first bucket lands).
+    """
+    finish = 0.0
+    for i in range(n_buckets):
+        ready = (i + 1) * t_backward / n_buckets
+        finish = max(finish, ready) + t_bucket
+    return finish
+
+
+def best_bucket_plan(
+    hw: Hardware, tree_bytes: float, backward_flops: float, n: int,
+    R: float = 20.0, *, candidates=BUCKET_BYTES_CANDIDATES,
+    fused_hop: bool = True,
+) -> BucketPlan:
+    """Co-plan bucket size with ring pipeline depth so codec work hides
+    under both ppermute AND backward FLOPs.
+
+    The tension the search resolves: big buckets keep the compressor on
+    its saturation plateau (``_util``) and amortize per-hop alphas, but
+    the first bucket cannot launch before ``t_backward / K`` — small
+    buckets start the wire earlier and drain it in parallel with the
+    remaining backward, at worse codec utilization.  Each candidate
+    prices its per-bucket allreduce through the SAME chunked-ring model
+    the plan layer uses (``best_pipeline_chunks`` →
+    ``allreduce_ring_gz_chunked``), so the depth the bucket's frozen Plan
+    will actually resolve is the depth being priced.
+    """
+    n = int(n)
+    tree_bytes = float(tree_bytes)
+    if tree_bytes <= 0:
+        raise ValueError(f"best_bucket_plan: tree_bytes={tree_bytes!r}")
+    t_backward = (
+        float(backward_flops) / (hw.compute_tflops * 1e12)
+        if hw.compute_tflops > 0 else 0.0
+    )
+    best = None
+    for cand in candidates:
+        b = int(min(cand, tree_bytes))
+        k = int(math.ceil(tree_bytes / b))
+        if n > 1:
+            depth = best_pipeline_chunks(b, n, R, hw, fused_hop=fused_hop)
+            t_bucket = allreduce_ring_gz_chunked(
+                b, n, R, hw, depth, fused_hop=fused_hop
+            )
+        else:
+            depth, t_bucket = 1, 0.0
+        t_sync = k * t_bucket
+        t_serial = t_backward + t_sync
+        t_over = _overlap_schedule(t_backward, k, t_bucket)
+        eff = (t_serial - t_over) / t_sync if t_sync > 0 else 0.0
+        plan = BucketPlan(
+            bucket_bytes=b, n_buckets=k, pipeline_chunks=depth,
+            t_backward=t_backward, t_bucket=t_bucket, t_sync_total=t_sync,
+            t_serial=t_serial, t_overlapped=t_over,
+            overlap_efficiency=eff,
+        )
+        if best is None or plan.t_overlapped < best.t_overlapped:
+            best = plan
+    return best
 
 
 # --- Data movement ---

@@ -27,10 +27,18 @@ Gradients are scale-free, so the error bound can be made *relative*: with
 (one scalar psum — cheap, and identical on every rank so quantization
 grids agree).
 
-Large pytrees are flattened to one vector and processed in fixed-size
-chunks under ``lax.scan`` so the compiled HLO stays small and each
-compression call is big enough to saturate the device — exactly the
-paper's utilization argument applied to the framework's own internals.
+Large pytrees are tiled by a deterministic ``BucketLedger``
+(core/buckets.py) into equal ``bucket_bytes`` payloads, issued
+last-layer-first under ``lax.scan`` — the compiled HLO stays small, each
+compression call is big enough to saturate the device (the paper's
+utilization argument), and the bucket boundary is exactly where
+``launch/training.py`` cuts its backward-overlap ``custom_vjp`` hooks.
+The bucketed path is bitwise-identical to the retained whole-tree
+reference (``_dp_allreduce_whole_tree_stats``): bucket payloads are the
+old chunk scan's rows, the RMS scale comes from one shared per-leaf
+sum-of-squares, and each bucket's collective is independent, so issue
+order cannot change values (asserted on multi-device meshes in
+tests/_mp_gradsync_child.py).
 """
 from __future__ import annotations
 
@@ -41,8 +49,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.flatten_util import ravel_pytree
 
+from repro.core.buckets import ledger_for
 from repro.core.collectives import GZConfig, _axis_size
 from repro.core.comm import GZCommunicator, GZHierCommunicator
 
@@ -53,26 +61,40 @@ __all__ = [
     "dp_allreduce_grads_stats",
     "fsdp_all_gather",
     "fsdp_reduce_scatter",
+    "fsdp_reduce_scatter_stats",
 ]
-
-CHUNK = 4 * 1024 * 1024  # elements per compression call (f32: 16 MiB)
 
 
 @dataclasses.dataclass(frozen=True)
 class SyncConfig:
     """How gradients cross the wire.
 
+    ``bucket_bytes``: f32 payload of one compressed collective call — the
+    BucketLedger's wire quantum (the historic module-global ``CHUNK`` of
+    4 Mi elements, now a validated per-config knob).  Small trees clamp
+    to one bucket.
+
     ``pipeline_chunks``: 0 (default) lets the communicator plan the ring
-    pipeline depth from the cost model per (chunk bytes, axis size) — the
+    pipeline depth from the cost model per (bucket bytes, axis size) — the
     chunked double-buffered schedule of DESIGN.md §4; > 0 forces that
     depth; the knob is ignored by non-ring algorithms (redoub/intring
     take no chunk schedule).
+
+    ``mark_degraded``: GradScaler-style poisoning of the FSDP backward —
+    a reduce-scatter that overflowed or saw non-finite input returns a
+    NaN-marked cotangent instead of silently corrupted values.  The only
+    dataflow out of a ``custom_vjp`` backward is the cotangent itself, so
+    this is how the sharded-axis reduce-scatter's health bit reaches
+    ``skip_on_overflow`` (launch/training.py threads it via the per-leaf
+    nonfinite check in ``_sync_grads``).  Off by default: without a skip
+    handler downstream, a NaN step is worse than a flagged lossy one.
     """
 
     gz: GZConfig | None = GZConfig(eb=1e-4, algo="redoub", worst_case_budget=False)
     relative_eb: bool = True
-    chunk: int = CHUNK
+    bucket_bytes: int = 16 * 1024 * 1024
     pipeline_chunks: int = 0
+    mark_degraded: bool = False
 
     def __post_init__(self):
         # Fail at construction time, not inside a traced scan body.
@@ -85,9 +107,12 @@ class SyncConfig:
                 "from the cost model) or a power of two >= 1 (forced "
                 f"depth); got {self.pipeline_chunks!r}"
             )
-        if self.chunk < 1:
+        if (not isinstance(self.bucket_bytes, int)
+                or self.bucket_bytes < 4 or self.bucket_bytes % 4):
             raise ValueError(
-                f"SyncConfig.chunk must be >= 1 element; got {self.chunk!r}"
+                "SyncConfig.bucket_bytes must be a positive multiple of 4 "
+                "(whole f32 elements per bucket payload); got "
+                f"{self.bucket_bytes!r}"
             )
 
     def with_algo(self, algo: str) -> "SyncConfig":
@@ -103,10 +128,20 @@ class SyncConfig:
         )
 
 
+# The shared default: dataclass instances are frozen but a mutable-default
+# in the signature (`sync=SyncConfig()`) still evaluates ONCE at import and
+# aliases every call — callers pass None and the functions resolve it here.
+DEFAULT_SYNC = SyncConfig()
+
+
+def _resolve_sync(sync: "SyncConfig | None") -> "SyncConfig":
+    return DEFAULT_SYNC if sync is None else sync
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SyncStats:
-    """Health flags of one gradient sync, OR-ed across every scan chunk.
+    """Health flags of one gradient sync, OR-ed across every bucket.
 
     ``overflow``/``nonfinite`` are replicated bool scalars (they come out
     of ``CollectiveResult`` already psum-combined across the axes), so
@@ -114,10 +149,19 @@ class SyncStats:
     on every rank.  The old single-return ``dp_allreduce_grads`` used to
     DROP these flags on the scan floor — a silent-corruption hazard when
     ``on_overflow="flag"`` — hence the ``_stats`` entry point.
+
+    ``wire_bytes``/``n_buckets`` are STATIC provisioning facts aggregated
+    across the ledger (pytree aux data, safe through jit): the per-rank
+    bytes the resolved plans ship for the whole tree, and how many bucket
+    collectives carried them.
     """
 
     overflow: jnp.ndarray
     nonfinite: jnp.ndarray
+    wire_bytes: int = dataclasses.field(
+        default=0, metadata=dict(static=True))
+    n_buckets: int = dataclasses.field(
+        default=0, metadata=dict(static=True))
 
     @property
     def degraded(self) -> jnp.ndarray:
@@ -170,34 +214,48 @@ def _global_rms(flat: jnp.ndarray, axis_names) -> jnp.ndarray:
     return jnp.sqrt(ss / max(cnt, 1.0))
 
 
-def _allreduce_flat(flat: jnp.ndarray, axis_names, sync: SyncConfig):
-    """Sync one flat vector; returns ``(out, SyncStats)``."""
-    no = jnp.zeros((), jnp.bool_)
-    if sync.gz is None:
-        out = lax.psum(flat, tuple(axis_names))
-        nf = lax.psum(
-            jnp.any(~jnp.isfinite(flat)).astype(jnp.int32), tuple(axis_names)
-        ) > 0
-        return out, SyncStats(overflow=no, nonfinite=nf)
-    if sync.relative_eb:
-        scale = jnp.maximum(_global_rms(flat, axis_names), 1e-30)
-        # A non-finite gradient poisons the RMS too; pin the scale so the
-        # fallback's sanitized sum still rescales to something finite.
-        scale = jnp.where(jnp.isfinite(scale), scale, jnp.ones_like(scale))
-        # eb must be a static trace-time constant shape; keep it as a traced
-        # scalar by folding into the data instead: normalize, sync, rescale.
-        flat = flat / scale
-    n = flat.shape[0]
-    chunk = min(sync.chunk, n)
-    n_chunks = -(-n // chunk)
-    padded = jnp.zeros((n_chunks * chunk,), flat.dtype).at[:n].set(flat)
+def _tree_scale(leaves_f32, axis_names) -> jnp.ndarray:
+    """The relative-eb scale for a LIST of 1-D f32 leaves.
 
+    Per-leaf sums of squares accumulated in leaf order, then ONE
+    multi-axis psum — the single scale authority shared by the bucketed
+    path and the whole-tree reference: f32 summation order changes last
+    bits, so both paths computing it the same way is a precondition of
+    their bitwise-identity contract.
+    """
+    ss = jnp.zeros((), jnp.float32)
+    cnt = 0.0
+    for leaf in leaves_f32:
+        ss = ss + jnp.sum(leaf ** 2)
+        cnt += float(leaf.size)
+    ss = lax.psum(ss, tuple(axis_names))
+    for ax in axis_names:
+        cnt *= _axis_size(ax)
+    scale = jnp.maximum(jnp.sqrt(ss / max(cnt, 1.0)), 1e-30)
+    # A non-finite gradient poisons the RMS too; pin the scale so the
+    # fallback's sanitized sum still rescales to something finite.
+    return jnp.where(jnp.isfinite(scale), scale, jnp.ones_like(scale))
+
+
+def _scan_allreduce(payloads: jnp.ndarray, axis_names, sync: SyncConfig):
+    """allreduce each row of ``payloads`` ((K, B), any row order) through
+    the per-axis / two-level communicator under one ``lax.scan``.
+
+    Returns ``(synced_rows, ovf, nf, wire_bytes_per_row)`` — each row's
+    collective is independent (same frozen Plan, same quantization grid
+    per row content), which is exactly why the bucketed caller may feed
+    rows last-layer-first and stay bitwise-identical to the ravel-order
+    reference.
+    """
+    no = jnp.zeros((), jnp.bool_)
+    wires: list = []
     if len(axis_names) == 1:
         comm = _comm(axis_names[0], sync)
 
         def body(carry, xc):
             o, f = carry
             res = comm.allreduce(xc)
+            wires.append(res.wire_bytes)
             return (o | res.overflow, f | res.nonfinite), res.value
     else:
         # ONE two-level plan over node × local replaces the sequential
@@ -209,17 +267,42 @@ def _allreduce_flat(flat: jnp.ndarray, axis_names, sync: SyncConfig):
         def body(carry, xc):
             o, f = carry
             res = hcomm.allreduce(xc)
+            wires.append(res.wire_bytes)
             return (o | res.overflow, f | res.nonfinite), res.value
 
-    (ovf, nf), synced = lax.scan(body, (no, no), padded.reshape(n_chunks, chunk))
-    out = synced.reshape(-1)[:n]
-    if sync.relative_eb:
-        out = out * scale
-    return out, SyncStats(overflow=ovf, nonfinite=nf)
+    (ovf, nf), synced = lax.scan(body, (no, no), payloads)
+    # The scan body traces ONCE; its static wire provision applies to
+    # every row (uniform payload shape -> one frozen Plan).
+    return synced, ovf, nf, int(wires[0]) if wires else 0
+
+
+def _psum_tree_stats(leaves, axis_names):
+    """The gz=None path: plain per-leaf psum (elementwise — identical to
+    the historic whole-ravel psum) + one nonfinite probe."""
+    axes = tuple(axis_names)
+    out = [lax.psum(leaf, axes) for leaf in leaves]
+    bad = jnp.zeros((), jnp.bool_)
+    for leaf in leaves:
+        bad = bad | jnp.any(~jnp.isfinite(leaf))
+    nf = lax.psum(bad.astype(jnp.int32), axes) > 0
+    no = jnp.zeros((), jnp.bool_)
+    raw = 4 * sum(int(leaf.size) for leaf in leaves)
+    return out, SyncStats(overflow=no, nonfinite=nf,
+                          wire_bytes=raw, n_buckets=0)
+
+
+def _flatten_grads(grads):
+    leaves, treedef = jax.tree.flatten(grads)
+    if not leaves:
+        raise ValueError(
+            "dp_allreduce_grads: empty gradient pytree — nothing to sync "
+            "(a silent no-op here would skip gradient sync)"
+        )
+    return leaves, treedef
 
 
 def dp_allreduce_grads_stats(
-    grads, axis_names: Sequence[str], sync: SyncConfig = SyncConfig()
+    grads, axis_names: Sequence[str], sync: SyncConfig | None = None
 ):
     """Sum a gradient pytree across data-parallel mesh axes (gZ-accelerated).
 
@@ -231,20 +314,96 @@ def dp_allreduce_grads_stats(
     data-parallel degrees route through the remainder-stage redoub /
     generalized ring schedules — DESIGN.md §7); an empty axis list is a
     config error, not a no-op.
+
+    Dispatch is per-BUCKET: the tree's ravel order is tiled by a memoized
+    ``BucketLedger`` into equal ``sync.bucket_bytes`` payloads issued
+    last-layer-first, each resolving (once) its own frozen Plan through
+    the communicator cache.  Values are bitwise-identical to the
+    whole-tree reference path — see the module docstring.
     """
+    sync = _resolve_sync(sync)
     axis_names = tuple(axis_names)
     if not axis_names:
         raise ValueError(
             "dp_allreduce_grads: axis_names is empty — pass the mesh axes "
             "to sum over (a silent no-op here would skip gradient sync)"
         )
-    flat, unravel = ravel_pytree(grads)
-    dtype = flat.dtype
-    out, stats = _allreduce_flat(flat.astype(jnp.float32), axis_names, sync)
-    return unravel(out.astype(dtype)), stats
+    leaves, treedef = _flatten_grads(grads)
+    dtypes = [leaf.dtype for leaf in leaves]
+    shapes = [leaf.shape for leaf in leaves]
+    f32 = [leaf.astype(jnp.float32).reshape(-1) for leaf in leaves]
+    if sync.gz is None:
+        out, stats = _psum_tree_stats(f32, axis_names)
+        out = [o.reshape(s).astype(dt)
+               for o, s, dt in zip(out, shapes, dtypes)]
+        return jax.tree.unflatten(treedef, out), stats
+    if sync.relative_eb:
+        scale = _tree_scale(f32, axis_names)
+        # eb must be a static trace-time constant; keep it relative by
+        # folding the scale into the data: normalize, sync, rescale.
+        f32 = [leaf / scale for leaf in f32]
+    ledger = ledger_for(shapes, sync.bucket_bytes)
+    payloads = ledger.stack_payloads(f32)
+    synced, ovf, nf, wire = _scan_allreduce(payloads, axis_names, sync)
+    out = ledger.unstack(synced)
+    if sync.relative_eb:
+        out = [o * scale for o in out]
+    out = [o.reshape(s).astype(dt) for o, s, dt in zip(out, shapes, dtypes)]
+    stats = SyncStats(overflow=ovf, nonfinite=nf,
+                      wire_bytes=wire * ledger.n_buckets,
+                      n_buckets=ledger.n_buckets)
+    return jax.tree.unflatten(treedef, out), stats
 
 
-def dp_allreduce_grads(grads, axis_names: Sequence[str], sync: SyncConfig = SyncConfig()):
+def _dp_allreduce_whole_tree_stats(
+    grads, axis_names: Sequence[str], sync: SyncConfig | None = None
+):
+    """REFERENCE: the pre-bucketing whole-tree ravel + fixed-size chunk
+    scan, kept for the bitwise-equality contract the multi-device children
+    assert.  Shares ``_tree_scale`` and ``_scan_allreduce`` with the
+    bucketed path — the ONLY differences are the flatten/unflatten
+    mechanics and the row order, neither of which touches values.
+    """
+    sync = _resolve_sync(sync)
+    axis_names = tuple(axis_names)
+    leaves, treedef = _flatten_grads(grads)
+    dtypes = [leaf.dtype for leaf in leaves]
+    shapes = [leaf.shape for leaf in leaves]
+    f32 = [leaf.astype(jnp.float32).reshape(-1) for leaf in leaves]
+    if sync.gz is None:
+        out, stats = _psum_tree_stats(f32, axis_names)
+        out = [o.reshape(s).astype(dt)
+               for o, s, dt in zip(out, shapes, dtypes)]
+        return jax.tree.unflatten(treedef, out), stats
+    if sync.relative_eb:
+        scale = _tree_scale(f32, axis_names)
+        f32 = [leaf / scale for leaf in f32]
+    flat = f32[0] if len(f32) == 1 else jnp.concatenate(f32)
+    n = flat.shape[0]
+    chunk = min(sync.bucket_bytes // 4, n)
+    n_chunks = -(-n // chunk)
+    padded = jnp.zeros((n_chunks * chunk,), flat.dtype).at[:n].set(flat)
+    synced, ovf, nf, wire = _scan_allreduce(
+        padded.reshape(n_chunks, chunk), axis_names, sync
+    )
+    out_flat = synced.reshape(-1)[:n]
+    if sync.relative_eb:
+        out_flat = out_flat * scale
+    out, off = [], 0
+    for s, dt in zip(shapes, dtypes):
+        size = 1
+        for d in s:
+            size *= int(d)
+        out.append(out_flat[off:off + size].reshape(s).astype(dt))
+        off += size
+    stats = SyncStats(overflow=ovf, nonfinite=nf,
+                      wire_bytes=wire * n_chunks, n_buckets=n_chunks)
+    return jax.tree.unflatten(treedef, out), stats
+
+
+def dp_allreduce_grads(
+    grads, axis_names: Sequence[str], sync: SyncConfig | None = None
+):
     """Back-compat single-return wrapper over :func:`dp_allreduce_grads_stats`
     (drops the health flags — prefer the ``_stats`` form in new code)."""
     return dp_allreduce_grads_stats(grads, axis_names, sync)[0]
@@ -271,7 +430,14 @@ def _fsdp_gather_impl(x, axis_name, sync):
         return lax.all_gather(x, axis_name, tiled=True)
     shape = x.shape
     flat = x.reshape(-1)
-    out = _comm(axis_name, sync).allgather(flat.astype(jnp.float32)).value
+    res = _comm(axis_name, sync).allgather(flat.astype(jnp.float32))
+    out = res.value
+    if sync.mark_degraded:
+        # A degraded gather already corrupted the parameter values; NaN
+        # makes that LOUD (loss -> grads -> the skip predicate) instead
+        # of silent.
+        bad = res.overflow | res.nonfinite
+        out = jnp.where(bad, jnp.full_like(out, jnp.nan), out)
     n = _axis_size(axis_name)
     return out.astype(x.dtype).reshape((n * shape[0],) + shape[1:])
 
@@ -281,20 +447,42 @@ def _fsdp_gather_fwd(x, axis_name, sync):
 
 
 def _fsdp_gather_bwd(axis_name, sync, _, g):
-    return (fsdp_reduce_scatter(g, axis_name, sync),)
+    out, stats = fsdp_reduce_scatter_stats(g, axis_name, sync)
+    if sync is not None and sync.mark_degraded:
+        # The cotangent is the only dataflow out of a custom_vjp backward:
+        # mark a degraded reduce-scatter in-band (GradScaler-style) so the
+        # training loop's per-leaf nonfinite probe sees it.
+        out = jnp.where(stats.degraded, jnp.full_like(out, jnp.nan), out)
+    return (out,)
 
 
 fsdp_all_gather.defvjp(_fsdp_gather_fwd, _fsdp_gather_bwd)
+
+
+def fsdp_reduce_scatter_stats(
+    g: jnp.ndarray, axis_name: str, sync: SyncConfig | None = None
+):
+    """Sum-and-shard along the leading axis with health flags:
+    (n*s, ...) -> ((s, ...), SyncStats)."""
+    if sync is None or sync.gz is None:
+        out = lax.psum_scatter(g, axis_name, scatter_dimension=0, tiled=True)
+        nf = lax.psum(
+            jnp.any(~jnp.isfinite(g)).astype(jnp.int32), axis_name
+        ) > 0
+        no = jnp.zeros((), jnp.bool_)
+        return out, SyncStats(overflow=no, nonfinite=nf,
+                              wire_bytes=int(g.size) * 4, n_buckets=0)
+    n = _axis_size(axis_name)
+    shape = g.shape
+    flat = g.astype(jnp.float32).reshape(n, -1).reshape(-1)
+    res = _comm(axis_name, sync).reduce_scatter(flat)
+    out = res.value.astype(g.dtype).reshape((shape[0] // n,) + shape[1:])
+    return out, SyncStats(overflow=res.overflow, nonfinite=res.nonfinite,
+                          wire_bytes=res.wire_bytes, n_buckets=1)
 
 
 def fsdp_reduce_scatter(
     g: jnp.ndarray, axis_name: str, sync: SyncConfig | None = None
 ) -> jnp.ndarray:
     """Sum-and-shard along the leading axis: (n*s, ...) -> (s, ...)."""
-    if sync is None or sync.gz is None:
-        return lax.psum_scatter(g, axis_name, scatter_dimension=0, tiled=True)
-    n = _axis_size(axis_name)
-    shape = g.shape
-    flat = g.astype(jnp.float32).reshape(n, -1).reshape(-1)
-    out = _comm(axis_name, sync).reduce_scatter(flat).value
-    return out.astype(g.dtype).reshape((shape[0] // n,) + shape[1:])
+    return fsdp_reduce_scatter_stats(g, axis_name, sync)[0]

@@ -30,6 +30,7 @@ __all__ = [
     "sim_allreduce_ring",
     "sim_allreduce_intring",
     "sim_allreduce_hier",
+    "sim_allreduce_bucketed",
     "sim_allreduce_guarded",
     "sim_allgather_ring",
     "sim_reduce_scatter_ring",
@@ -301,3 +302,57 @@ def sim_broadcast_binomial(x: np.ndarray, n: int, cfg: GZConfig):
     comp = cfg.compressor()
     rt = _roundtrip(comp, x, cfg.eb)
     return [rt.copy() for _ in range(n)]
+
+
+def sim_allreduce_bucketed(rank_leaves, bucket_bytes: int, cfg: GZConfig,
+                           *, algo: str = "redoub", topology=None):
+    """Global-view replay of the bucketed gradient sync (ISSUE 9).
+
+    ``rank_leaves`` is a per-rank list of leaf-array lists (the same leaf
+    structure on every rank).  The tree is tiled by the SAME
+    ``core.buckets`` ledger the device path resolves (uniform payloads,
+    last bucket zero-padded), each bucket runs through the matching
+    single-axis / hierarchical allreduce sim in issue order
+    (last-layer-first), and the leaf lists are reassembled from the
+    bucket outputs — so bucket boundaries, padding and issue order are
+    observable on one host exactly as ``dp_allreduce_grads`` schedules
+    them.  Pass ``topology=(n_nodes, L)`` to route buckets through
+    ``sim_allreduce_hier`` instead of the flat ``algo`` sim.
+
+    RMS scaling (``relative_eb``) is NOT replayed here: feed pre-scaled
+    leaves when comparing against a relative-eb device run.
+    """
+    from repro.core.buckets import ledger_for
+
+    n = len(rank_leaves)
+    shapes = tuple(np.asarray(x).shape for x in rank_leaves[0])
+    ledger = ledger_for(shapes, bucket_bytes)
+    flats = [
+        [np.asarray(x, np.float32).reshape(-1) for x in leaves]
+        for leaves in rank_leaves
+    ]
+    outs = [[np.zeros(s, np.float32).reshape(-1) for s in shapes]
+            for _ in range(n)]
+    sim = {
+        "redoub": sim_allreduce_redoub,
+        "ring": sim_allreduce_ring,
+        "intring": sim_allreduce_intring,
+    }[algo]
+    for bucket in ledger.issue_order():
+        payloads = []
+        for r in range(n):
+            vec = np.zeros(ledger.bucket_elems, np.float32)
+            for s in bucket.slices:
+                vec[s.offset:s.offset + s.size] = flats[r][s.leaf][s.start:s.stop]
+            payloads.append(vec)
+        if topology is not None:
+            reduced = sim_allreduce_hier(payloads, topology, cfg)
+        else:
+            reduced = sim(payloads, cfg)
+        for r in range(n):
+            for s in bucket.slices:
+                outs[r][s.leaf][s.start:s.stop] = (
+                    reduced[r][s.offset:s.offset + s.size])
+    return [
+        [v.reshape(s) for v, s in zip(leaves, shapes)] for leaves in outs
+    ]

@@ -1,7 +1,26 @@
-"""Child: grad_sync + FSDP gather/scatter on a 2x4 virtual mesh."""
-import os
+"""Child: grad_sync + FSDP gather/scatter on N virtual host devices.
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+Run with GZ_CHILD_DEVICES in {3, 6, 8} (default 8).  Checks, in order:
+
+  1. dp_allreduce_grads error bound on a flat (N,) data mesh.
+  2. ISSUE 9 bitwise contract: the bucketed ledger path equals the
+     whole-tree ravel reference EXACTLY (np.array_equal) on a multi-leaf
+     pytree spanning several buckets — flat mesh AND (for even N) the
+     2 x (N/2) hierarchical mesh with the two-level communicator.
+  3. Same bitwise contract under a forced capacity overflow with
+     on_overflow="fallback" (the lossless recovery bucket).
+  4. by-op plan-cache stats see the allreduce entries.
+  5. FSDP gather forward + custom_vjp backward vs the plain lax path,
+     plus the mark_degraded NaN poisoning satellite: a forced-overflow
+     reduce-scatter cotangent arrives NaN-marked and the training loop's
+     per-leaf nonfinite probe catches it.
+  6. Overlap hooks: value_and_grad through _install_bucket_hooks on a
+     psum-signature tree is bitwise the post-hoc _sync_grads result, and
+     the token cotangent raises the degraded flag on a poisoned rank.
+"""
+import _child_env
+
+N = _child_env.pin_device_count(8)
 
 import numpy as np
 import jax
@@ -9,53 +28,134 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.collectives import GZConfig
+from repro.core.comm import clear_plan_cache, plan_cache_stats
 from repro.core.grad_sync import (
     SyncConfig,
+    _dp_allreduce_whole_tree_stats,
     dp_allreduce_grads,
+    dp_allreduce_grads_stats,
     fsdp_all_gather,
-    fsdp_reduce_scatter,
 )
 from repro.core.shmap import shard_map
+from repro.launch.training import _install_bucket_hooks, _sync_grads
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"))
 rng = np.random.default_rng(0)
+clear_plan_cache()
 
-# --- dp_allreduce_grads over a pytree, hierarchical (data, pod) ---
+mesh = jax.make_mesh((N,), ("data",))
+
+# --- 1. dp_allreduce_grads error bound, flat (N,) mesh ---
 grads = {
-    "w": rng.normal(0, 1e-3, (8, 64, 128)).astype(np.float32),
-    "b": rng.normal(0, 1e-3, (8, 128)).astype(np.float32),
+    "w": rng.normal(0, 1e-3, (N, 64, 128)).astype(np.float32),
+    "b": rng.normal(0, 1e-3, (N, 128)).astype(np.float32),
 }
 exact = {k: v.sum(axis=0) for k, v in grads.items()}
 
 sync = SyncConfig(
     gz=GZConfig(eb=1e-5, algo="redoub", capacity_factor=1.2),
     relative_eb=True,
-    chunk=4096,
+    bucket_bytes=16384,
 )
 
 
 def body(g):
     g = jax.tree.map(lambda a: a[0], g)
-    out = dp_allreduce_grads(g, ("data", "pod"), sync)
+    out = dp_allreduce_grads(g, ("data",), sync)
     return jax.tree.map(lambda a: a[None], out)
 
 
-specs = {
-    "w": P(("pod", "data"), None, None),
-    "b": P(("pod", "data"), None),
-}
+specs = {"w": P("data", None, None), "b": P("data", None)}
 f = jax.jit(shard_map(body, mesh=mesh, in_specs=(specs,), out_specs=specs))
 out = jax.tree.map(np.asarray, f(grads))
 for k in grads:
     rms = np.sqrt((exact[k] ** 2).mean())
     err = np.abs(out[k] - exact[k][None]).max()
     # relative eb: bound scales with the global grad RMS; statistical budget
-    assert err <= 3 * 1e-5 * max(rms, 1e-3) * 8 + 1e-7, (k, err, rms)
+    assert err <= 3 * 1e-5 * max(rms, 1e-3) * N + 1e-7, (k, err, rms)
     print(f"OK dp_allreduce {k} err={err:.3e} rms={rms:.3e}")
 
-# --- fsdp gather fwd + custom vjp bwd ---
-w_full = rng.normal(0, 0.02, (32, 256)).astype(np.float32)
-sync_fsdp = SyncConfig(gz=GZConfig(eb=1e-6, capacity_factor=1.2), relative_eb=False)
+
+# --- 2. bitwise: bucketed ledger path == whole-tree ravel reference ---
+# Multi-leaf tree spanning several 4096-element buckets, with a leaf
+# boundary crossing a bucket boundary and a ragged padded tail.
+tree_shapes = {"a": (3000,), "b": (50, 50), "c": (64, 17), "d": (5000,)}
+
+
+def _mk_tree(seed):
+    r = np.random.default_rng(seed)
+    return {
+        k: r.normal(0, 1e-3, (N,) + s).astype(np.float32)
+        for k, s in tree_shapes.items()
+    }
+
+
+def _bitwise_check(mesh, axes, in_specs, sync_cfg, tree, tag):
+    def both(g):
+        g = jax.tree.map(lambda a: a[0], g)
+        bk, st = dp_allreduce_grads_stats(g, axes, sync_cfg)
+        wt, st_ref = _dp_allreduce_whole_tree_stats(g, axes, sync_cfg)
+        side["stats"], side["stats_ref"] = st, st_ref
+        pack = lambda t: jax.tree.map(lambda a: a[None], t)
+        return pack(bk), pack(wt), st.overflow, st.nonfinite
+
+    side = {}
+    fb = jax.jit(shard_map(
+        both, mesh=mesh, in_specs=(in_specs,),
+        out_specs=(in_specs, in_specs, P(), P()),
+    ))
+    bk, wt, ovf, nf = fb(tree)
+    for k in tree:
+        a, b = np.asarray(bk[k]), np.asarray(wt[k])
+        assert np.array_equal(a, b), (
+            tag, k, np.abs(a - b).max(), "bucketed != whole-tree")
+    st, st_ref = side["stats"], side["stats_ref"]
+    assert st.n_buckets == st_ref.n_buckets > 1, (st, st_ref)
+    assert st.wire_bytes == st_ref.wire_bytes > 0, (st, st_ref)
+    print(f"OK bitwise {tag} n_buckets={st.n_buckets} "
+          f"wire={st.wire_bytes} ovf={bool(np.asarray(ovf))}")
+    return bool(np.asarray(ovf))
+
+
+tree = _mk_tree(1)
+tspecs = {k: P(("data",), *([None] * len(s)))
+          for k, s in tree_shapes.items()}
+ovf = _bitwise_check(mesh, ("data",), tspecs, sync, tree, f"flat N={N}")
+assert not ovf
+
+# hierarchical 2 x (N/2) mesh: same contract through the two-level plan
+if N % 2 == 0 and N >= 4:
+    hmesh = jax.make_mesh((2, N // 2), ("pod", "data"))
+    htree = _mk_tree(2)
+    hspecs = {k: P(("pod", "data"), *([None] * len(s)))
+              for k, s in tree_shapes.items()}
+    ovf = _bitwise_check(
+        hmesh, ("data", "pod"), hspecs, sync, htree, f"hier 2x{N // 2}")
+    assert not ovf
+else:
+    print(f"SKIP hier (N={N} odd)")
+
+# --- 3. forced-overflow fallback bucket stays bitwise-identical ---
+sync_ovf = SyncConfig(
+    gz=GZConfig(eb=1e-9, algo="redoub", capacity_factor=0.02,
+                on_overflow="fallback"),
+    relative_eb=True,
+    bucket_bytes=16384,
+)
+ovf = _bitwise_check(
+    mesh, ("data",), tspecs, sync_ovf, _mk_tree(3), "fallback-overflow")
+assert ovf, "capacity_factor=0.02 must force an overflow"
+
+# --- 4. by-op plan cache stats ---
+stats = plan_cache_stats()
+assert stats["by_op"].get("allreduce", {}).get("misses", 0) > 0, stats
+assert (stats["by_op"]["allreduce"]["entries"]
+        + stats["by_op"]["allreduce"].get("hier_entries", 0)) > 0, stats
+print("OK by_op stats", {k: v["misses"] for k, v in stats["by_op"].items()})
+
+# --- 5. fsdp gather fwd + custom vjp bwd ---
+w_full = rng.normal(0, 0.02, (8 * N, 256)).astype(np.float32)
+sync_fsdp = SyncConfig(gz=GZConfig(eb=1e-6, capacity_factor=1.2),
+                       relative_eb=False)
 
 
 def loss_fn(w_shard, t):
@@ -68,7 +168,7 @@ def fsdp_body(w, t):
     return l, g
 
 
-t_full = rng.normal(0, 0.02, (32, 256)).astype(np.float32)
+t_full = rng.normal(0, 0.02, (8 * N, 256)).astype(np.float32)
 f = jax.jit(
     shard_map(
         fsdp_body,
@@ -82,11 +182,11 @@ l = np.asarray(l)
 g = np.asarray(g)
 want_l = ((w_full - t_full) ** 2).sum()
 # every data rank computes the same replicated loss, so the reduce-scatter
-# sums 4 identical cotangents (standard FSDP semantics): grad = n_data * 2(w-t)
-want_g = 4 * 2 * (w_full - t_full)
+# sums N identical cotangents (standard FSDP semantics): grad = N * 2(w-t)
+want_g = N * 2 * (w_full - t_full)
 assert np.allclose(l, want_l, rtol=1e-3), (l, want_l)
 err = np.abs(g - want_g).max()
-assert err <= 5e-4, err
+assert err <= 5e-4 * N, err
 
 
 # equivalence vs the uncompressed lax path
@@ -106,7 +206,97 @@ f_plain = jax.jit(
 l2, g2 = f_plain(w_full, t_full)
 assert np.allclose(np.asarray(l2), l, rtol=1e-4)
 gerr = np.abs(np.asarray(g2) - g).max()
-assert gerr <= 5e-4, gerr
+assert gerr <= 5e-4 * N, gerr
 print(f"OK fsdp gather/vjp grad_err={err:.3e} vs_plain={gerr:.3e}")
+
+# mark_degraded satellite: a forced-overflow reduce-scatter cotangent is
+# NaN-marked, and the _sync_grads per-leaf probe raises the degraded bit
+sync_mark = SyncConfig(
+    gz=GZConfig(eb=1e-9, capacity_factor=0.02, on_overflow="flag"),
+    relative_eb=False, mark_degraded=True,
+)
+
+
+def degraded_body(w, t):
+    def lf(w_shard):
+        return jnp.sum((fsdp_all_gather(w_shard, "data", sync_mark) - t) ** 2)
+
+    g = jax.grad(lf)(w)
+    synced, flag = _sync_grads(
+        {"w": g}, {"w": P("data", None)}, ("data",), {})
+    return jnp.any(~jnp.isfinite(g)), flag
+
+
+f_mark = jax.jit(shard_map(
+    degraded_body, mesh=mesh,
+    in_specs=(P("data", None), P(None, None)), out_specs=(P(), P()),
+))
+has_nan, flag = f_mark(w_full, t_full)
+assert bool(np.asarray(has_nan)), "mark_degraded should NaN-poison the grad"
+assert bool(np.asarray(flag)), "_sync_grads probe must catch the NaN mark"
+print("OK mark_degraded NaN mark reaches the _sync_grads probe")
+
+# --- 6. overlap hooks == post-hoc _sync_grads (psum signature, bitwise) ---
+params = {
+    "w1": rng.normal(0, 0.02, (300, 7)).astype(np.float32),
+    "w2": rng.normal(0, 0.02, (41,)).astype(np.float32),
+    "w3": rng.normal(0, 0.02, (9, 9)).astype(np.float32),
+}
+coef = {k: rng.normal(0, 1.0, v.shape).astype(np.float32) for k, v in params.items()}
+pspecs = {k: P(*([None] * params[k].ndim)) for k in params}
+
+
+def hook_body(p, c, r):
+    # per-rank distinct loss so the psum'd grads are nontrivial
+    def lf(p, tok):
+        hooked, tok_out, _ = _install_bucket_hooks(
+            p, pspecs, ("data",), {}, 1024, tok)
+        loss = sum(jnp.sum(h * cc * (1.0 + r))
+                   for h, cc in zip(jax.tree.leaves(hooked),
+                                    jax.tree.leaves(c)))
+        return loss + 0.0 * tok_out
+
+    (g, g_tok) = jax.grad(lf, argnums=(0, 1))(p, jnp.zeros((), jnp.float32))
+    ref, flag = _sync_grads(
+        jax.tree.map(lambda cc: cc * (1.0 + r), c), pspecs, ("data",), {})
+    return g, ref, g_tok, flag
+
+
+rank_r = np.arange(N, dtype=np.float32)
+f_hook = jax.jit(shard_map(
+    hook_body, mesh=mesh,
+    in_specs=(pspecs, pspecs, P("data")),
+    out_specs=(pspecs, pspecs, P(), P()),
+))
+g, ref, g_tok, flag = f_hook(params, coef, rank_r)
+for k in params:
+    assert np.array_equal(np.asarray(g[k]), np.asarray(ref[k])), (
+        k, "hooked grads != _sync_grads")
+assert float(np.asarray(g_tok)) == 0.0
+assert not bool(np.asarray(flag))
+print("OK overlap hooks bitwise == _sync_grads, clean token")
+
+
+def hook_poison_body(p, c):
+    def lf(p, tok):
+        hooked, tok_out, _ = _install_bucket_hooks(
+            p, pspecs, ("data",), {}, 1024, tok)
+        loss = sum(jnp.sum(h * cc)
+                   for h, cc in zip(jax.tree.leaves(hooked),
+                                    jax.tree.leaves(c)))
+        return loss + 0.0 * tok_out
+
+    _, g_tok = jax.grad(lf, argnums=(0, 1))(p, jnp.zeros((), jnp.float32))
+    return g_tok
+
+
+poisoned = dict(coef)
+poisoned["w2"] = np.full_like(coef["w2"], np.nan)
+g_tok = jax.jit(shard_map(
+    hook_poison_body, mesh=mesh,
+    in_specs=(pspecs, pspecs), out_specs=P(),
+))(params, poisoned)
+assert float(np.asarray(g_tok)) > 0, "NaN cotangent must raise the token"
+print("OK overlap hooks token flags a poisoned cotangent")
 
 print("ALL OK")

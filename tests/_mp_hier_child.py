@@ -188,7 +188,7 @@ grads = {
 }
 exact = {k: v.sum(axis=0) for k, v in grads.items()}
 sync = SyncConfig(gz=GZConfig(eb=1e-5, algo="redoub", capacity_factor=1.2),
-                  relative_eb=True, chunk=1024)
+                  relative_eb=True, bucket_bytes=4096)
 specs = {"w": P(AX, None, None), "b": P(AX, None)}
 
 

@@ -1,0 +1,58 @@
+"""Hypothesis property (ISSUE 9 satellite): bucket ledgers tile the tree
+EXACTLY — every element of every leaf lands in exactly one bucket slice,
+no gaps, no overlap — across random pytree shapes and bucket sizes, and
+the stack/unstack roundtrip is the identity.
+
+Kept in its own module because ``pytest.importorskip`` at module scope
+skips the whole file — the deterministic mirrors live in
+tests/test_buckets.py and run even without hypothesis.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e .[dev])"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.buckets import build_ledger  # noqa: E402
+
+SHAPES = st.lists(
+    st.lists(st.integers(1, 9), min_size=0, max_size=3).map(tuple),
+    min_size=1,
+    max_size=8,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(shapes=SHAPES, bucket_elems=st.integers(1, 200))
+def test_property_ledger_tiles_exactly(shapes, bucket_elems):
+    total = sum(int(np.prod(s)) for s in shapes)
+    led = build_ledger(shapes, 4 * bucket_elems)
+    led.assert_tiles_exactly()
+    assert led.total_elems == total
+    assert led.bucket_elems == min(bucket_elems, total)
+    assert led.n_buckets == -(-total // led.bucket_elems)
+    # no overlap, no gap, full cover — element-count double entry
+    covered = np.zeros(total, np.int32)
+    starts = np.cumsum([0] + [int(np.prod(s)) for s in shapes])
+    for b in led.buckets:
+        for s in b.slices:
+            covered[starts[s.leaf] + s.start: starts[s.leaf] + s.stop] += 1
+    assert (covered == 1).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(shapes=SHAPES, bucket_elems=st.integers(1, 200), seed=st.integers(0, 99))
+def test_property_stack_unstack_roundtrip(shapes, bucket_elems, seed):
+    r = np.random.default_rng(seed)
+    led = build_ledger(shapes, 4 * bucket_elems)
+    leaves = [
+        jnp.asarray(r.normal(size=int(np.prod(s))).astype(np.float32))
+        for s in shapes
+    ]
+    back = led.unstack(led.stack_payloads(leaves))
+    for a, b in zip(leaves, back):
+        assert np.array_equal(np.asarray(a), np.asarray(b))

@@ -16,13 +16,19 @@ SRC = str(pathlib.Path(__file__).parent.parent / "src")
 
 
 @pytest.mark.slow
-def test_grad_sync_on_2x4_mesh():
+@pytest.mark.parametrize("n_devices", [3, 6, 8])
+def test_grad_sync_multi_device(n_devices):
+    """ISSUE 9 sweep: bucketed-vs-whole-tree bitwise equality (flat and
+    2 x (N/2) hierarchical meshes, incl. a forced-overflow fallback
+    bucket), fsdp vjp parity, mark_degraded poisoning and the overlap
+    hooks — at N in {3, 6, 8} host devices (odd, even, power of two)."""
     proc = subprocess.run(
         [sys.executable, str(CHILD)],
         capture_output=True,
         text=True,
         timeout=900,
-        env={**os.environ, "PYTHONPATH": SRC},
+        env={**os.environ, "PYTHONPATH": SRC,
+             "GZ_CHILD_DEVICES": str(n_devices)},
     )
     assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
     assert "ALL OK" in proc.stdout

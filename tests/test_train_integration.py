@@ -15,11 +15,11 @@ from repro.optim.adamw import AdamWConfig, adamw_init
 STEPS, BATCH, SEQ = 12, 4, 64
 
 
-def _train(arch, grad_gz=None, steps=STEPS):
+def _train(arch, grad_gz=None, steps=STEPS, **setup_kwargs):
     cfg = registry.get(arch, smoke=True)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     opt = AdamWConfig(lr=1e-3, total_steps=steps, warmup_steps=2)
-    setup = make_setup(cfg, mesh, opt=opt, grad_gz=grad_gz)
+    setup = make_setup(cfg, mesh, opt=opt, grad_gz=grad_gz, **setup_kwargs)
     _, bspecs = train_specs(cfg, InputShape("t", SEQ, BATCH, "train"), mesh)
     step_fn = make_train_step(setup, bspecs)
     params = init_params(setup.defs, jax.random.key(0))
@@ -50,6 +50,27 @@ def test_gz_grad_sync_trains():
         "minitron-8b", GZConfig(eb=1e-5, algo="redoub")
     )
     assert losses[-1] < losses[0] - 0.2
+
+
+@pytest.mark.slow
+def test_overlap_sync_trains_identically():
+    """ISSUE 9: the per-bucket backward hooks are value-neutral — on a
+    1-device mesh every reduction degenerates to identity in BOTH paths,
+    so overlapped and post-hoc training must produce bitwise-equal
+    params.  (Multi-device hook/value parity is asserted in
+    tests/_mp_gradsync_child.py.)"""
+    gz = GZConfig(eb=1e-5, algo="redoub")
+    losses, params, _ = _train("minitron-8b", gz, steps=3)
+    losses_ov, params_ov, _ = _train(
+        "minitron-8b", gz, steps=3, overlap_sync=True,
+        bucket_bytes=256 * 1024,  # force several buckets per group
+    )
+    assert losses == losses_ov, (losses, losses_ov)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params_ov)):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype.name == "bfloat16":
+            a, b = a.view(np.uint16), b.view(np.uint16)
+        np.testing.assert_array_equal(a, b)
 
 
 def test_checkpoint_roundtrip(tmp_path):
