@@ -38,6 +38,77 @@ def check_step_count_consistency() -> None:
     print("step-count consistency: plan accounting == cost model for n in 2..33")
 
 
+def check_schedule_authority(here: pathlib.Path) -> None:
+    """Static single-authority gate (ISSUE 10): every lax.ppermute perm in
+    src/repro must flow from core/schedule.py's route tables.  Runs the
+    same AST scan CI runs (scripts/check_schedule_authority.py) so a
+    local ``python -m benchmarks.regression_check`` catches ad-hoc routes
+    before push.  Structural — always fatal.
+    """
+    import subprocess
+
+    script = here.parent / "scripts" / "check_schedule_authority.py"
+    root = here.parent / "src" / "repro"
+    proc = subprocess.run(
+        [sys.executable, str(script), "--root", str(root)],
+        capture_output=True, text=True,
+    )
+    sys.stdout.write(proc.stdout)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr)
+        print("::error::schedule-authority static check failed (see above)")
+        sys.exit(1)
+
+
+def check_schedule_wire_parity() -> None:
+    """Single wire authority (ISSUE 10): replaying the plan's route table
+    hop by hop (simulator.sim_wire_bytes measures each entry's container
+    with jax.eval_shape of the REAL compressor) must reproduce the plan's
+    provisioned ``wire_bytes`` EXACTLY, for every op, flat algorithm, and
+    the hierarchical path.  The executed ``CollectiveResult.wire_bytes``
+    reads the same plan field, so this pins sim == priced == executed;
+    the multi-device children assert the executed leg on a real mesh.
+    Structural schedule arithmetic, not timing — always fatal.
+    """
+    from repro.core import cost_model, simulator
+    from repro.core.collectives import GZConfig
+    from repro.core.comm import GZCommunicator, GZHierCommunicator
+
+    checked = 0
+    for op, algo in (("allreduce", "ring"), ("allreduce", "redoub"),
+                     ("allreduce", "intring"), ("reduce_scatter", "auto"),
+                     ("allgather", "auto"), ("scatter", "auto"),
+                     ("broadcast", "auto"), ("all_to_all", "auto")):
+        for n in (2, 6, 9):
+            for elems in (4096, 70000):
+                cfg = GZConfig(eb=1e-3, algo=algo)
+                plan = GZCommunicator("i", axis_size=n, config=cfg).plan(
+                    op, (elems,), "float32")
+                sim = simulator.sim_wire_bytes(plan)
+                if sim != plan.wire_bytes:
+                    print(f"::error::schedule wire parity: table replay "
+                          f"({sim}) != plan.wire_bytes ({plan.wire_bytes}) "
+                          f"for {op}/{plan.algo} n={n} elems={elems}")
+                    sys.exit(1)
+                checked += 1
+    for topo in ((2, 3), (3, 2), (2, 2)):
+        for hw in (cost_model.TPU_V5E, cost_model.A100_SLINGSHOT):
+            c = GZHierCommunicator("node", "local", config=GZConfig(eb=1e-3),
+                                   hw=hw, topology=topo)
+            plan = c.plan((70000,), "float32")
+            sim = simulator.sim_wire_bytes(plan)
+            priced = (plan.flat_plan.wire_bytes if plan.flat
+                      else plan.intra_wire_bytes + plan.inter_wire_bytes)
+            if sim != priced:
+                print(f"::error::schedule wire parity (hier): table replay "
+                      f"({sim}) != priced wire ({priced}) for "
+                      f"topology={topo} hw={hw.name} flat={plan.flat}")
+                sys.exit(1)
+            checked += 1
+    print(f"schedule wire parity: table replay == plan.wire_bytes exactly "
+          f"for {checked} plan(s) (flat ops x n x elems + hier topologies)")
+
+
 def check_scatter_wire(here: pathlib.Path) -> None:
     """Provisioned scatter wire vs the committed BENCH_scatter.json.
 
@@ -299,6 +370,8 @@ def main() -> None:
 
     # Structural invariants, independent of timing noise: fatal on mismatch.
     check_step_count_consistency()
+    check_schedule_authority(here)
+    check_schedule_wire_parity()
     check_scatter_wire(here)
     check_hier_wire(here)
     check_faults_overhead(here)

@@ -1,0 +1,157 @@
+"""Static schedule-authority check (ISSUE 10 satellite).
+
+``core/schedule.py`` is THE source of every ``lax.ppermute`` perm: the
+builders author (sender, receiver) routes once, ``Schedule.perm(k)`` /
+``schedule.ring_perm`` / ``schedule.tree_plan`` hand them to the execute
+layer, and the generic walkers forward them as opaque values.  This
+script fails CI if anyone reintroduces an ad-hoc route — the drift class
+the Schedule IR exists to make structurally impossible.
+
+Two AST rules over ``src/repro`` (``core/schedule.py`` itself exempt):
+
+  1. a ``ppermute(...)`` call whose perm argument (3rd positional or
+     ``perm=`` keyword) is CONSTRUCTED AT THE CALL SITE — a list/tuple
+     display, comprehension, or generator — instead of a name flowing
+     from the schedule module;
+  2. an assignment binding a name matching ``perm``/``*_perm``/``perms``
+     to such an inline construction.
+
+Constructions that merely REPACKAGE authority output — they reference
+``sched``/``schedule`` or its route accessors (``perm``, ``ring_perm``,
+``tree_plan``, ...) inside, e.g. ``[sched.perm(k) for k in range(s)]``
+— are clean: wrapping is not authoring.
+
+A deliberate exception (currently only the PR 4 padded-tree byte-parity
+oracle in collectives.py) carries the allowlist comment
+
+    # schedule-authority: allow — <reason>
+
+on the offending line or one of the two lines above it.
+
+Usage: python scripts/check_schedule_authority.py [--root src/repro]
+Exit 0 when clean; exit 1 listing every violation.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import re
+import sys
+
+ALLOW = "schedule-authority: allow"
+AUTHORITY = "core/schedule.py"  # the one module allowed to author routes
+
+INLINE_NODES = (ast.List, ast.Tuple, ast.ListComp, ast.GeneratorExp,
+                ast.SetComp)
+PERM_NAME = re.compile(r"(^|_)perms?$")
+
+
+def _is_inline_perm(node: ast.AST) -> bool:
+    """Constructed-at-the-call-site route values: displays/comprehensions
+    (possibly wrapped in a tuple()/list() cast or concatenated)."""
+    if isinstance(node, INLINE_NODES):
+        return True
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        return _is_inline_perm(node.left) or _is_inline_perm(node.right)
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id in ("list", "tuple", "sorted", "reversed"):
+        return bool(node.args) and _is_inline_perm(node.args[0])
+    return False
+
+
+_AUTHORITY_NAMES = {"sched", "schedule"}
+_AUTHORITY_ATTRS = {"perm", "ring_perm", "tree_plan", "binomial_slab_table",
+                    "redoub_layout", "rounds", "route_table"}
+
+
+def _flows_from_authority(node: ast.AST) -> bool:
+    """True when the construction merely repackages routes the schedule
+    module authored (e.g. ``[sched.perm(k) for k in ...]``) — wrapping
+    or slicing authority output is not authoring."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in _AUTHORITY_NAMES:
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr in _AUTHORITY_ATTRS:
+            return True
+    return False
+
+
+def _allowed(lines, lineno: int) -> bool:
+    lo = max(0, lineno - 3)  # the line itself or the two above it
+    return any(ALLOW in ln for ln in lines[lo:lineno])
+
+
+def _perm_arg(call: ast.Call):
+    """The route argument of a ppermute(x, axis_name, perm) call."""
+    for kw in call.keywords:
+        if kw.arg == "perm":
+            return kw.value
+    if len(call.args) >= 3:
+        return call.args[2]
+    return None
+
+
+def check_file(path: pathlib.Path, rel: str) -> list:
+    src = path.read_text()
+    lines = src.splitlines()
+    tree = ast.parse(src, filename=str(path))
+    bad = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            fn = node.func
+            name = fn.attr if isinstance(fn, ast.Attribute) else (
+                fn.id if isinstance(fn, ast.Name) else "")
+            if name != "ppermute":
+                continue
+            arg = _perm_arg(node)
+            if arg is not None and _is_inline_perm(arg) \
+                    and not _flows_from_authority(arg) \
+                    and not _allowed(lines, node.lineno):
+                bad.append((rel, node.lineno,
+                            "ppermute perm constructed at the call site"))
+        elif isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            named = [t.id for t in targets
+                     if isinstance(t, ast.Name) and PERM_NAME.search(t.id)]
+            value = node.value
+            if named and value is not None and _is_inline_perm(value) \
+                    and not _flows_from_authority(value) \
+                    and not _allowed(lines, node.lineno):
+                bad.append((rel, node.lineno,
+                            f"route table '{named[0]}' authored outside "
+                            f"{AUTHORITY}"))
+    return bad
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default="src/repro",
+                    help="package root to scan (default src/repro)")
+    args = ap.parse_args()
+    root = pathlib.Path(args.root)
+    if not root.is_dir():
+        print(f"::error::schedule-authority: no such root {root}")
+        return 1
+    violations = []
+    n_files = 0
+    for path in sorted(root.rglob("*.py")):
+        rel = path.as_posix()
+        if rel.endswith(AUTHORITY):
+            continue  # the authority itself
+        n_files += 1
+        violations += check_file(path, rel)
+    for rel, lineno, msg in violations:
+        print(f"::error file={rel},line={lineno}::schedule-authority: {msg} "
+              f"(route tables live in {AUTHORITY}; a deliberate exception "
+              f"needs '# {ALLOW} — <reason>')")
+    if violations:
+        return 1
+    print(f"schedule-authority: {n_files} files clean — every ppermute perm "
+          f"flows from {AUTHORITY}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -65,7 +65,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import bitpack, codecs, cost_model, error_budget, faults
+from repro.core import bitpack, codecs, cost_model, error_budget, faults, \
+    schedule
 from repro.core.compressed import (
     Compressed, capacity_words_for, validate_capacity_factor,
 )
@@ -205,7 +206,8 @@ def _ppermute(tree, axis_name, perm):
 
 
 def _ring_perm(n: int):
-    return [(i, (i + 1) % n) for i in range(n)]
+    """Ring perm, sourced from the schedule authority (core/schedule.py)."""
+    return schedule.ring_perm(n)
 
 
 def _or_across(ovf, axis_name):
@@ -279,19 +281,24 @@ def _tree_checksum(tree) -> jnp.ndarray:
     return total
 
 
-def _ppermute_guarded(tree, axis_name, perm, guard):
+def _ppermute_guarded(tree, axis_name, perm, guard, round_idx=None):
     """``_ppermute`` + optional end-to-end stream verification.
 
     The fault-injection wire hook (core/faults.py) applies to the
     received payload unconditionally (identity when no fault is
-    installed).  With ``guard`` a whole-buffer XOR checksum of the SENT
-    tree travels on the same perm as a separate scalar ppermute and is
-    compared against a recomputed checksum of the received tree; ranks
-    unaddressed by ``perm`` receive zero streams AND a zero checksum, so
-    they can never false-positive.  Returns ``(recv, bad)``.
+    installed).  ``round_idx`` is the schedule-table round this exchange
+    implements (may be a traced loop index) — a round-targeted
+    ``FaultSpec(rounds=...)`` corrupts only matching rounds, so an
+    injected bitflip lands on the identical wire exchange in the table
+    replay and on a real mesh.  With ``guard`` a whole-buffer XOR
+    checksum of the SENT tree travels on the same perm as a separate
+    scalar ppermute and is compared against a recomputed checksum of the
+    received tree; ranks unaddressed by ``perm`` receive zero streams
+    AND a zero checksum, so they can never false-positive.  Returns
+    ``(recv, bad)``.
     """
     recv = _ppermute(tree, axis_name, perm)
-    recv = faults.maybe_corrupt_wire(recv, axis_name)
+    recv = faults.maybe_corrupt_wire(recv, axis_name, round_idx=round_idx)
     if not guard:
         return recv, jnp.zeros((), jnp.bool_)
     chk_sent = lax.ppermute(_tree_checksum(tree), axis_name, perm)
@@ -329,10 +336,7 @@ def _lossless_scatter(x_full, axis_name, cfg: GZConfig, n):
 def _lossless_broadcast(x, axis_name, cfg: GZConfig, n):
     r = lax.axis_index(axis_name)
     buf = _sanitize(x.reshape(-1).astype(jnp.float32))
-    for span, full_senders, trim in cost_model.binomial_slab_table(n):
-        perm = [(i, i + span) for i in full_senders]
-        if trim is not None:
-            perm.append((trim[0], trim[1]))
+    for span, _full, _trim, perm in schedule.tree_plan(n):
         recv = lax.ppermute(buf, axis_name, perm)
         has = (r % (span * 2)) == span
         buf = jnp.where(has, recv, buf)
@@ -384,15 +388,10 @@ def _redoub_layout(n: int):
     each even physical rank ``2i < 2*rem`` folds its data into ``2i + 1``
     and sits out, and gets the result back in a post-hop.  ``phys`` maps a
     virtual participant rank to its physical rank (the odd halves of the
-    folded pairs first, then the untouched tail).
+    folded pairs first, then the untouched tail).  Delegates to the
+    schedule authority (the same layout the route-table builder uses).
     """
-    p = 1 << (max(n, 1).bit_length() - 1)
-    rem = n - p
-
-    def phys(v: int) -> int:
-        return 2 * v + 1 if v < rem else v + rem
-
-    return p, rem, phys
+    return schedule.redoub_layout(n)
 
 
 def _allreduce_redoub(x, axis_name, cfg: GZConfig):
@@ -429,7 +428,7 @@ def _allreduce_redoub(x, axis_name, cfg: GZConfig):
     eb_stage = error_budget.allocate(
         cfg.eb, "allreduce_redoub", n, worst_case=cfg.worst_case_budget
     )
-    p, rem, phys = _redoub_layout(n)
+    p, rem, _phys = _redoub_layout(n)
     steps = p.bit_length() - 1  # == log2(p)
     r = lax.axis_index(axis_name)
     # Remainder-stage masks (all False / trivially true when rem == 0).
@@ -437,11 +436,14 @@ def _allreduce_redoub(x, axis_name, cfg: GZConfig):
     is_fold_src = in_pair & (r % 2 == 0)   # folds into partner, then idles
     is_fold_dst = in_pair & (r % 2 == 1)   # absorbs partner, sends back
     is_participant = ~is_fold_src
-    pre_perm = [(2 * i, 2 * i + 1) for i in range(rem)]
-    post_perm = [(2 * i + 1, 2 * i) for i in range(rem)]
-    step_perms = [
-        [(phys(v), phys(v ^ (1 << k))) for v in range(p)] for k in range(steps)
-    ]
+    # Every perm comes from the route table: round 0 is the fold pre-hop
+    # (remainder axes only), rounds base..base+steps-1 the XOR doubling,
+    # round base+steps the unfold post-hop.
+    sched = schedule.build("allreduce", "redoub", n)
+    base = 1 if rem else 0
+    pre_perm = sched.perm(0) if rem else ()
+    step_perms = [sched.perm(base + k) for k in range(steps)]
+    post_perm = sched.perm(base + steps) if rem else ()
     acc = x
     overflow = jnp.zeros((), jnp.bool_)
 
@@ -453,7 +455,9 @@ def _allreduce_redoub(x, axis_name, cfg: GZConfig):
         # remainder axis, on step 0 (everyone) otherwise.
         overflow |= c.overflowed() & (is_fold_src if rem else True)
         if rem:
-            c_recv, bad = _ppermute_guarded(c, axis_name, pre_perm, guard)
+            c_recv, bad = _ppermute_guarded(
+                c, axis_name, pre_perm, guard, round_idx=0
+            )
             overflow |= bad
             c, acc = comp.decompress_reduce_compress(
                 c_recv, acc, eb_stage, return_updated=True
@@ -461,7 +465,7 @@ def _allreduce_redoub(x, axis_name, cfg: GZConfig):
             overflow |= c.overflowed() & is_participant
         for k in range(steps):
             c_recv, bad = _ppermute_guarded(
-                c, axis_name, step_perms[k], guard
+                c, axis_name, step_perms[k], guard, round_idx=base + k
             )
             overflow |= bad
             if k < steps - 1:
@@ -479,7 +483,9 @@ def _allreduce_redoub(x, axis_name, cfg: GZConfig):
             else:  # last hop: emit the plain f32 accumulator
                 acc = comp.decompress_reduce(c_recv, acc)
         if rem:
-            c_back, bad = _ppermute_guarded(c, axis_name, post_perm, guard)
+            c_back, bad = _ppermute_guarded(
+                c, axis_name, post_perm, guard, round_idx=base + steps
+            )
             overflow |= bad
             acc = jnp.where(is_fold_src, comp.decompress(c_back), acc)
         return acc, overflow
@@ -487,19 +493,25 @@ def _allreduce_redoub(x, axis_name, cfg: GZConfig):
     if rem:
         c = comp.compress(acc, eb_stage)
         overflow |= c.overflowed() & is_fold_src
-        c_recv, bad = _ppermute_guarded(c, axis_name, pre_perm, guard)
+        c_recv, bad = _ppermute_guarded(
+            c, axis_name, pre_perm, guard, round_idx=0
+        )
         overflow |= bad
         acc = comp.decompress_reduce(c_recv, acc)
     for k in range(steps):
         c = comp.compress(acc, eb_stage)
         overflow |= c.overflowed() & is_participant
-        c_recv, bad = _ppermute_guarded(c, axis_name, step_perms[k], guard)
+        c_recv, bad = _ppermute_guarded(
+            c, axis_name, step_perms[k], guard, round_idx=base + k
+        )
         overflow |= bad
         acc = comp.decompress_reduce(c_recv, acc)
     if rem:
         c = comp.compress(acc, eb_stage)
         overflow |= c.overflowed() & is_fold_dst
-        c_back, bad = _ppermute_guarded(c, axis_name, post_perm, guard)
+        c_back, bad = _ppermute_guarded(
+            c, axis_name, post_perm, guard, round_idx=base + steps
+        )
         overflow |= bad
         acc = jnp.where(is_fold_src, comp.decompress(c_back), acc)
     return acc, overflow
@@ -550,7 +562,8 @@ def _reduce_scatter_ring(x, axis_name, cfg: GZConfig, eb_stage, *, owner_offset=
 
         def body(s, carry):
             c, overflow = carry
-            c_recv, bad = _ppermute_guarded(c, axis_name, perm, guard)
+            c_recv, bad = _ppermute_guarded(c, axis_name, perm, guard,
+                                            round_idx=s)
             recv_idx = (r - s - 1 + t) % n
             c_next, _ = comp.decompress_reduce_compress(
                 c_recv, _chunk(acc, recv_idx, chunk_n), eb_stage
@@ -558,7 +571,8 @@ def _reduce_scatter_ring(x, axis_name, cfg: GZConfig, eb_stage, *, owner_offset=
             return c_next, overflow | bad | c_next.overflowed()
 
         c, overflow = lax.fori_loop(0, n - 2, body, (c, overflow))
-        c_recv, bad = _ppermute_guarded(c, axis_name, perm, guard)
+        c_recv, bad = _ppermute_guarded(c, axis_name, perm, guard,
+                                        round_idx=n - 2)
         overflow |= bad
         recv_idx = (r - (n - 2) - 1 + t) % n
         updated = comp.decompress_reduce(c_recv, _chunk(acc, recv_idx, chunk_n))
@@ -570,7 +584,8 @@ def _reduce_scatter_ring(x, axis_name, cfg: GZConfig, eb_stage, *, owner_offset=
         recv_idx = (r - s - 1 + t) % n
         c = comp.compress(_chunk(acc, send_idx, chunk_n), eb_stage)
         overflow |= c.overflowed()
-        c_recv, bad = _ppermute_guarded(c, axis_name, perm, guard)
+        c_recv, bad = _ppermute_guarded(c, axis_name, perm, guard,
+                                        round_idx=s)
         overflow |= bad
         updated = comp.decompress_reduce(c_recv, _chunk(acc, recv_idx, chunk_n))
         return _set_chunk(acc, updated, recv_idx, chunk_n), overflow
@@ -697,7 +712,7 @@ def _reduce_scatter_ring_pipelined(x, axis_name, cfg: GZConfig, eb_stage, *,
             pend.append(c)
         pend = _stack_trees(pend)
         c_fly, bad0 = _ppermute_guarded(
-            _index_tree(pend, 0), axis_name, perm, guard
+            _index_tree(pend, 0), axis_name, perm, guard, round_idx=0
         )
         overflow |= bad0
 
@@ -707,7 +722,8 @@ def _reduce_scatter_ring_pipelined(x, axis_name, cfg: GZConfig, eb_stage, *,
             # runs: pend[(u+1) % P] was produced by hop u+1-P (or the
             # fill), so the ppermute has no dependency on this hop.
             c_fly_next, bad = _ppermute_guarded(
-                _index_tree(pend, (u + 1) % p_chunks), axis_name, perm, guard
+                _index_tree(pend, (u + 1) % p_chunks), axis_name, perm,
+                guard, round_idx=(u + 1) // p_chunks,
             )
             s, p = u // p_chunks, u % p_chunks
             recv_idx = (r - s - 1 + t0) % n
@@ -725,7 +741,8 @@ def _reduce_scatter_ring_pipelined(x, axis_name, cfg: GZConfig, eb_stage, *,
         for p in range(p_chunks):
             if p + 1 < p_chunks:
                 c_fly_next, bad = _ppermute_guarded(
-                    _index_tree(pend, p + 1), axis_name, perm, guard
+                    _index_tree(pend, p + 1), axis_name, perm, guard,
+                    round_idx=n - 2,
                 )
                 overflow |= bad
             updated = comp.decompress_reduce(
@@ -753,7 +770,8 @@ def _reduce_scatter_ring_pipelined(x, axis_name, cfg: GZConfig, eb_stage, *,
         # so this op is independent of the ppermute below (the overlap).
         c_next = send_piece(acc, t + 1)
         overflow |= c_next.overflowed()
-        c_recv, bad = _ppermute_guarded(c_in, axis_name, perm, guard)
+        c_recv, bad = _ppermute_guarded(c_in, axis_name, perm, guard,
+                                        round_idx=t // p_chunks)
         overflow |= bad
         s, p = t // p_chunks, t % p_chunks
         recv_idx = (r - s - 1 + t0) % n
@@ -765,7 +783,8 @@ def _reduce_scatter_ring_pipelined(x, axis_name, cfg: GZConfig, eb_stage, *,
 
     acc, c_last, overflow = lax.fori_loop(0, T - 1, body, (acc, c0, overflow))
     # Pipeline drain: the final piece's hop.
-    c_recv, bad = _ppermute_guarded(c_last, axis_name, perm, guard)
+    c_recv, bad = _ppermute_guarded(c_last, axis_name, perm, guard,
+                                    round_idx=n - 2)
     overflow |= bad
     recv_idx = (r - (n - 2) - 1 + t0) % n
     updated = comp.decompress_reduce(
@@ -791,7 +810,7 @@ def _compress_own_pieces(buf, own_idx, eb, cfg: GZConfig, chunk_n, piece_n,
 
 
 def _forward_pieces_ring(buf, pieces, axis_name, cfg: GZConfig, recv_idx_fn,
-                         chunk_n, piece_n):
+                         chunk_n, piece_n, round_offset=0):
     """Forward P compressed pieces around the ring for n-1 steps, installing
     decompressed copies at chunk ``recv_idx_fn(s)`` each step.
 
@@ -810,7 +829,8 @@ def _forward_pieces_ring(buf, pieces, axis_name, cfg: GZConfig, recv_idx_fn,
         recv_idx = recv_idx_fn(s)
         new_pieces = []
         for p, c_p in enumerate(pieces):
-            c_new, b = _ppermute_guarded(c_p, axis_name, perm, guard)
+            c_new, b = _ppermute_guarded(c_p, axis_name, perm, guard,
+                                         round_idx=round_offset + s)
             bad |= b
             buf = _set_piece(
                 buf, comp.decompress(c_new), recv_idx, p, chunk_n, piece_n
@@ -836,6 +856,7 @@ def _allgather_forward_pipelined(acc, axis_name, cfg: GZConfig, eb_stage,
         acc, pieces, axis_name, cfg,
         lambda s: (r - s) % n,  # chunk owned by rank (r - 1 - s)
         chunk_n, piece_n,
+        round_offset=n - 1,  # allgather rounds follow the n-1 RS rounds
     )
     return acc, overflow | bad
 
@@ -879,7 +900,8 @@ def _allreduce_ring(x, axis_name, cfg: GZConfig):
 
     def body(s, carry):
         acc, c_cur, bad = carry
-        c_new, b = _ppermute_guarded(c_cur, axis_name, perm, guard)
+        c_new, b = _ppermute_guarded(c_cur, axis_name, perm, guard,
+                                     round_idx=(n - 1) + s)
         recv_idx = (r - s) % n  # chunk owned by rank (r - 1 - s)
         acc_new = _set_chunk(acc, comp.decompress(c_new), recv_idx, chunk_n)
         return acc_new, c_new, bad | b
@@ -963,7 +985,8 @@ def _allreduce_intring(x, axis_name, cfg: GZConfig):
         recv_idx = (r - s - 1) % n
         wire, nwords = pack_codes(getc(state, send_idx))
         overflow |= nwords > cap
-        wire, bad = _ppermute_guarded(wire, axis_name, perm, guard)
+        wire, bad = _ppermute_guarded(wire, axis_name, perm, guard,
+                                      round_idx=s)
         state = setc(state, addc(getc(state, recv_idx), unpack_codes(wire)), recv_idx)
         return state, overflow | bad
 
@@ -974,7 +997,8 @@ def _allreduce_intring(x, axis_name, cfg: GZConfig):
 
     def ag_body(s, carry):
         state, cur, bad = carry
-        nxt, b = _ppermute_guarded(cur, axis_name, perm, guard)
+        nxt, b = _ppermute_guarded(cur, axis_name, perm, guard,
+                                   round_idx=(n - 1) + s)
         recv_idx = (r - s) % n
         state = setc(state, unpack_codes(nxt), recv_idx)
         return state, nxt, bad | b
@@ -1210,7 +1234,8 @@ def _execute_allgather(x, axis_name, cfg: GZConfig):
 
     def body(s, carry):
         out, c_cur, bad = carry
-        c_new, b = _ppermute_guarded(c_cur, axis_name, perm, guard)
+        c_new, b = _ppermute_guarded(c_cur, axis_name, perm, guard,
+                                     round_idx=s)
         src = (r - s - 1) % n
         out = _set_chunk(out, comp.decompress(c_new), src, chunk_n)
         return out, c_new, bad | b
@@ -1311,7 +1336,7 @@ def _scatter_held_buffers(x_full, n, cfg: GZConfig):
 
 
 def _slab_exchange(held, axis_name, r, perm, start, slab, n_virt, is_recv,
-                   guard=False):
+                   guard=False, round_idx=None):
     """Ship a ``slab``-chunk window of the held buffers along ``perm`` and
     install it at the receiver's own rank index (everyone else keeps its
     buffer).  One static ppermute shape per call.  Returns
@@ -1325,7 +1350,8 @@ def _slab_exchange(held, axis_name, r, perm, start, slab, n_virt, is_recv,
         ),
         held,
     )
-    recv, bad = _ppermute_guarded(piece, axis_name, perm, guard)
+    recv, bad = _ppermute_guarded(piece, axis_name, perm, guard,
+                                  round_idx=round_idx)
     installed = jax.tree.map(
         lambda h, rv: lax.dynamic_update_slice(
             h, rv, (r,) + (0,) * (h.ndim - 1)
@@ -1343,21 +1369,27 @@ def _scatter_tree_trimmed(held, axis_name, r, n, n_virt, cfg: GZConfig):
     """Trimmed-slab binomial tree (DESIGN.md §7): each round ships only
     the real ranks of the receiver's subtree.
 
-    The schedule comes from ``cost_model.binomial_slab_table`` — the same
-    authority the plan layer prices and the simulator replays.  Per round:
-    the full-span exchanges (receiver subtree entirely real) run as today,
-    split into ``cfg.pipeline_chunks`` piece-permute chains; the at most
-    one boundary exchange ships its ``n - receiver`` real chunks as ONE
-    extra ppermute shape (its slab size is not a power of two, so it is
-    not piece-split).  The padding slots of the held buffers never travel:
-    the root ships exactly n-1 chunk streams at any axis size.
+    The schedule comes from ``schedule.tree_plan`` — the route table the
+    plan layer prices and the simulator replays, with each round's
+    ``ppermute`` perm taken verbatim from the table's hop entries.  Per
+    round: the full-span exchanges (receiver subtree entirely real) run
+    as today, split into ``cfg.pipeline_chunks`` piece-permute chains;
+    the at most one boundary exchange ships its ``n - receiver`` real
+    chunks as ONE extra ppermute shape (its slab size is not a power of
+    two, so it is not piece-split).  The padding slots of the held
+    buffers never travel: the root ships exactly n-1 chunk streams at
+    any axis size.
     """
     guard = cfg.verify_streams
     corrupt = jnp.zeros((), jnp.bool_)
-    for span, full_senders, trim in cost_model.binomial_slab_table(n):
+    for k, (span, full_senders, trim, perm) in enumerate(
+        schedule.tree_plan(n)
+    ):
         start = r + span  # sender's outgoing slab start (own subtree's right half)
+        # The table lists the full-span entries first, then the at most
+        # one trimmed boundary entry — slice, don't re-derive.
+        perm_full = perm[: len(full_senders)]
         if full_senders:
-            perm = [(i, i + span) for i in full_senders]
             # Full receivers: the span-aligned odd subtree heads whose
             # whole virtual subtree is real.
             is_recv = ((r % (span * 2)) == span) & (r + span <= n)
@@ -1365,15 +1397,16 @@ def _scatter_tree_trimmed(held, axis_name, r, n, n_virt, cfg: GZConfig):
             sub = span // groups
             for g in range(groups):
                 held, bad = _slab_exchange(
-                    held, axis_name, r + g * sub, perm, start + g * sub,
-                    sub, n_virt, is_recv, guard,
+                    held, axis_name, r + g * sub, perm_full,
+                    start + g * sub, sub, n_virt, is_recv, guard,
+                    round_idx=k,
                 )
                 corrupt |= bad
         if trim is not None:
             snd, rcv, slab = trim
             held, bad = _slab_exchange(
-                held, axis_name, r, [(snd, rcv)], start, slab, n_virt,
-                r == rcv, guard,
+                held, axis_name, r, perm[len(full_senders):], start, slab,
+                n_virt, r == rcv, guard, round_idx=k,
             )
             corrupt |= bad
     return held, corrupt
@@ -1391,6 +1424,7 @@ def _scatter_tree_padded_reference(held, axis_name, r, n, n_virt,
     corrupt = jnp.zeros((), jnp.bool_)
     for k in reversed(range(steps)):
         span = 1 << k
+        # schedule-authority: allow — PR 4 byte-parity oracle, kept verbatim
         perm = [(i, i + span) for i in range(0, n_virt, span * 2)
                 if i + span < n]
         is_recv = (r % (span * 2)) == span
@@ -1412,7 +1446,7 @@ def _execute_scatter(x_full, axis_name, cfg: GZConfig, *, root: int = 0,
     Arbitrary axis sizes run the TRIMMED-SLAB schedule (DESIGN.md §7):
     ``ceil(log2 n)`` rounds over a virtual power-of-two rank space, but
     each exchange ships only the real ranks of the receiver's subtree
-    (``cost_model.binomial_slab_table``), so the root's provisioned wire
+    (``schedule.tree_plan``), so the root's provisioned wire
     is exactly n-1 chunk streams at any n — the virtual tree's padding
     chunks are held locally (zero streams keeping slab arithmetic static)
     and never travel.  On power-of-two axes the schedule is identical to
@@ -1582,8 +1616,8 @@ def _execute_broadcast(x, axis_name, cfg: GZConfig, *, root: int = 0):
 
     Arbitrary axis sizes: ``ceil(log2 n)`` rounds of halving spans whose
     forwarding pairs come from the SAME trimmed schedule authority as the
-    scatter (``cost_model.binomial_slab_table`` — the full-span pairs plus
-    the at-most-one trimmed boundary pair per round; exchanges whose
+    scatter (``schedule.tree_plan`` — the full-span pairs plus the
+    at-most-one trimmed boundary pair per round; exchanges whose
     receiver does not exist never appear).  The payload is the one full
     compressed message either way, so trimming changes no bytes here — it
     guarantees schedule/accounting cannot drift (DESIGN.md §7): every real
@@ -1605,11 +1639,9 @@ def _execute_broadcast(x, axis_name, cfg: GZConfig, *, root: int = 0):
     # the root's stream travels, so only its flag is meaningful.
     ovf = c.overflowed() & (r == 0)
     guard = cfg.verify_streams
-    for span, full_senders, trim in cost_model.binomial_slab_table(n):
-        perm = [(i, i + span) for i in full_senders]
-        if trim is not None:
-            perm.append((trim[0], trim[1]))
-        c_recv, bad = _ppermute_guarded(c, axis_name, perm, guard)
+    for k, (span, _full, _trim, perm) in enumerate(schedule.tree_plan(n)):
+        c_recv, bad = _ppermute_guarded(c, axis_name, perm, guard,
+                                        round_idx=k)
         has = (r % (span * 2)) == span
         ovf |= bad & has
         c = jax.tree.map(lambda new, old: jnp.where(has, new, old), c_recv, c)

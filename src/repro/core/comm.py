@@ -66,7 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core import codecs, cost_model, error_budget, faults
+from repro.core import codecs, cost_model, error_budget, faults, schedule
 from repro.core.compressed import capacity_words_for
 from repro.kernels import ops
 
@@ -77,6 +77,8 @@ __all__ = [
     "CollectiveResult",
     "GZCommunicator",
     "GZHierCommunicator",
+    "select_allreduce",
+    "select_allreduce_plan",
     "assert_step_count_consistency",
     "register_policy",
     "policy_names",
@@ -209,6 +211,12 @@ class Plan:
     codec: str = "lorenzo"
     codec_ratio: float = 1.0
     notes: tuple = ()
+    # The resolved Schedule IR (ISSUE 10): the frozen per-round route
+    # table the execute layer walks, the simulator replays, the wire
+    # accounting sums and the fault injector targets — authored once by
+    # ``schedule.build`` at plan resolution.  None only on plans built
+    # by hand in tests.
+    route_table: Optional[schedule.Schedule] = None
 
     def as_config(self):
         """The concrete GZConfig the execute layer dispatches on."""
@@ -284,6 +292,11 @@ class HierPlan:
     # inter stage's on the hierarchical path — the intra stages are
     # uncompressed and carry no codec).
     codec: str = "lorenzo"
+    # The resolved Schedule IR of the path that executes: the flat
+    # sub-plan's table, or the two-level composition from
+    # ``schedule.build_hier`` (raw exact intra rounds around the lifted
+    # compressed inter rounds) on the hierarchical path.
+    route_table: Optional[schedule.Schedule] = None
 
     @property
     def ratio(self) -> float:
@@ -396,48 +409,78 @@ def _wire_accounting(op, algo, n_elems, n, capacity_factor, chunks,
                      codec: str = "lorenzo"):
     """(capacity_words, wire_bytes, uncompressed_bytes) for one call.
 
-    Per-rank send bytes, upper bound (tree collectives report the busiest
-    rank).  Mirrors the hop structure AND the padding of the execute layer
-    in core/collectives.py — including the pipelined schedules'
-    whole-tile piece quantum and the non-power-of-two remainder stage /
-    virtual tree — so the reported provisioning matches the buffers XLA
-    actually ships.  Step counts come from ``cost_model.steps_for``, the
-    single authority the cost model evaluates too (ceil(log2 n) for the
-    log-depth schedules), so wire accounting can never disagree with the
-    costing again.  ``raw`` is the uncompressed-equivalent payload (no
-    padding): what the lax.* collective would move.
+    Per-rank send bytes, upper bound: SUM the resolved route table
+    (``schedule.build(op, algo, n)`` — the same table the execute layer
+    walks and the simulator replays, ISSUE 10).  Every entry is priced by
+    the payload it ships at the op's transport granularity (full message,
+    padded ring piece, tree chunk slab, integer code rows — the
+    ``_entry_pricers`` closures mirror the execute layer's padding), the
+    per-sender totals are accumulated, and the busiest rank's total is
+    the provisioned wire.  Because perms, replay and pricing all read
+    ONE table, step drift (the PR 4 floor-vs-ceil class) is structurally
+    impossible.  ``raw`` sums the same entries' uncompressed-equivalent
+    (unpadded) payloads: what the lax.* collective would move.
+    """
+    cap, entry_wire, entry_raw = _entry_pricers(
+        op, algo, n_elems, n, capacity_factor, chunks, codec)
+    if n < 2:
+        # Degenerate axis: the route table has no wire rounds.  Preserve
+        # the historic provisioning: one full stream for the log-depth
+        # ops (steps_for floors n at 2), zero for the rings.
+        if (op == "allreduce" and algo == "redoub") or op == "broadcast":
+            return cap, _stream_bytes(n_elems, capacity_factor, codec), \
+                n_elems * 4
+        if op == "all_to_all":
+            h = schedule.Hop(0, 0, (0, 1), "lossy", "compressed")
+            return cap, entry_wire(h), entry_raw(h)
+        return cap, 0, 0
+    table = schedule.build(op, algo, n)
+    send = [0] * n
+    send_raw = [0] * n
+    for rnd in table.rounds:
+        for h in rnd:
+            send[h.sender] += entry_wire(h)
+            send_raw[h.sender] += entry_raw(h)
+    return cap, max(send), max(send_raw)
+
+
+def _entry_pricers(op, algo, n_elems, n, capacity_factor, chunks, codec):
+    """Per-table-entry pricing closures for one op's transport.
+
+    Returns ``(capacity_words, entry_wire(h), entry_raw(h))``: the
+    provisioned capacity of one wire stream, and the compressed /
+    uncompressed-equivalent bytes one :class:`schedule.Hop` ships —
+    including the execute layer's padding (pipelined rings pad to
+    whole-tile pieces, intring pads chunks to whole code rows).
     """
     p = max(chunks, 1)
-    if op == "allreduce":
-        if algo == "redoub":
-            steps = cost_model.steps_for("redoub", n)
-            cap = codecs.codec_capacity_words(codec, n_elems, capacity_factor)
-            wire = steps * _stream_bytes(n_elems, capacity_factor, codec)
-            raw = steps * n_elems * 4
-            return cap, wire, raw
-        if algo == "intring":
-            # execute pads each chunk to whole row-tiles of int codes
-            chunk = ops.n_blocks_for(-(-n_elems // n)) * ops.BLOCK
-            cap = capacity_words_for(chunk, capacity_factor, ops.BLOCK)
-            wire = 2 * (n - 1) * _int_stream_bytes(chunk, capacity_factor)
-            raw = 2 * (n - 1) * (-(-n_elems // n)) * 4
-            return cap, wire, raw
+    if op == "allreduce" and algo == "redoub" or op == "broadcast":
+        cap = codecs.codec_capacity_words(codec, n_elems, capacity_factor)
+        stream = _stream_bytes(n_elems, capacity_factor, codec)
+        return cap, (lambda h: stream), (lambda h: n_elems * 4)
+    if op == "allreduce" and algo == "intring":
+        # execute pads each chunk to whole row-tiles of int codes
+        chunk = ops.n_blocks_for(-(-n_elems // max(n, 1))) * ops.BLOCK
+        cap = capacity_words_for(chunk, capacity_factor, ops.BLOCK)
+        stream = _int_stream_bytes(chunk, capacity_factor)
+        chunk_in = -(-n_elems // max(n, 1))
+        return cap, (lambda h: stream), (lambda h: chunk_in * 4)
+    if op == "allreduce":  # float ring
         chunk, piece = _ring_piece_sizes(n_elems, n, chunks)
         cap = codecs.codec_capacity_words(codec, piece, capacity_factor)
-        wire = 2 * (n - 1) * p * _stream_bytes(piece, capacity_factor, codec)
-        raw = 2 * (n - 1) * (-(-n_elems // n)) * 4
-        return cap, wire, raw
+        stream = p * _stream_bytes(piece, capacity_factor, codec)
+        chunk_in = -(-n_elems // max(n, 1))
+        return cap, (lambda h: stream), (lambda h: chunk_in * 4)
     if op == "reduce_scatter":
-        chunk_in = -(-n_elems // n)
+        chunk_in = -(-n_elems // max(n, 1))
         if p > 1:  # execute pads each chunk to p whole-tile pieces
             quantum = p * _PIECE_QUANTUM
             piece = (-(-chunk_in // quantum) * quantum) // p
         else:
             piece = chunk_in
         cap = codecs.codec_capacity_words(codec, piece, capacity_factor)
-        wire = (n - 1) * p * _stream_bytes(piece, capacity_factor, codec)
-        raw = (n - 1) * chunk_in * 4
-        return cap, wire, raw
+        stream = p * _stream_bytes(piece, capacity_factor, codec)
+        return cap, (lambda h: stream), (lambda h: chunk_in * 4)
     if op == "allgather":
         if p > 1:  # execute pads the own chunk to p whole-tile pieces
             quantum = p * _PIECE_QUANTUM
@@ -445,33 +488,23 @@ def _wire_accounting(op, algo, n_elems, n, capacity_factor, chunks,
         else:
             piece = n_elems
         cap = codecs.codec_capacity_words(codec, piece, capacity_factor)
-        wire = (n - 1) * p * _stream_bytes(piece, capacity_factor, codec)
-        raw = (n - 1) * n_elems * 4
-        return cap, wire, raw
+        stream = p * _stream_bytes(piece, capacity_factor, codec)
+        return cap, (lambda h: stream), (lambda h: n_elems * 4)
     if op == "scatter":
-        chunk = -(-n_elems // n)
+        # Trimmed-slab schedule: each entry ships one compressed stream
+        # per REAL chunk in its slab, so the root's entries sum to
+        # exactly n-1 chunk streams at ANY axis size (the padded virtual
+        # tree's zero-padding chunks never appear in the table).
+        chunk = -(-n_elems // max(n, 1))
         cap = codecs.codec_capacity_words(codec, chunk, capacity_factor)
-        # Trimmed-slab schedule: the root ships one stream per REAL rank
-        # in its children's subtrees — exactly n-1 chunk streams at ANY
-        # axis size (the padded virtual tree's 2**ceil(log2 n) - 1 is
-        # gone; its zero-padding chunks no longer travel).  Summed from
-        # the same slab table the execute layer walks.
-        streams = cost_model.scatter_root_chunk_streams(n)
-        wire = streams * _stream_bytes(chunk, capacity_factor, codec)
-        raw = (n - 1) * chunk * 4
-        return cap, wire, raw
-    if op == "broadcast":
-        steps = cost_model.steps_for("binomial", n)
-        cap = codecs.codec_capacity_words(codec, n_elems, capacity_factor)
-        wire = steps * _stream_bytes(n_elems, capacity_factor, codec)  # root
-        raw = steps * n_elems * 4
-        return cap, wire, raw
+        stream = _stream_bytes(chunk, capacity_factor, codec)
+        return cap, (lambda h: h.chunk_slab[1] * stream), \
+            (lambda h: h.chunk_slab[1] * chunk * 4)
     if op == "all_to_all":
-        chunk = -(-n_elems // n)
+        chunk = -(-n_elems // max(n, 1))
         cap = codecs.codec_capacity_words(codec, chunk, capacity_factor)
-        wire = n * _stream_bytes(chunk, capacity_factor, codec)
-        raw = n * chunk * 4
-        return cap, wire, raw
+        stream = _stream_bytes(chunk, capacity_factor, codec)
+        return cap, (lambda h: stream), (lambda h: chunk * 4)
     raise ValueError(f"unknown op {op!r}")
 
 
@@ -561,6 +594,90 @@ def _eb_stage(op, algo, eb, n, worst_case):
 
 
 # ---------------------------------------------------------------------------
+# Algorithm selection (the paper's §3.3.3 design framework)
+#
+# Moved here from core/selector.py (now a deprecation shim): the policy
+# registry below is the ONLY selection authority, and these are its cost
+# evaluators.
+# ---------------------------------------------------------------------------
+
+
+def select_allreduce(
+    d_bytes: int,
+    n_ranks: int,
+    ratio: float = 20.0,
+    hw: cost_model.Hardware = cost_model.TPU_V5E,
+    *,
+    allow_beyond_paper: bool = False,
+) -> str:
+    """Return 'ring' | 'redoub' (| 'intring' when beyond-paper allowed).
+
+    The PAPER's selector (§3.3.3): with GPU compression in the loop the
+    classic "ring for large messages" rule inverts once the per-chunk
+    size D/N falls below the compressor's saturation point; recursive
+    doubling's log2(N) *saturated* compressions then win despite moving
+    more bytes.  Both algorithms are costed under the paper's two-kernel
+    multi-stream-overlap models (no fused hop on either side —
+    ``allreduce_ring_gz`` has none, so redoub must not get one either or
+    the crossover is biased).  The production planner with the fused-hop
+    schedule is :func:`select_allreduce_plan`.  A conservative default
+    compression ratio of 20x (paper Table 1 sees 46-94x on RTM data) is
+    used unless the caller passes a measured one.
+    """
+    costs = {
+        "ring": cost_model.allreduce_ring_gz(d_bytes, n_ranks, ratio, hw),
+        "redoub": cost_model.allreduce_redoub_gz(
+            d_bytes, n_ranks, ratio, hw, fused_hop=False
+        ),
+    }
+    if allow_beyond_paper:
+        costs["intring"] = cost_model.allreduce_intring_gz(
+            d_bytes, n_ranks, ratio, hw)
+    return min(costs, key=costs.get)
+
+
+def select_allreduce_plan(
+    d_bytes: int,
+    n_ranks: int,
+    ratio: float = 20.0,
+    hw: cost_model.Hardware = cost_model.TPU_V5E,
+    *,
+    allow_beyond_paper: bool = False,
+    chunk_candidates=cost_model.PIPELINE_CHUNK_CANDIDATES,
+    fused_hop: bool = True,
+) -> tuple:
+    """Pick (algo, pipeline_chunks) from the explicit per-chunk cost model.
+
+    Ring is costed under the chunked double-buffered schedule at its best
+    chunk count (DESIGN.md §4): above the compressor saturation size the
+    pipelined ring strictly dominates the sequential one, so the plan
+    comes back with chunks > 1; below it, per-piece overhead wins and the
+    plan degrades to the sequential schedule (chunks == 1).  ReDoub
+    compresses full messages — its overlap is already a single long
+    chain, so it takes no chunk knob (returned chunks apply to ring
+    only).  ``fused_hop`` costs BOTH algorithms' hops as single-pass
+    ``t_hop_fused`` kernels and pushes the ring's best chunk count
+    deeper.
+    """
+    ring_chunks = cost_model.best_pipeline_chunks(
+        d_bytes, n_ranks, ratio, hw, chunk_candidates, fused_hop=fused_hop
+    )
+    costs = {
+        ("ring", ring_chunks): cost_model.allreduce_ring_gz_chunked(
+            d_bytes, n_ranks, ratio, hw, ring_chunks, fused_hop=fused_hop
+        ),
+        ("redoub", 1): cost_model.allreduce_redoub_gz(
+            d_bytes, n_ranks, ratio, hw, fused_hop=fused_hop
+        ),
+    }
+    if allow_beyond_paper:
+        costs[("intring", 1)] = cost_model.allreduce_intring_gz(
+            d_bytes, n_ranks, ratio, hw
+        )
+    return min(costs, key=costs.get)
+
+
+# ---------------------------------------------------------------------------
 # Policy registry
 # ---------------------------------------------------------------------------
 
@@ -633,8 +750,6 @@ def _policy_auto(req: PlanRequest):
         return _data_movement_plan(req)
     algo, chunks = req.requested_algo, req.requested_chunks
     if algo is None:
-        from repro.core.selector import select_allreduce_plan
-
         algo, _ = select_allreduce_plan(
             req.nbytes, req.axis_size, req.ratio, req.hw,
             fused_hop=req.fused_hop,
@@ -655,8 +770,6 @@ def _policy_paper(req: PlanRequest):
         return _OP_ALGO[req.op], max(req.requested_chunks, 1)
     algo = req.requested_algo
     if algo is None:
-        from repro.core.selector import select_allreduce
-
         algo = select_allreduce(req.nbytes, req.axis_size, req.ratio, req.hw)
     return algo, max(req.requested_chunks, 1)
 
@@ -672,8 +785,6 @@ def _policy_throughput(req: PlanRequest):
         return _data_movement_plan(req)
     algo, chunks = req.requested_algo, req.requested_chunks
     if algo is None:
-        from repro.core.selector import select_allreduce_plan
-
         algo, _ = select_allreduce_plan(
             req.nbytes, req.axis_size, req.ratio, req.hw,
             allow_beyond_paper=True, fused_hop=req.fused_hop,
@@ -967,6 +1078,8 @@ def _resolve_plan(
         on_overflow=on_overflow, verify_streams=verify_streams,
         fallback=_fallback_plan(op, n_elems, axis_size, hw),
         codec=codec, codec_ratio=codec_ratio, notes=notes,
+        route_table=(schedule.build(op, algo, axis_size)
+                     if axis_size >= 2 else None),
     )
     _PLAN_CACHE[key] = plan
     return plan
@@ -1096,6 +1209,8 @@ def _resolve_hier_plan(
         intra_wire = 2 * (L - 1) * shard_elems * 4
         inter_wire = inter.wire_bytes if inter else 0
         t_model = t_hier
+    route = (flat_plan.route_table if flat else schedule.build_hier(
+        n_nodes, L, inter.algo if inter else "ring"))
     plan = HierPlan(
         op=op, topology=topology, n_elems=n_elems, nbytes=nbytes,
         dtype=str(dtype), eb=eb, flat=flat,
@@ -1107,6 +1222,7 @@ def _resolve_hier_plan(
         fallback=_fallback_plan(op, n_elems, N, hw),
         codec=(flat_plan.codec if flat
                else (inter.codec if inter else "lorenzo")),
+        route_table=route,
     )
     _HIER_PLAN_CACHE[key] = plan
     return plan
@@ -1762,12 +1878,11 @@ def measure_ppermute(mesh, axis_name, *, sizes=(1 << 14, 1 << 17, 1 << 20),
 
     from jax.sharding import PartitionSpec as P
 
-    from repro.core.collectives import _ring_perm
     from repro.core.shmap import shard_map
 
     sizes_of = dict(zip(mesh.axis_names, mesh.devices.shape))
     n = sizes_of[axis_name]
-    perm = _ring_perm(n)
+    perm = schedule.ring_perm(n)
 
     samples = []
     for n_elems in sizes:

@@ -25,6 +25,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+from repro.core import schedule as _schedule
+
 __all__ = [
     "Hardware",
     "CodecTerms",
@@ -227,47 +229,12 @@ def steps_for(algo: str, n: int) -> int:
     raise ValueError(f"unknown algo {algo!r}")
 
 
-def binomial_slab_table(n: int) -> tuple:
-    """Trimmed-slab binomial-tree schedule over ``n`` ranks (top-down).
-
-    The ONE schedule authority for the log-depth tree collectives
-    (scatter slabs, broadcast forwarding pairs): the execute layer
-    (``collectives._execute_scatter`` / ``_execute_broadcast``), the plan
-    layer (``comm._wire_accounting``, ``Plan.slab_table``), this cost
-    model's scatter pricing and the global-view simulator all read it, so
-    schedule, accounting and simulation cannot drift (the ISSUE 5
-    sim/bench/plan drift).
-
-    Returns one entry per ``ceil(log2 n)`` tree round, largest span
-    first: ``(span, full_senders, trim)``.  Senders ``i`` in
-    ``full_senders`` ship a full ``span``-chunk slab to ``i + span``
-    (the receiver's whole virtual subtree ``[i+span, i+2*span)`` is real
-    ranks); ``trim`` is the at-most-one boundary exchange
-    ``(sender, receiver, slab)`` per round whose virtual subtree
-    straddles ``n`` — it ships only the ``slab = n - receiver`` real
-    chunks, dropping the virtual tree's zero-padding chunks from the
-    wire entirely.  Exchanges whose receiver is ``>= n`` do not appear.
-    On power-of-two axes every round is all-full (``trim is None``) and
-    the table reduces to the classic binomial schedule.
-    """
-    n = int(n)
-    steps = steps_for("binomial", n)
-    n_virt = 1 << steps
-    rounds = []
-    for k in reversed(range(steps)):
-        span = 1 << k
-        full, trim = [], None
-        for i in range(0, n_virt, 2 * span):
-            recv = i + span
-            if recv >= n:
-                continue
-            slab = min(n, recv + span) - recv
-            if slab == span:
-                full.append(i)
-            else:  # at most one straddling subtree per round
-                trim = (i, recv, slab)
-        rounds.append((span, tuple(full), trim))
-    return tuple(rounds)
+# The trimmed-slab binomial-tree combinatorics moved to core/schedule.py
+# (the Schedule IR is the one route authority since ISSUE 10); these
+# names stay importable here because the pricing models and a wide test
+# surface address the schedule through the cost model.
+binomial_slab_table = _schedule.binomial_slab_table
+scatter_root_chunk_streams = _schedule.scatter_root_chunk_streams
 
 
 def _root_slab_chunks(round_entry) -> tuple:
@@ -278,17 +245,6 @@ def _root_slab_chunks(round_entry) -> tuple:
     if 0 in full:
         return span, True
     return trim[2], False  # root's subtree straddles n: trimmed slab
-
-
-def scatter_root_chunk_streams(n: int) -> int:
-    """Chunk streams the scatter root ships under the trimmed-slab
-    schedule: the real ranks of its children's subtrees partition
-    ``1..n-1``, so this is exactly ``n - 1`` at ANY axis size (asserted
-    by ``comm.assert_step_count_consistency``) — versus the padded
-    virtual tree's ``2**ceil(log2 n) - 1``."""
-    return sum(
-        _root_slab_chunks(entry)[0] for entry in binomial_slab_table(n)
-    )
 
 
 def _util(size_bytes: float, hw: Hardware) -> float:

@@ -67,12 +67,22 @@ OVERFLOW_SIGMA = 1e6
 
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
-    """One deterministic fault: what, where, and from which seed."""
+    """One deterministic fault: what, where, and from which seed.
+
+    ``rounds`` (bitflip only) targets wire rounds BY SCHEDULE-TABLE
+    INDEX (``core/schedule.py`` — the same ``rounds[k]`` the execute
+    layer walks and the simulator replays): ``None`` corrupts every
+    received compressed payload on the target ranks (the historic
+    behaviour); ``(k, ...)`` corrupts only exchanges implementing those
+    table rounds, so an injected corruption lands on the bit-identical
+    wire hop in ``simulator.sim_allreduce_guarded`` and on a real mesh.
+    """
 
     kind: str
     ranks: tuple = (0,)
     seed: int = 0
     n: int = 1  # poisoned positions (nan/inf) or flipped bits (bitflip)
+    rounds: Optional[tuple] = None  # schedule-table round indices, or all
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -84,6 +94,19 @@ class FaultSpec:
         )
         if self.n < 1:
             raise ValueError(f"FaultSpec.n must be >= 1; got {self.n!r}")
+        if self.rounds is not None:
+            if self.kind != "bitflip":
+                raise ValueError(
+                    "FaultSpec.rounds targets wire rounds and only applies "
+                    f"to kind='bitflip'; got kind={self.kind!r}"
+                )
+            rr = tuple(int(k) for k in self.rounds)
+            if not rr or any(k < 0 for k in rr):
+                raise ValueError(
+                    f"FaultSpec.rounds must be non-empty, non-negative "
+                    f"schedule round indices; got {self.rounds!r}"
+                )
+            object.__setattr__(self, "rounds", rr)
 
 
 _ACTIVE: Optional[FaultSpec] = None
@@ -187,14 +210,21 @@ def maybe_poison_input(x, axis_name):
     return flat.at[idx].set(vals).reshape(x.shape)
 
 
-def maybe_corrupt_wire(tree, axis_name):
+def maybe_corrupt_wire(tree, axis_name, round_idx=None):
     """Wire-corruption hook, applied by ``collectives._ppermute_guarded``
     to every RECEIVED compressed payload.  Flips ``spec.n`` seeded bits
     of the first uint32 leaf (the packed stream) on the target ranks;
     identity for non-bitflip faults and for raw (non-uint32-first)
-    trees — the lossless fallback's f32 slabs never corrupt."""
+    trees — the lossless fallback's f32 slabs never corrupt.
+
+    ``round_idx`` is the schedule-table round this exchange implements
+    (a python int or a traced loop index).  A spec with ``rounds``
+    corrupts only matching rounds — exchanges that pass no index can
+    never match a round-targeted spec."""
     spec = _ACTIVE
     if spec is None or spec.kind != "bitflip":
+        return tree
+    if spec.rounds is not None and round_idx is None:
         return tree
     leaves, treedef = jax.tree.flatten(tree)
     if not leaves or leaves[0].dtype != jnp.uint32 or leaves[0].size == 0:
@@ -202,6 +232,14 @@ def maybe_corrupt_wire(tree, axis_name):
     leaf = leaves[0]
     rng = np.random.default_rng(spec.seed)
     on = _rank_mask(axis_name, spec.ranks)
+    if spec.rounds is not None:
+        # round_idx may be traced (ring fori_loop bodies) — gate with a
+        # jnp comparison, not python `in`.
+        ri = jnp.asarray(round_idx, jnp.int32)
+        hit = jnp.zeros((), jnp.bool_)
+        for k in spec.rounds:
+            hit = hit | (ri == jnp.int32(k))
+        on = on & hit
     flat = leaf.reshape(-1)
     for _ in range(spec.n):
         word = int(rng.integers(flat.shape[0]))

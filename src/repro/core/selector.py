@@ -1,88 +1,45 @@
-"""Algorithm auto-selection — the paper's design framework as a policy.
+"""DEPRECATED shim — algorithm selection lives in :mod:`repro.core.comm`.
 
-The paper's conclusion (§3.3.3): with GPU compression in the loop, the
-classic "ring for large messages" rule inverts once the per-chunk size
-D/N falls below the compressor's saturation point; recursive doubling's
-log2(N) *saturated* compressions then win despite moving more bytes.
+This module was the paper's §3.3.3 standalone selector.  ISSUE 10 made
+the communicator's policy registry the ONLY selection authority: the
+cost evaluators moved verbatim to ``comm.select_allreduce`` /
+``comm.select_allreduce_plan`` (where the ``auto``/``paper``/
+``throughput``/``accuracy`` policies call them), and this module merely
+re-exports them with a :class:`DeprecationWarning`.  Import from
+``repro.core.comm`` instead; this shim will be removed once nothing
+imports it.
 
-``select_allreduce`` evaluates the calibrated cost model for both
-algorithms at the actual (D, N) and picks the cheaper — reproducing the
-paper's crossover (ring wins at small N / huge D; ReDoub wins at scale).
-A conservative default compression ratio of 20x (paper Table 1 sees
-46-94x on RTM data) is used unless the caller passes a measured one.
+The re-exports are thin ``functools.wraps`` wrappers (not bare aliases)
+so every CALL warns too — a cached module import would otherwise warn
+only once per process.  tests/test_selector_shim.py pins that the shim's
+output is bitwise the policy registry's.
 """
 from __future__ import annotations
 
-from repro.core import cost_model as cm
+import functools
+import warnings
+
+from repro.core import comm as _comm
 
 __all__ = ["select_allreduce", "select_allreduce_plan"]
 
+_MSG = (
+    "repro.core.selector is deprecated: algorithm selection is owned by "
+    "the repro.core.comm policy registry — import "
+    "select_allreduce/select_allreduce_plan from repro.core.comm"
+)
 
-def select_allreduce(
-    d_bytes: int,
-    n_ranks: int,
-    ratio: float = 20.0,
-    hw: cm.Hardware = cm.TPU_V5E,
-    *,
-    allow_beyond_paper: bool = False,
-) -> str:
-    """Return 'ring' | 'redoub' (| 'intring' when beyond-paper allowed).
-
-    This is the PAPER's selector: both algorithms are costed under the
-    paper's two-kernel multi-stream-overlap models (no fused hop on
-    either side — `allreduce_ring_gz` has none, so redoub must not get
-    one either or the crossover is biased).  The production planner with
-    the fused-hop schedule is :func:`select_allreduce_plan`.
-    """
-    costs = {
-        "ring": cm.allreduce_ring_gz(d_bytes, n_ranks, ratio, hw),
-        "redoub": cm.allreduce_redoub_gz(
-            d_bytes, n_ranks, ratio, hw, fused_hop=False
-        ),
-    }
-    if allow_beyond_paper:
-        costs["intring"] = cm.allreduce_intring_gz(d_bytes, n_ranks, ratio, hw)
-    return min(costs, key=costs.get)
+warnings.warn(_MSG, DeprecationWarning, stacklevel=2)
 
 
-def select_allreduce_plan(
-    d_bytes: int,
-    n_ranks: int,
-    ratio: float = 20.0,
-    hw: cm.Hardware = cm.TPU_V5E,
-    *,
-    allow_beyond_paper: bool = False,
-    chunk_candidates=cm.PIPELINE_CHUNK_CANDIDATES,
-    fused_hop: bool = True,
-) -> tuple[str, int]:
-    """Pick (algo, pipeline_chunks) from the explicit per-chunk cost model.
+def _deprecated(fn):
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        warnings.warn(_MSG, DeprecationWarning, stacklevel=2)
+        return fn(*args, **kwargs)
 
-    Ring is costed under the chunked double-buffered schedule at its best
-    chunk count (DESIGN.md §4): above the compressor saturation size the
-    pipelined ring strictly dominates the sequential one, so the plan comes
-    back with chunks > 1; below it, per-piece overhead wins and the plan
-    degrades to the sequential schedule (chunks == 1).  ReDoub compresses
-    full messages — its overlap is already a single long chain, so it takes
-    no chunk knob (returned chunks apply to ring only).
+    return wrapper
 
-    ``fused_hop`` costs BOTH algorithms' hops as single-pass
-    ``t_hop_fused`` kernels (one ``cmp_overhead_us`` per hop instead of
-    two — the collectives run fused hops for ring and redoub alike), and
-    pushes the ring's best chunk count deeper.
-    """
-    ring_chunks = cm.best_pipeline_chunks(
-        d_bytes, n_ranks, ratio, hw, chunk_candidates, fused_hop=fused_hop
-    )
-    costs = {
-        ("ring", ring_chunks): cm.allreduce_ring_gz_chunked(
-            d_bytes, n_ranks, ratio, hw, ring_chunks, fused_hop=fused_hop
-        ),
-        ("redoub", 1): cm.allreduce_redoub_gz(
-            d_bytes, n_ranks, ratio, hw, fused_hop=fused_hop
-        ),
-    }
-    if allow_beyond_paper:
-        costs[("intring", 1)] = cm.allreduce_intring_gz(
-            d_bytes, n_ranks, ratio, hw
-        )
-    return min(costs, key=costs.get)
+
+select_allreduce = _deprecated(_comm.select_allreduce)
+select_allreduce_plan = _deprecated(_comm.select_allreduce_plan)

@@ -1,9 +1,15 @@
 """Global-view N-rank simulator of the gZCCL collective algorithms.
 
-Runs the *same* algorithm step structure as core/collectives.py — same
-number and order of compress/decompress operations, same ring/tree/XOR
-communication patterns — but over a python list of per-rank arrays on one
-device.  Used by tests to validate:
+ONE table replayer (ISSUE 10): every ``sim_*`` walks the SAME frozen
+route table the execute layer runs (``core/schedule.py`` —
+``Schedule.rounds[k]`` hop entries), via :func:`_replay_table`.  The
+per-op closures only say what a hop's payload *is* (a compressed
+roundtrip for "lossy"/"unfold" stages, the held bytes for "exact"
+forwards) and how a receiver folds it (the table's ``combine`` tag), so
+the sims cannot drift from the device schedules — same number and order
+of compress/decompress operations, same ring/tree/XOR patterns, over a
+python list of per-rank arrays on one device.  Used by tests to
+validate:
 
   * numerical results vs the exact (numpy) collective,
   * error accumulation vs the error_budget hop counts,
@@ -13,6 +19,10 @@ device.  Used by tests to validate:
 without needing a multi-device runtime.  The shard_map versions are
 additionally validated on 8 virtual host devices in
 tests/test_collectives_multidevice.py (subprocess).
+:func:`sim_wire_bytes` replays the table for BYTES instead of values —
+measuring each entry's payload with ``jax.eval_shape`` of the real
+compressor container — giving an accounting cross-check that shares no
+arithmetic with ``comm._wire_accounting``.
 """
 from __future__ import annotations
 
@@ -20,10 +30,13 @@ import math
 from typing import List
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core.collectives import GZConfig
-from repro.core import cost_model, error_budget, faults
+from repro.core.collectives import GZConfig, PIECE_QUANTUM
+from repro.core.compressed import capacity_words_for
+from repro.core import error_budget, faults, schedule
+from repro.kernels import ops
 
 __all__ = [
     "sim_allreduce_redoub",
@@ -36,6 +49,7 @@ __all__ = [
     "sim_reduce_scatter_ring",
     "sim_scatter_binomial",
     "sim_broadcast_binomial",
+    "sim_wire_bytes",
 ]
 
 
@@ -43,41 +57,64 @@ def _roundtrip(comp, x, eb):
     return np.asarray(comp.decompress(comp.compress(jnp.asarray(x), eb)))
 
 
+def _replay_table(sched: schedule.Schedule, snapshot_fn, payload_fn,
+                  deliver_fn):
+    """THE generic table replayer: walk ``sched.rounds`` in order.
+
+    Per round: take a pre-round snapshot (wire rounds are concurrent —
+    every payload is computed from state BEFORE the round applies), then
+    for each hop entry compute ``payload_fn(hop, k, snap)`` and apply
+    ``deliver_fn(hop, k, payload)``.  The closures carry the op's value
+    semantics; the routes, stages and combine tags come only from the
+    table.
+    """
+    for k, rnd in enumerate(sched.rounds):
+        snap = snapshot_fn()
+        for h in rnd:
+            deliver_fn(h, k, payload_fn(h, k, snap))
+
+
 def sim_allreduce_redoub(xs: List[np.ndarray], cfg: GZConfig):
     """Recursive doubling with the non-power-of-two remainder stage.
 
-    Mirrors collectives._allreduce_redoub exactly: the n - 2**floor(log2 n)
-    surplus ranks fold into their odd neighbour in a compressed pre-hop,
-    the XOR doubling runs over the power-of-two participants, and a
-    compressed post-hop unfolds the result back to the folded ranks —
-    same number and order of lossy events, so error_budget.lossy_hops
+    Replays ``schedule.build("allreduce", "redoub", n)`` — the identical
+    table ``collectives._allreduce_redoub`` walks: the fold pre-hop
+    round, the XOR doubling rounds, the unfold post-hop round.  A
+    "lossy"/"unfold" hop's payload is the compressed roundtrip of the
+    sender's pre-round accumulator — same number and order of lossy
+    events as the device path, so error_budget.lossy_hops
     ("allreduce_redoub") applies verbatim.
     """
     n = len(xs)
     comp = cfg.compressor()
     eb = error_budget.allocate(cfg.eb, "allreduce_redoub", n,
                                worst_case=cfg.worst_case_budget)
-    p = 1 << (n.bit_length() - 1)
-    rem = n - p
-    phys = lambda v: 2 * v + 1 if v < rem else v + rem
+    sched = schedule.build("allreduce", "redoub", n)
     acc = [x.astype(np.float32).copy() for x in xs]
-    for i in range(rem):  # fold pre-hop: even -> odd neighbour
-        acc[2 * i + 1] = acc[2 * i + 1] + _roundtrip(comp, acc[2 * i], eb)
-    virt = {phys(v): v for v in range(p)}  # physical -> virtual participant
-    for k in range(int(math.log2(p))):
-        dist = 1 << k
-        sent = {pr: _roundtrip(comp, acc[pr], eb) for pr in virt}
-        acc = [
-            acc[r] + sent[phys(virt[r] ^ dist)] if r in virt else acc[r]
-            for r in range(n)
-        ]
-    for i in range(rem):  # unfold post-hop: odd -> even neighbour
-        acc[2 * i] = _roundtrip(comp, acc[2 * i + 1], eb)
+
+    def payload(h, k, snap):
+        val = snap[h.sender]
+        if h.stage in ("lossy", "unfold"):
+            val = _roundtrip(comp, val, eb)
+        return val
+
+    def deliver(h, k, val):
+        if sched.combine[k] == "reduce":
+            acc[h.receiver] = acc[h.receiver] + val
+        else:  # unfold install
+            acc[h.receiver] = val.copy()
+
+    _replay_table(sched, lambda: [a.copy() for a in acc], payload, deliver)
     return acc
 
 
 def sim_allreduce_ring(xs: List[np.ndarray], cfg: GZConfig):
-    """Ring RS + ring AG with identical chunk schedule to collectives.py."""
+    """Ring RS + ring AG replaying ``schedule.build("allreduce", "ring",
+    n)`` — the identical chunk schedule collectives.py runs.  RS rounds
+    accumulate a fresh roundtrip of the sender's chunk; AG round 0
+    carries the owner's single compression (the owner installs the same
+    decompressed bytes locally), later AG rounds forward those bytes
+    exactly."""
     n = len(xs)
     comp = cfg.compressor()
     hops = error_budget.lossy_hops("allreduce_ring", n)
@@ -88,22 +125,29 @@ def sim_allreduce_ring(xs: List[np.ndarray], cfg: GZConfig):
     for r in range(n):
         acc[r][:d] = xs[r]
     ch = lambda a, i: a[i * chunk : (i + 1) * chunk]
-    # reduce-scatter: step s, rank r sends chunk (r-s)%n to r+1
-    for s in range(n - 1):
-        sends = [_roundtrip(comp, ch(acc[r], (r - s) % n), eb) for r in range(n)]
-        for r in range(n):
-            ch(acc[r], (r - s - 1) % n)[:] += sends[(r - 1) % n]
-    # allgather: owner (r+1)%n compresses once; forward compressed
-    cur = []
-    for r in range(n):
-        own = (r + 1) % n
-        rt = _roundtrip(comp, ch(acc[r], own), eb)
-        ch(acc[r], own)[:] = rt
-        cur.append(rt)  # stands for the compressed payload being forwarded
-    for s in range(n - 1):
-        cur = [cur[(r - 1) % n] for r in range(n)]
-        for r in range(n):
-            ch(acc[r], (r - s) % n)[:] = cur[r]
+    if n == 1:  # degenerate axis: the owner's AG compression still runs
+        return [_roundtrip(comp, acc[0], eb)[:d]]
+    sched = schedule.build("allreduce", "ring", n)
+
+    def payload(h, k, snap):
+        c = h.chunk_slab[0]
+        val = ch(snap[h.sender], c)
+        if h.stage == "lossy":
+            val = _roundtrip(comp, val, eb)
+            if sched.combine[k] == "install":
+                # AG round 0: the owner keeps the decompressed copy of
+                # its own chunk — every rank sees the same bytes.
+                ch(acc[h.sender], c)[:] = val
+        return val
+
+    def deliver(h, k, val):
+        c = h.chunk_slab[0]
+        if sched.combine[k] == "reduce":
+            ch(acc[h.receiver], c)[:] += val
+        else:
+            ch(acc[h.receiver], c)[:] = val
+
+    _replay_table(sched, lambda: [a.copy() for a in acc], payload, deliver)
     return [a[:d] for a in acc]
 
 
@@ -187,6 +231,16 @@ def sim_allreduce_guarded(xs: List[np.ndarray], cfg: GZConfig,
     compressed algorithm sim or the exact lossless recovery — the sum of
     sanitized (NaN/Inf → 0) inputs, identical on every rank.
 
+    Wire bitflips are replayed against the SAME schedule table the
+    device walks: a ``kind="bitflip"`` spec is detected iff
+    ``cfg.verify_streams`` ships checksums, some target rank exists on
+    the axis, and some targeted round index lands inside
+    ``schedule.build("allreduce", algo, n).rounds`` (``rounds=None``
+    targets every round).  Detection ORs into the ``overflow`` flag —
+    exactly how the device epilogue reports a checksum mismatch — and
+    recovery is the clean lossless sum (bitflips corrupt the wire, not
+    the inputs).
+
     Returns ``(outs, flags)`` with ``flags = {"overflow", "nonfinite",
     "fallback"}`` (python bools — the sim is the observable twin of the
     device health counters).  Recovery sums in f32 on one host, so
@@ -207,6 +261,15 @@ def sim_allreduce_guarded(xs: List[np.ndarray], cfg: GZConfig,
             if bool(np.asarray(c.overflowed())):
                 overflow = True
                 break
+    if (spec is not None and spec.kind == "bitflip" and cfg.verify_streams):
+        sched = schedule.build("allreduce", algo, n)
+        targeted = (spec.rounds if spec.rounds is not None
+                    else range(sched.n_rounds))
+        corrupted = (
+            any(0 <= r < n for r in spec.ranks)
+            and any(0 <= k < sched.n_rounds for k in targeted)
+        )
+        overflow = overflow or corrupted
     fallback = overflow or nonfinite
     if fallback:
         san = [np.where(np.isfinite(p), p, 0.0) for p in poisoned]
@@ -225,6 +288,9 @@ def sim_allreduce_guarded(xs: List[np.ndarray], cfg: GZConfig,
 
 
 def sim_reduce_scatter_ring(xs: List[np.ndarray], cfg: GZConfig):
+    """Standalone ring reduce-scatter replaying ``schedule.build(
+    "reduce_scatter", "ring", n)`` (owner convention: rank r ends
+    owning chunk r)."""
     n = len(xs)
     comp = cfg.compressor()
     eb = error_budget.allocate(cfg.eb, "reduce_scatter_ring", n,
@@ -234,18 +300,45 @@ def sim_reduce_scatter_ring(xs: List[np.ndarray], cfg: GZConfig):
     chunk = d // n
     acc = [x.astype(np.float32).copy() for x in xs]
     ch = lambda a, i: a[i * chunk : (i + 1) * chunk]
-    for s in range(n - 1):
-        sends = [_roundtrip(comp, ch(acc[r], (r - s - 1) % n), eb) for r in range(n)]
-        for r in range(n):
-            ch(acc[r], (r - s - 2) % n)[:] += sends[(r - 1) % n]
+    sched = schedule.build("reduce_scatter", "ring", n)
+
+    def payload(h, k, snap):
+        return _roundtrip(comp, ch(snap[h.sender], h.chunk_slab[0]), eb)
+
+    def deliver(h, k, val):
+        ch(acc[h.receiver], h.chunk_slab[0])[:] += val
+
+    _replay_table(sched, lambda: [a.copy() for a in acc], payload, deliver)
     return [ch(acc[r], r).copy() for r in range(n)]
 
 
 def sim_allgather_ring(xs: List[np.ndarray], cfg: GZConfig):
+    """Ring allgather replaying ``schedule.build("allgather", "ring",
+    n)``: round 0 carries each owner's single compression (one lossy hop
+    per element — the owner installs the decompressed copy too), later
+    rounds forward those bytes exactly."""
     n = len(xs)
     comp = cfg.compressor()
-    rts = [_roundtrip(comp, x, cfg.eb) for x in xs]  # single lossy hop each
-    return [np.concatenate(rts) for _ in range(n)]
+    if n == 1:
+        return [_roundtrip(comp, xs[0], cfg.eb)]
+    acc = [np.zeros((n,) + xs[0].shape, np.float32) for _ in range(n)]
+    for r in range(n):
+        acc[r][r] = xs[r].astype(np.float32)
+    sched = schedule.build("allgather", "ring", n)
+
+    def payload(h, k, snap):
+        c = h.chunk_slab[0]
+        val = snap[h.sender][c]
+        if h.stage == "lossy":  # round 0: the sender's own fresh stream
+            val = _roundtrip(comp, val, cfg.eb)
+            acc[h.sender][c] = val  # owner keeps the decompressed copy
+        return val
+
+    def deliver(h, k, val):
+        acc[h.receiver][h.chunk_slab[0]] = val
+
+    _replay_table(sched, lambda: [a.copy() for a in acc], payload, deliver)
+    return [np.concatenate(list(a), axis=0) for a in acc]
 
 
 def sim_scatter_binomial(x_full: np.ndarray, n: int, cfg: GZConfig,
@@ -254,8 +347,8 @@ def sim_scatter_binomial(x_full: np.ndarray, n: int, cfg: GZConfig,
 
     PR 4 grew the execute layer a virtual power-of-two tree while this sim
     kept modeling a bare per-chunk roundtrip with no schedule at all
-    (sim/plan drift — ISSUE 5).  Now it replays the exact trimmed-slab
-    schedule from ``cost_model.binomial_slab_table`` — the same authority
+    (sim/plan drift — ISSUE 5).  Now it replays the route table
+    ``schedule.build("scatter", "binomial", n)`` — the same authority
     ``collectives._execute_scatter`` walks and ``comm._wire_accounting``
     prices: the root compresses each chunk once, slabs of compressed
     streams (real-rank chunks only) travel sender -> receiver down the
@@ -279,19 +372,25 @@ def sim_scatter_binomial(x_full: np.ndarray, n: int, cfg: GZConfig,
     held = {r: set() for r in range(n)}
     held[0] = set(range(n))  # root holds every chunk stream
     trace = {}
-    for span, full, trim in cost_model.binomial_slab_table(n):
-        exchanges = [(i, i + span, span) for i in full]
-        if trim is not None:
-            exchanges.append(trim)
-        for snd, rcv, slab in exchanges:
-            idxs = range(rcv, rcv + slab)  # the receiver's real subtree
-            missing = [i for i in idxs if i not in held[snd]]
-            assert not missing, (
-                f"schedule invalid: sender {snd} ships chunks {missing} "
-                f"it does not hold (n={n}, span={span})")
-            assert rcv not in trace, f"rank {rcv} received twice (n={n})"
-            held[rcv].update(idxs)
-            trace[rcv] = (span, tuple(idxs))
+    sched = schedule.build("scatter", "binomial", n)
+    spans = [span for span, _, _ in schedule.binomial_slab_table(n)]
+
+    def payload(h, k, snap):
+        start, slab = h.chunk_slab
+        idxs = range(start, start + slab)  # the receiver's real subtree
+        missing = [i for i in idxs if i not in snap[h.sender]]
+        assert not missing, (
+            f"schedule invalid: sender {h.sender} ships chunks {missing} "
+            f"it does not hold (n={n}, span={spans[k]})")
+        return idxs
+
+    def deliver(h, k, idxs):
+        assert h.receiver not in trace, f"rank {h.receiver} received twice (n={n})"
+        held[h.receiver].update(idxs)
+        trace[h.receiver] = (spans[k], tuple(idxs))
+
+    _replay_table(sched, lambda: {r: s.copy() for r, s in held.items()},
+                  payload, deliver)
     for r in range(n):
         assert r in held[r], f"rank {r} never received its chunk (n={n})"
     outs = [np.asarray(comp.decompress(streams[r])) for r in range(n)]
@@ -299,9 +398,121 @@ def sim_scatter_binomial(x_full: np.ndarray, n: int, cfg: GZConfig,
 
 
 def sim_broadcast_binomial(x: np.ndarray, n: int, cfg: GZConfig):
+    """Binomial broadcast replaying ``schedule.build("broadcast",
+    "binomial", n)``: the root's single compressed stream travels down
+    the table's tree rounds (forwards are bit-exact, so every rank ends
+    with the same roundtripped bytes — asserted by coverage replay)."""
     comp = cfg.compressor()
     rt = _roundtrip(comp, x, cfg.eb)
+    sched = schedule.build("broadcast", "binomial", n)
+    has = {0}
+
+    def payload(h, k, snap):
+        assert h.sender in snap, (
+            f"round {k}: sender {h.sender} forwards a stream it never "
+            f"received (n={n})")
+        return rt
+
+    def deliver(h, k, val):
+        has.add(h.receiver)
+
+    _replay_table(sched, lambda: set(has), payload, deliver)
+    assert has == set(range(n)), f"broadcast coverage {sorted(has)} != {n}"
     return [rt.copy() for _ in range(n)]
+
+
+def _measured_entry_bytes(plan):
+    """Per-:class:`schedule.Hop` wire-bytes closure for one flat plan.
+
+    The container size of a compressed hop is MEASURED, not computed:
+    ``jax.eval_shape`` of the plan's real compressor (the exact factory
+    the execute layer ships through) gives the abstract ``Compressed``
+    pytree, and the hop costs the sum of its leaves' nbytes.  Only the
+    execute layer's payload geometry (pipelined rings pad chunks to
+    whole-tile pieces; intring pads to whole code rows) is restated here
+    — none of ``comm._stream_bytes``'s container arithmetic is.
+    """
+    op, algo, n = plan.op, plan.algo, plan.axis_size
+    n_elems = plan.n_elems
+    p = max(plan.pipeline_chunks, 1)
+    comp = plan.as_config().compressor()
+
+    def stream_nbytes(m):
+        out = jax.eval_shape(
+            lambda x: comp.compress(x, plan.eb),
+            jax.ShapeDtypeStruct((int(m),), jnp.float32))
+        return sum(int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+                   for leaf in jax.tree.leaves(out))
+
+    if (op == "allreduce" and algo == "redoub") or op == "broadcast":
+        per = stream_nbytes(n_elems)
+        return lambda h: per
+    if op == "allreduce" and algo == "intring":
+        # integer wire: packed codes + per-row bitwidth + anchor (no
+        # float container to eval_shape — the int pack has no factory)
+        chunk = ops.n_blocks_for(-(-n_elems // n)) * ops.BLOCK
+        cap = capacity_words_for(chunk, plan.capacity_factor, ops.BLOCK)
+        rows = chunk // ops.BLOCK
+        per = cap * 4 + rows * 4 + rows * 4
+        return lambda h: per
+    if op == "allreduce":  # float ring
+        if p > 1:
+            quantum = n * p * PIECE_QUANTUM
+            piece = (-(-n_elems // quantum) * quantum) // (n * p)
+        else:
+            piece = -(-n_elems // n)
+        per = p * stream_nbytes(piece)
+        return lambda h: per
+    if op in ("reduce_scatter", "allgather"):
+        base = -(-n_elems // n) if op == "reduce_scatter" else n_elems
+        if p > 1:
+            quantum = p * PIECE_QUANTUM
+            piece = (-(-base // quantum) * quantum) // p
+        else:
+            piece = base
+        per = p * stream_nbytes(piece)
+        return lambda h: per
+    if op == "scatter":
+        per = stream_nbytes(-(-n_elems // n))
+        return lambda h: h.chunk_slab[1] * per
+    if op == "all_to_all":
+        per = stream_nbytes(-(-n_elems // n))
+        return lambda h: per
+    raise ValueError(f"unknown op {op!r}")
+
+
+def sim_wire_bytes(plan) -> int:
+    """Replay ``plan.route_table`` for BYTES: the busiest sender's total
+    over the same per-round hop entries the execute layer walks, each
+    hop measured via :func:`_measured_entry_bytes`.  Must agree EXACTLY
+    with the plan's provisioned ``wire_bytes`` (``comm._wire_accounting``
+    sums the same table with independently-derived container arithmetic)
+    — `benchmarks/regression_check.py` makes any disagreement fatal.
+
+    Accepts flat :class:`comm.Plan` and two-level :class:`comm.HierPlan`
+    (flat-resolved hier delegates to its flat plan; true hier prices raw
+    intra hops at shard f32 bytes and lifted inter hops via the inter
+    sub-plan).  A degenerate axis (``route_table is None``) has no wire
+    rounds — the plan's own provisioning is returned unchanged.
+    """
+    sched = getattr(plan, "route_table", None)
+    if sched is None:
+        return plan.wire_bytes
+    if hasattr(plan, "topology"):  # HierPlan
+        if plan.flat:
+            return sim_wire_bytes(plan.flat_plan)
+        shard = -(-plan.n_elems // plan.topology[1])
+        inter_entry = (_measured_entry_bytes(plan.inter)
+                       if plan.inter is not None else None)
+        entry = lambda h: (shard * 4 if h.payload_kind == "raw"
+                           else inter_entry(h))
+    else:
+        entry = _measured_entry_bytes(plan)
+    send = [0] * sched.n
+    for rnd in sched.rounds:
+        for h in rnd:
+            send[h.sender] += entry(h)
+    return max(send)
 
 
 def sim_allreduce_bucketed(rank_leaves, bucket_bytes: int, cfg: GZConfig,

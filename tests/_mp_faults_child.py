@@ -280,6 +280,31 @@ assert np.array_equal(v, psum_ref(xs, N)), \
     "bitflip fallback not bitwise the clean psum"
 print("OK bitflip_detected_and_recovered")
 
+# --- round-targeted bitflips (ISSUE 10): a FaultSpec aimed at schedule
+# round k corrupts the bit-identical wire hop in the table replay and on
+# the real mesh — the detection bit of sim_allreduce_guarded must equal
+# the device's, both for rounds inside the table and for rounds past its
+# end (which can never match an exchange). ---
+from repro.core import schedule, simulator
+
+cfg_rt = GZConfig(eb=1e-3, capacity_factor=0.6, algo="redoub",
+                  verify_streams=True, on_overflow="fallback")
+sched_rt = schedule.build("allreduce", "redoub", N)
+for rounds in ((1,), (0, sched_rt.n_rounds - 1), (sched_rt.n_rounds + 7,)):
+    spec = faults.FaultSpec(kind="bitflip", ranks=(1,), seed=corrupting_seed,
+                            n=16, rounds=rounds)
+    with faults.inject(spec):
+        v, o, nf = run_allreduce(xs, N, cfg_rt)
+    dev_bit = bool(np.asarray(o).any())
+    _, fl = simulator.sim_allreduce_guarded(list(xs), cfg_rt, algo="redoub",
+                                            spec=spec)
+    assert dev_bit == fl["overflow"] == fl["fallback"], \
+        f"rounds={rounds}: device detection {dev_bit} != sim flags {fl}"
+    if dev_bit:
+        assert np.array_equal(v, psum_ref(xs, N)), \
+            f"rounds={rounds}: detected but not losslessly recovered"
+    print(f"OK bitflip_round_targeted rounds={rounds} detected={dev_bit}")
+
 # --- health counters (outside-trace observability) ---
 comm.clear_plan_cache()
 comm.clear_health_stats()

@@ -1,0 +1,131 @@
+"""Schedule IR conservation + single-authority checks (ISSUE 10).
+
+Deterministic, exhaustive mirror of tests/test_schedule_property.py: the
+route tables are tiny pure-python artifacts, so every op × algo × N in
+2..13 is enumerated outright (the hypothesis file samples the same space
+plus randomized plan knobs and runs only when hypothesis is installed).
+
+What a table must satisfy (schedule.validate encodes the structural
+part; the pricing and error pins close the loop to the plan layer):
+
+  * conservation — reduce ops deliver every chunk's full sum, movement
+    ops deliver every chunk to its destination exactly once;
+  * binomial trim — at most ONE trimmed (partial-slab) entry per round;
+  * redoub remainder — fold/unfold rounds appear iff N is non-pow2;
+  * pricing — the busiest sender's summed per-entry payload equals
+    ``Plan.wire_bytes`` bit-for-bit (simulator.sim_wire_bytes measures
+    entries with jax.eval_shape of the real compressor; the plan prices
+    the same table through independent container arithmetic);
+  * error — ``lossy_hop_count`` (abstract replay of the table) equals
+    ``error_budget.lossy_hops``'s contract for every algo key.
+"""
+import numpy as np
+import pytest
+
+from repro.core import error_budget, schedule, simulator
+from repro.core.collectives import GZConfig
+from repro.core.comm import GZCommunicator
+
+NS = range(2, 14)
+
+FLAT_BUILDS = [("allreduce", a) for a in ("ring", "redoub", "intring")] + [
+    ("reduce_scatter", "ring"),
+    ("allgather", "ring"),
+    ("scatter", "binomial"),
+    ("broadcast", "binomial"),
+    ("all_to_all", "direct"),
+]
+
+
+@pytest.mark.parametrize("op,algo", FLAT_BUILDS)
+@pytest.mark.parametrize("n", NS)
+def test_conservation_all_builders(op, algo, n):
+    sched = schedule.build(op, algo, n)
+    schedule.validate(sched)  # raises with a diagnostic on any violation
+    assert sched.op == op and sched.n == n
+    assert len(sched.combine) == sched.n_rounds
+
+
+@pytest.mark.parametrize("n", NS)
+def test_binomial_at_most_one_trim_per_round(n):
+    sched = schedule.build("scatter", "binomial", n)
+    chunk_counts = {}
+    for rnd in sched.rounds:
+        slabs = sorted(h.chunk_slab[1] for h in rnd)
+        # full slabs share one span length; at most one shorter (trimmed)
+        assert len([s for s in slabs if s != max(slabs)]) <= 1, (n, slabs)
+        for h in rnd:
+            for c in range(h.chunk_slab[0],
+                           h.chunk_slab[0] + h.chunk_slab[1]):
+                chunk_counts[c] = chunk_counts.get(c, 0) + 1
+    # every non-root chunk shipped at least once, nothing out of range
+    assert set(chunk_counts) <= set(range(n))
+
+
+@pytest.mark.parametrize("n", NS)
+def test_redoub_fold_unfold_iff_nonpow2(n):
+    sched = schedule.build("allreduce", "redoub", n)
+    stages = [h.stage for rnd in sched.rounds for h in rnd]
+    pow2 = n & (n - 1) == 0
+    assert ("unfold" in stages) == (not pow2), (n, stages)
+    if not pow2:
+        # fold is the FIRST round (lossy reduce into even peers), unfold
+        # the LAST (install back to the odd peers)
+        assert sched.combine[0] == "reduce"
+        assert sched.combine[-1] == "install"
+        assert all(h.stage == "unfold" for h in sched.rounds[-1])
+
+
+@pytest.mark.parametrize("op,algo", FLAT_BUILDS)
+@pytest.mark.parametrize("n", [2, 3, 6, 8, 9, 13])
+def test_payload_sum_equals_plan_wire_bytes(op, algo, n):
+    """Single authority: replaying the table for bytes reproduces the
+    plan's provisioned wire_bytes EXACTLY (not approximately)."""
+    cfg = GZConfig(eb=1e-3, algo=algo if op == "allreduce" else "auto")
+    c = GZCommunicator("i", axis_size=n, config=cfg)
+    plan = c.plan(op, (5000,), "float32")
+    assert plan.route_table == schedule.build(op, plan.algo, n)
+    assert simulator.sim_wire_bytes(plan) == plan.wire_bytes
+
+
+@pytest.mark.parametrize("n", NS)
+@pytest.mark.parametrize("algo_key", [
+    "allreduce_redoub", "allreduce_ring", "allreduce_intring",
+    "reduce_scatter_ring", "allgather_ring", "scatter_binomial",
+    "broadcast_binomial",
+])
+def test_lossy_hops_from_table_replay(algo_key, n):
+    """error_budget.lossy_hops == the table's abstract error replay."""
+    assert error_budget.lossy_hops(algo_key, n) == \
+        schedule.lossy_hops_for(algo_key, n)
+
+
+def test_perm_is_the_ppermute_authority():
+    """Schedule.perm(k) produces exactly the (src, dst) pairs of round k
+    — the single source collectives' lax.ppermute calls draw from."""
+    sched = schedule.build("allreduce", "ring", 5)
+    for k, rnd in enumerate(sched.rounds):
+        assert sched.perm(k) == tuple((h.sender, h.receiver) for h in rnd)
+    assert schedule.ring_perm(5) == tuple(
+        (i, (i + 1) % 5) for i in range(5))
+
+
+def test_hier_table_stages():
+    """build_hier: raw exact intra rounds sandwich the lifted compressed
+    inter rounds; pricing sees uniform per-round payload kinds."""
+    sched = schedule.build_hier(3, 2, "redoub")
+    assert sched.n == 6
+    kinds = [{h.payload_kind for h in rnd} for rnd in sched.rounds]
+    assert kinds[0] == {"raw"} and kinds[-1] == {"raw"}
+    assert any("compressed" in ks for ks in kinds[1:-1])
+    # NOTE: validate() applies to FLAT tables only — build_hier's lifted
+    # inter rounds keep the inter schedule's own chunk space over the
+    # shard (the documented asymmetry), so conservation is checked per
+    # stage by the flat builders it composes.
+
+
+def test_build_rejects_unknown():
+    with pytest.raises(ValueError):
+        schedule.build("allreduce", "nope", 4)
+    with pytest.raises(ValueError):
+        schedule.build("nope", "ring", 4)

@@ -1,0 +1,63 @@
+"""Hypothesis conservation property over the Schedule IR (ISSUE 10).
+
+Samples (op, algo) × N ∈ 2..13 plus randomized plan knobs (payload
+elems, pipeline depth) and asserts the table invariants the
+deterministic mirror in tests/test_schedule.py enumerates exhaustively:
+every chunk delivered exactly once (``schedule.validate``), per-round
+payload sum equals ``Plan.wire_bytes`` exactly, ≤1 trimmed entry per
+binomial round, and the redoub fold/unfold remainder appears iff N is
+non-pow2.
+
+Kept in its own module because ``pytest.importorskip`` at module scope
+skips the whole file when hypothesis isn't installed — the mirrors in
+tests/test_schedule.py run regardless.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install -e .[dev])"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import schedule, simulator  # noqa: E402
+from repro.core.collectives import GZConfig  # noqa: E402
+from repro.core.comm import GZCommunicator  # noqa: E402
+
+BUILDS = st.sampled_from([
+    ("allreduce", "ring"), ("allreduce", "redoub"),
+    ("allreduce", "intring"), ("reduce_scatter", "ring"),
+    ("allgather", "ring"), ("scatter", "binomial"),
+    ("broadcast", "binomial"), ("all_to_all", "direct"),
+])
+NS = st.integers(2, 13)
+
+
+@settings(max_examples=120, deadline=None)
+@given(build=BUILDS, n=NS)
+def test_property_conservation(build, n):
+    op, algo = build
+    sched = schedule.build(op, algo, n)
+    schedule.validate(sched)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=NS)
+def test_property_binomial_trim_and_redoub_remainder(n):
+    for rnd in schedule.build("scatter", "binomial", n).rounds:
+        slabs = [h.chunk_slab[1] for h in rnd]
+        assert len([s for s in slabs if s != max(slabs)]) <= 1, (n, slabs)
+    stages = [h.stage for rnd in schedule.build("allreduce", "redoub", n).rounds
+              for h in rnd]
+    assert ("unfold" in stages) == bool(n & (n - 1)), (n, stages)
+
+
+@settings(max_examples=40, deadline=None)
+@given(build=BUILDS, n=st.sampled_from([2, 3, 6, 8, 9, 13]),
+       elems=st.integers(256, 9000), chunks=st.sampled_from([0, 1, 2, 4]))
+def test_property_payload_sum_is_wire_bytes(build, n, elems, chunks):
+    op, algo = build
+    cfg = GZConfig(eb=1e-3, algo=algo if op == "allreduce" else "auto",
+                   pipeline_chunks=chunks)
+    plan = GZCommunicator("i", axis_size=n, config=cfg).plan(
+        op, (elems,), "float32")
+    assert simulator.sim_wire_bytes(plan) == plan.wire_bytes

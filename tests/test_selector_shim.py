@@ -1,0 +1,64 @@
+"""The retired core/selector.py shim (ISSUE 10 satellite): selection is
+owned by comm's policy registry; the legacy module must warn and must
+return bitwise the registry's own evaluators' output."""
+import warnings
+
+import pytest
+
+from repro.core import comm, cost_model
+
+
+def test_shim_warns_on_call():
+    import repro.core.selector as selector
+
+    with pytest.warns(DeprecationWarning, match="policy registry"):
+        selector.select_allreduce(1 << 20, 8)
+    with pytest.warns(DeprecationWarning, match="policy registry"):
+        selector.select_allreduce_plan(1 << 20, 8)
+
+
+def test_shim_output_pins_policy_output():
+    import repro.core.selector as selector
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for d_bytes in (1 << 14, 1 << 20, 1 << 26):
+            for n in (2, 4, 8, 16, 33):
+                assert selector.select_allreduce(d_bytes, n) == \
+                    comm.select_allreduce(d_bytes, n)
+                assert selector.select_allreduce_plan(d_bytes, n) == \
+                    comm.select_allreduce_plan(d_bytes, n)
+                assert selector.select_allreduce(
+                    d_bytes, n, allow_beyond_paper=True
+                ) == comm.select_allreduce(d_bytes, n, allow_beyond_paper=True)
+
+
+def test_shim_matches_paper_policy_through_plan():
+    """The 'paper' policy resolves plans via the same evaluator the shim
+    re-exports: a paper-policy plan's algo must equal the shim's pick."""
+    import repro.core.selector as selector
+
+    for d_elems in (4096, 1 << 18):
+        c = comm.GZCommunicator("i", axis_size=8, policy="paper")
+        plan = c.plan("allreduce", (d_elems,), "float32")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            want = selector.select_allreduce(
+                d_elems * 4, 8, ratio=c.ratio, hw=c.hw)
+        assert plan.algo == want
+
+
+def test_shim_signature_defaults_unchanged():
+    """The shim forwards verbatim: same defaults, same keyword surface
+    (functools.wraps preserves the comm evaluators' signatures)."""
+    import inspect
+
+    import repro.core.selector as selector
+
+    assert inspect.signature(selector.select_allreduce) == \
+        inspect.signature(comm.select_allreduce)
+    assert inspect.signature(selector.select_allreduce_plan) == \
+        inspect.signature(comm.select_allreduce_plan)
+    sig = inspect.signature(selector.select_allreduce)
+    assert sig.parameters["ratio"].default == 20.0
+    assert sig.parameters["hw"].default is cost_model.TPU_V5E
